@@ -1,0 +1,52 @@
+"""Fig 8: PD-disaggregated serving — P1+D1 / P2+D2 / Base+Base NPU pairs
+vs 4x A100 / 4x H100 (GPUs modeled analytically; DESIGN.md 8.3) on the
+OSWorld trace."""
+
+from repro.configs.paper_models import LLAMA33_70B
+from repro.core import baseline_npu, d1_npu, d2_npu, p1_npu, p2_npu
+from repro.core.disagg import evaluate_disaggregated
+from repro.core.gpu import A100, H100, evaluate_gpu
+from repro.core.quant.formats import FP16_CONFIG, QuantConfig
+from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
+
+from .common import row, timed
+
+
+def run() -> list:
+    out = []
+    trace = OSWORLD_LIBREOFFICE
+    pairs = {
+        "base+base": (baseline_npu(), baseline_npu()),
+        "p1+d1": (p1_npu(), d1_npu()),
+        "p2+d2": (p2_npu(), d2_npu()),
+    }
+    results = {}
+    for name, (p, d) in pairs.items():
+        r, us = timed(evaluate_disaggregated, p, d, LLAMA33_70B, trace)
+        results[name] = r
+        out.append(row(
+            f"fig8_{name}", us,
+            f"TTFT={r.ttft_s:.1f}s TPSagg={r.decode_tps_aggregate:.1f} "
+            f"TPSreq={r.decode_tps_per_request:.2f} "
+            f"P={r.total_power_w:.0f}W tokJ={r.tokens_per_joule:.3f}"))
+    for spec in (A100, H100):
+        pre, us1 = timed(evaluate_gpu, spec, LLAMA33_70B, trace,
+                         Phase.PREFILL, FP16_CONFIG, 4)
+        dec, us2 = timed(evaluate_gpu, spec, LLAMA33_70B, trace,
+                         Phase.DECODE, FP16_CONFIG, 4)
+        e_tok = (pre.avg_power_w * pre.latency_s / pre.batch
+                 / trace.gen_tokens + dec.energy_per_token_j)
+        out.append(row(
+            f"fig8_4x{spec.name.split('-')[0].lower()}", us1 + us2,
+            f"TTFT={pre.latency_s/pre.batch:.1f}s "
+            f"TPSagg={dec.throughput_tps:.1f} "
+            f"P={pre.avg_power_w + dec.avg_power_w:.0f}W "
+            f"tokJ={1.0/e_tok:.3f}"))
+    # headline claims: energy-efficiency ratios vs Base and vs H100
+    p1d1 = results["p1+d1"]
+    base = results["base+base"]
+    out.append(row(
+        "fig8_claims", 0.0,
+        f"p1d1_vs_base_tokJ={p1d1.tokens_per_joule/base.tokens_per_joule:.2f}x"
+        f" (paper prefill 2.3x / decode 1.93x class)"))
+    return out

@@ -1,0 +1,30 @@
+"""Fig 9: extreme heterogeneity — per-layer-group (Attention vs FFN)
+prefill profiles and early/late decode-phase splits for the P1 and D1
+devices."""
+
+from repro.configs.paper_models import LLAMA33_70B
+from repro.core import d1_npu, p1_npu
+from repro.core.disagg import decode_phase_profile, prefill_layer_group_profile
+from repro.core.workload import OSWORLD_LIBREOFFICE
+
+from .common import row, timed
+
+
+def run() -> list:
+    out = []
+    for npu in (p1_npu(), d1_npu()):
+        prof, us = timed(prefill_layer_group_profile, npu, LLAMA33_70B,
+                         OSWORLD_LIBREOFFICE)
+        out.append(row(
+            f"fig9_prefill_groups_{npu.name.lower()}", us,
+            f"attn={prof.attn_seconds*1e3:.1f}ms({prof.attn_bottleneck}) "
+            f"ffn={prof.ffn_seconds*1e3:.1f}ms({prof.ffn_bottleneck})"))
+    for npu in (p1_npu(), d1_npu()):
+        prof, us = timed(decode_phase_profile, npu, LLAMA33_70B,
+                         OSWORLD_LIBREOFFICE, 8)
+        out.append(row(
+            f"fig9_decode_phases_{npu.name.lower()}", us,
+            f"early={prof.early_step_s*1e3:.1f}ms "
+            f"late={prof.late_step_s*1e3:.1f}ms "
+            f"({prof.early_bottleneck}->{prof.late_bottleneck})"))
+    return out

@@ -1,0 +1,51 @@
+"""Table 5: memory-hierarchy ablation with software fixed to the P1
+strategy (decode on OSWorld).  Paper: 3D-SRAM x3 lifts token/J 2.62x;
+adding LPDDR capacity (H2) reaches 3.06x (batch 8); HBF capacity (H3)
+trades power for batch 32 at 1.55x."""
+
+import dataclasses
+
+from repro.configs.paper_models import LLAMA33_70B
+from repro.core import Dataflow, make_hierarchy
+from repro.core.dataflow import (BandwidthPriority, SoftwareStrategy,
+                                 StoragePriority)
+from repro.core.npu import NPUConfig, baseline_npu
+from repro.core.perfmodel import evaluate_decode
+from repro.core.workload import OSWORLD_LIBREOFFICE
+
+from .common import row, timed
+
+HIERARCHIES = {
+    "base": [("SRAM", 1), ("HBM3E", 4)],
+    "h1": [("3D-SRAM", 3), ("HBM3E", 4)],
+    "h2": [("3D-SRAM", 3), ("HBM3E", 4), ("LPDDR5X", 8)],
+    "h3": [("3D-SRAM", 3), ("HBM3E", 4), ("HBF", 2), ("LPDDR5X", 8)],
+}
+PAPER = {"base": (300.09, 1, 1.00), "h1": (364.74, 1, 2.62),
+         "h2": (386.12, 8, 3.06), "h3": (718.96, 32, 1.55)}
+
+
+def run() -> list:
+    strat = SoftwareStrategy(Dataflow.WEIGHT_STATIONARY,
+                             StoragePriority.ACTIVATION,
+                             BandwidthPriority.MATRIX)
+    base_cfg = baseline_npu()
+    out = []
+    results = {}
+    for name, spec in HIERARCHIES.items():
+        npu = NPUConfig(name=name, compute=base_cfg.compute,
+                        hierarchy=make_hierarchy(spec), strategy=strat,
+                        quant=base_cfg.quant)
+        r, us = timed(evaluate_decode, npu, LLAMA33_70B,
+                      OSWORLD_LIBREOFFICE)
+        results[name] = (npu, r, us)
+    base_tj = results["base"][1].tokens_per_joule
+    for name, (npu, r, us) in results.items():
+        pw, pb, ptj = PAPER[name]
+        out.append(row(
+            f"t5_{name}_{npu.hierarchy.describe().replace(' | ', '+')}",
+            us,
+            f"power={r.avg_power_w:.0f}W batch={r.batch} "
+            f"tokJ_rel={r.tokens_per_joule/base_tj:.2f}x "
+            f"paper=({pw:.0f}W b{pb} {ptj:.2f}x)"))
+    return out

@@ -1,0 +1,40 @@
+"""Table 6 / Fig 7: Pareto-frontier search under the 700 W TDP budget,
+separate prefill and decode DSE on the OSWorld trace (LLaMA-3.3-70B),
+8/8/8 quantization fixed per Table 3."""
+
+import numpy as np
+
+from repro.configs.paper_models import LLAMA33_70B
+from repro.core.dse import Objective, run_mobo
+from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
+
+from .common import row, timed
+
+N_TOTAL = 60
+
+
+def run() -> list:
+    out = []
+    for phase in (Phase.PREFILL, Phase.DECODE):
+        obj = Objective(LLAMA33_70B, OSWORLD_LIBREOFFICE, phase,
+                        tdp_limit_w=700.0)
+        res, us = timed(run_mobo, obj, n_total=N_TOTAL, seed=0)
+        pareto = res.pareto()
+        # Fig 7 selection rule: max token/J on the frontier under 700 W
+        best = None
+        for o in pareto:
+            tps, negp = o.f
+            tj = tps / max(1.0, -negp)
+            if best is None or tj > best[0]:
+                best = (tj, o)
+        n_feas = sum(o.f is not None for o in res.observations)
+        if best is None:
+            out.append(row(f"t6_{phase.value}", us, "no feasible design"))
+            continue
+        _, o = best
+        out.append(row(
+            f"t6_{phase.value}_best", us / N_TOTAL,
+            f"evals={N_TOTAL} feasible={n_feas} pareto={len(pareto)} "
+            f"TPS={o.f[0]:.1f} P={-o.f[1]:.0f}W "
+            f"cfg=[{o.npu.describe().replace(',', ';')}]"))
+    return out

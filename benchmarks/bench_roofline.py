@@ -1,0 +1,56 @@
+"""Roofline summary from the dry-run sweep (results/dryrun_scan.jsonl):
+per-(arch x shape x mesh) terms on TPU v5e constants."""
+
+import json
+import os
+
+from .common import row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_scan.jsonl")
+
+
+def load_rows(path: str = RESULTS) -> list:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            out.append(json.loads(line))
+    return out
+
+
+def run() -> list:
+    rows = load_rows()
+    if not rows:
+        return [row("roofline_missing", 0.0,
+                    "run: python -m repro.launch.dryrun --all "
+                    "--both-meshes --scan --out results/dryrun_scan.jsonl")]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    out = [row("roofline_cells", 0.0,
+               f"ok={len(ok)} skip={sum(r['status'] == 'skip' for r in rows)}"
+               f" err={sum(r['status'] == 'error' for r in rows)}")]
+    # aggregate stats per shape
+    for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        cells = [r for r in ok if r["shape"] == shape
+                 and r["mesh"] == "16x16"]
+        if not cells:
+            continue
+        worst = min(cells, key=lambda r: r["roofline_fraction"])
+        best = max(cells, key=lambda r: r["roofline_fraction"])
+        bnecks = {}
+        for r in cells:
+            bnecks[r["bottleneck"]] = bnecks.get(r["bottleneck"], 0) + 1
+        out.append(row(
+            f"roofline_{shape}", 0.0,
+            f"n={len(cells)} best={best['arch']}:"
+            f"{best['roofline_fraction']:.3f} "
+            f"worst={worst['arch']}:{worst['roofline_fraction']:.4f} "
+            f"bottlenecks={bnecks}"))
+    # most collective-bound cell
+    coll = max(ok, key=lambda r: r.get("collective_s", 0.0))
+    out.append(row(
+        "roofline_most_collective", 0.0,
+        f"{coll['arch']}x{coll['shape']}@{coll['mesh']} "
+        f"coll_s={coll['collective_s']:.3e}"))
+    return out

@@ -1,0 +1,50 @@
+"""Table 4: software-strategy ablation on the P1 hardware, batch 1
+(OSWorld trace).  Paper: WS + Act storage + weight-favoring BW = 2.31x
+token/J over the OS/Equal/Equal baseline; IS + Act-favoring BW = 0.59x."""
+
+import dataclasses
+
+from repro.configs.paper_models import LLAMA33_70B
+from repro.core import Dataflow, p1_npu
+from repro.core.dataflow import (BandwidthPriority, SoftwareStrategy,
+                                 StoragePriority)
+from repro.core.perfmodel import evaluate_prefill
+from repro.core.workload import OSWORLD_LIBREOFFICE
+
+from .common import row, timed
+
+STRATEGIES = {
+    "base": SoftwareStrategy(Dataflow.OUTPUT_STATIONARY,
+                             StoragePriority.EQUAL, BandwidthPriority.EQUAL),
+    "s1": SoftwareStrategy(Dataflow.OUTPUT_STATIONARY,
+                           StoragePriority.EQUAL, BandwidthPriority.MATRIX),
+    "s2": SoftwareStrategy(Dataflow.OUTPUT_STATIONARY,
+                           StoragePriority.ACTIVATION,
+                           BandwidthPriority.MATRIX),
+    "s3": SoftwareStrategy(Dataflow.WEIGHT_STATIONARY,
+                           StoragePriority.ACTIVATION,
+                           BandwidthPriority.MATRIX),
+    "s4": SoftwareStrategy(Dataflow.INPUT_STATIONARY,
+                           StoragePriority.WEIGHT,
+                           BandwidthPriority.VECTOR),
+}
+
+PAPER = {"base": 1.00, "s1": 1.32, "s2": 1.41, "s3": 2.31, "s4": 0.59}
+
+
+def run() -> list:
+    out = []
+    results = {}
+    for name, strat in STRATEGIES.items():
+        npu = dataclasses.replace(p1_npu(), name=name, strategy=strat)
+        r, us = timed(evaluate_prefill, npu, LLAMA33_70B,
+                      OSWORLD_LIBREOFFICE, batch=1)
+        results[name] = (r, us)
+    base_tj = results["base"][0].tokens_per_joule
+    for name, (r, us) in results.items():
+        out.append(row(
+            f"t4_{name}_{STRATEGIES[name].describe().replace('/', '-')}",
+            us,
+            f"tokJ={r.tokens_per_joule:.2f} rel={r.tokens_per_joule/base_tj:.2f}x "
+            f"paper={PAPER[name]:.2f}x bneck={r.bottleneck}"))
+    return out

@@ -1,0 +1,23 @@
+"""Shared helpers for the per-table benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeat: int = 1, **kwargs):
+    """(result, microseconds per call)."""
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6
+
+
+def row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"
+
+
+def fmt(x: float, nd: int = 2) -> str:
+    return f"{x:.{nd}f}"

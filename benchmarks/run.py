@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only t4,t5]
+"""
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("table9_validation", "benchmarks.bench_validation"),
+    ("table3_quant", "benchmarks.bench_quant"),
+    ("table4_software", "benchmarks.bench_software"),
+    ("table5_hierarchy", "benchmarks.bench_hierarchy"),
+    ("table6_pareto", "benchmarks.bench_pareto"),
+    ("fig6_dse_convergence", "benchmarks.bench_dse"),
+    ("fig8_disaggregation", "benchmarks.bench_disagg"),
+    ("table7_dllm", "benchmarks.bench_dllm"),
+    ("table8_moe", "benchmarks.bench_moe"),
+    ("fig9_extreme_heterogeneity", "benchmarks.bench_extreme"),
+    ("roofline", "benchmarks.bench_roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+    filters = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, modname in MODULES:
+        if filters and not any(f in title for f in filters):
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for line in mod.run():
+                print(line)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{title},0.0,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Full MemExplorer exploration: the four DSE methods on one workload
+with a shared Sobol init — the paper's Fig. 6 experiment, interactive.
+
+    PYTHONPATH=src python examples/explore_memory.py [--evals 60]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs.paper_models import QWEN3_32B
+from repro.core.dse import METHODS, Objective, shared_init
+from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--evals", type=int, default=60)
+    ap.add_argument("--phase", choices=["prefill", "decode"],
+                    default="decode")
+    args = ap.parse_args()
+
+    phase = Phase.PREFILL if args.phase == "prefill" else Phase.DECODE
+    obj = Objective(QWEN3_32B, OSWORLD_LIBREOFFICE, phase,
+                    tdp_limit_w=700.0)
+    init = shared_init(obj, 20, seed=0)
+    print(f"== {args.phase} DSE on Qwen3-32B/OSWorld, {args.evals} evals, "
+          f"700 W TDP, shared 20-point Sobol init ==")
+
+    results = {}
+    for name, runner in METHODS.items():
+        res = runner(obj, n_total=args.evals, seed=0, init=list(init))
+        results[name] = res
+    all_f = np.vstack([r.feasible_f() for r in results.values()
+                       if len(r.feasible_f())])
+    ref = all_f.min(axis=0) - 1.0
+    print(f"\n{'method':10s} {'final HV':>12s} {'pareto':>7s} "
+          f"{'best TPS':>10s}")
+    for name, res in results.items():
+        hv = res.hv_history(ref)[-1]
+        pareto = res.pareto()
+        best_tps = max((o.f[0] for o in pareto), default=0.0)
+        print(f"{name:10s} {hv:12.4e} {len(pareto):7d} {best_tps:10.1f}")
+    winner = max(results, key=lambda n: results[n].hv_history(ref)[-1])
+    print(f"\nwinner: {winner} (paper Fig. 6: GP+EHVI)")
+    print("\nbest designs on the winner's frontier:")
+    for o in sorted(results[winner].pareto(), key=lambda o: -o.f[0])[:4]:
+        print(f"  TPS={o.f[0]:9.1f} P={-o.f[1]:6.1f}W  {o.npu.describe()}")
+
+
+if __name__ == "__main__":
+    main()

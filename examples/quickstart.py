@@ -1,0 +1,50 @@
+"""Quickstart: explore the heterogeneous memory design space.
+
+Evaluates the paper's Table 6 configurations on the OSWorld agentic
+trace, then runs a small GP+EHVI design-space exploration under a 700 W
+TDP budget and prints the Pareto frontier.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.configs.paper_models import LLAMA33_70B
+from repro.core import baseline_npu, d1_npu, d2_npu, p1_npu, p2_npu
+from repro.core.dse import Objective, run_mobo
+from repro.core.perfmodel import evaluate_decode, evaluate_prefill
+from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
+
+
+def main():
+    trace = OSWORLD_LIBREOFFICE
+    print(f"== workload: {trace.name} ({trace.prompt_tokens} prompt / "
+          f"{trace.gen_tokens} generated tokens), LLaMA-3.3-70B ==\n")
+
+    print("-- paper Table 6 configurations --")
+    for mk in (baseline_npu, p1_npu, p2_npu):
+        npu = mk()
+        r = evaluate_prefill(npu, LLAMA33_70B, trace)
+        print(f"prefill {npu.name:4s}: batch={r.batch:3d} "
+              f"TPS={r.throughput_tps:8.1f} power={r.avg_power_w:6.1f}W "
+              f"token/J={r.tokens_per_joule:6.2f} [{r.bottleneck}]")
+    for mk in (baseline_npu, d1_npu, d2_npu):
+        npu = mk()
+        r = evaluate_decode(npu, LLAMA33_70B, trace)
+        print(f"decode  {npu.name:4s}: batch={r.batch:3d} "
+              f"TPS={r.throughput_tps:8.1f} power={r.avg_power_w:6.1f}W "
+              f"token/J={r.tokens_per_joule:6.2f} [{r.bottleneck}]")
+
+    print("\n-- GP+EHVI design-space exploration (decode, 40 evals, "
+          "700 W TDP) --")
+    obj = Objective(LLAMA33_70B, trace, Phase.DECODE, tdp_limit_w=700.0)
+    res = run_mobo(obj, n_total=40, seed=0)
+    pareto = res.pareto()
+    print(f"feasible: {sum(o.f is not None for o in res.observations)}/40, "
+          f"pareto points: {len(pareto)}")
+    for o in sorted(pareto, key=lambda o: -o.f[0])[:5]:
+        print(f"  TPS={o.f[0]:8.1f} P={-o.f[1]:6.1f}W  {o.npu.describe()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""End-to-end disaggregated serving driver (the paper's system, small).
+
+Runs REAL JAX prefill + batched decode with a reduced qwen3-4b-family
+model on CPU: a "prefill device" processes prompt batches and hands the
+KV cache to a "decode device" loop (kv-cache int8 quantization on), with
+per-phase timing + the analytical model's view of the same split.
+
+    PYTHONPATH=src python examples/serve_disaggregated.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import d1_npu, p1_npu
+from repro.core.disagg import evaluate_disaggregated
+from repro.core.workload import OSWORLD_LIBREOFFICE
+from repro.configs.paper_models import LLAMA33_70B
+from repro.runtime.data import DataConfig, batch_for_step
+from repro.runtime.steps import make_decode_step, make_prefill_step, model_fns
+
+
+def main():
+    cfg = get_arch("qwen3-4b").reduced(n_layers=4, d_model=128, vocab=512)
+    cfg = dataclasses.replace(cfg, kv_quant=True)
+    mf = model_fns(cfg)
+    params = mf.init(jax.random.key(0))
+
+    batch_size, prompt_len, gen_len = 4, 48, 24
+    dc = DataConfig(vocab=cfg.vocab, seq_len=prompt_len,
+                    global_batch=batch_size, seed=0)
+    s_max = prompt_len + gen_len
+
+    prefill = jax.jit(make_prefill_step(cfg, s_max=s_max))
+    decode = jax.jit(make_decode_step(cfg))
+
+    print(f"== serving reduced {cfg.name}: batch={batch_size} "
+          f"prompt={prompt_len} gen={gen_len} (int8 KV cache) ==")
+    batch = {k: jnp.asarray(v) for k, v in batch_for_step(dc, 0).items()}
+
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    logits.block_until_ready()
+    ttft = time.perf_counter() - t0
+    print(f"prefill device: TTFT={ttft*1e3:.1f}ms "
+          f"(logits {logits.shape})")
+
+    # hand the cache to the "decode device" (same host here)
+    tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+    generated = [np.asarray(tok)]
+    t0 = time.perf_counter()
+    for step in range(gen_len - 1):
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(prompt_len + step))
+        tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+        generated.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    toks = np.stack(generated, axis=1)
+    print(f"decode device: {gen_len-1} steps in {dt*1e3:.1f}ms "
+          f"({(gen_len-1)*batch_size/dt:.0f} tok/s aggregate)")
+    print(f"sample continuation (request 0): {toks[0][:12].tolist()}")
+
+    print("\n== the analytical model's view of the production split "
+          "(P1 + D1, LLaMA-3.3-70B, OSWorld) ==")
+    r = evaluate_disaggregated(p1_npu(), d1_npu(), LLAMA33_70B,
+                               OSWORLD_LIBREOFFICE)
+    print(f"TTFT={r.ttft_s:.1f}s  KV transfer={r.kv_transfer_s*1e3:.0f}ms  "
+          f"decode TPS(agg)={r.decode_tps_aggregate:.1f}  "
+          f"power={r.total_power_w:.0f}W  token/J={r.tokens_per_joule:.3f}")
+
+
+if __name__ == "__main__":
+    main()

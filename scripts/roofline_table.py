@@ -1,0 +1,26 @@
+"""Render the EXPERIMENTS.md roofline table from a dry-run JSONL."""
+
+import json
+import sys
+
+SRC = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_scan.jsonl"
+
+rows = [json.loads(l) for l in open(SRC)]
+print("| arch | shape | mesh | compute_s | memory_s | coll_s | bneck |"
+      " useful_flops | roofline | note |")
+print("|---|---|---|---|---|---|---|---|---|---|")
+for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+    if r["status"] == "skip":
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | – | – | – | – |"
+              f" – | – | skip: {r['reason'][:40]} |")
+        continue
+    if r["status"] == "error":
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | – | – | – | – |"
+              f" – | – | ERROR |")
+        continue
+    note = "mem-proxy clamped" if r.get("mem_proxy_clamped") else ""
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+          f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+          f"| {r['collective_s']:.2e} | {r['bottleneck']} "
+          f"| {r['useful_flop_ratio']:.2f} | {r['roofline_fraction']:.4f} "
+          f"| {note} |")

@@ -1,0 +1,37 @@
+"""Architecture registry: the 10 assigned architectures (+ the paper's
+own workload models in paper_models.py).
+
+Usage:  from repro.configs import get_arch, ARCHS
+        cfg = get_arch("qwen3-4b")
+"""
+
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+
+from . import (hymba_1_5b, internlm2_1_8b, llama3_2_1b,
+               llama4_scout_17b_a16e, llama_3_2_vision_11b,
+               phi3_5_moe_42b_a6_6b, qwen1_5_110b, qwen3_4b,
+               seamless_m4t_medium, xlstm_1_3b)
+
+ARCHS: dict[str, ArchConfig] = {
+    m.ARCH.name: m.ARCH
+    for m in [seamless_m4t_medium, internlm2_1_8b, qwen3_4b, llama3_2_1b,
+              qwen1_5_110b, llama4_scout_17b_a16e, phi3_5_moe_42b_a6_6b,
+              hymba_1_5b, llama_3_2_vision_11b, xlstm_1_3b]
+}
+
+# long_500k sliding window for the hybrid arch (SSM carries long range)
+LONG_WINDOWS = {"hymba-1.5b": hymba_1_5b.LONG_CONTEXT_WINDOW}
+
+
+def get_arch(name: str) -> ArchConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+
+
+def cell_supported(arch: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, per the assignment rules."""
+    if shape.name == "long_500k" and not arch.supports_long_context:
+        return False, "needs sub-quadratic attention (full-attention arch)"
+    return True, ""

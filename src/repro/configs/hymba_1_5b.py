@@ -1,0 +1,14 @@
+"""hymba-1.5b [hybrid]: parallel attention + Mamba heads
+[arXiv:2411.13676; hf].  long_500k serves with a 2048-token sliding
+window on the attention half (SSM carries long-range state)."""
+from repro.models.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, head_dim=64,
+    d_ff=5504, vocab=32001, ssm_state=16, rope_theta=10_000.0,
+    attn_window=0,   # full attention by default; long_500k overrides
+    notes="sliding-window 2048 for long_500k (see launch/dryrun.py)",
+)
+
+LONG_CONTEXT_WINDOW = 2048

@@ -1,0 +1,11 @@
+"""llama-3.2-vision-11b [vlm]: cross-attention image layers
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified].  Vision frontend is a
+stub: inputs include precomputed patch embeddings."""
+from repro.models.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="llama-3.2-vision-11b", family="vlm",
+    n_layers=40, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=128256, cross_attn_every=5, cross_len=1600,
+    modality="vision", rope_theta=500_000.0,
+)

@@ -1,0 +1,32 @@
+"""The paper's own evaluation models, as analytical-workload configs
+(Section 5.1: LLaMA-3.3-70B, Qwen3-32B; Section 5.4: LLaDA-8B diffusion,
+Qwen3.5-397B-A17B MoE)."""
+
+from repro.core.workload import Family, ModelDims
+
+LLAMA33_70B = ModelDims(
+    name="llama3.3-70b", family=Family.DENSE, n_layers=80, d_model=8192,
+    n_heads=64, n_kv_heads=8, head_dim=128, d_ff=28672, vocab=128256,
+)
+
+QWEN3_32B = ModelDims(
+    name="qwen3-32b", family=Family.DENSE, n_layers=64, d_model=5120,
+    n_heads=64, n_kv_heads=8, head_dim=128, d_ff=25600, vocab=151936,
+    qk_norm=True,
+)
+
+LLADA_8B = ModelDims(
+    name="llada-8b", family=Family.DLLM, n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=32, head_dim=128, d_ff=12288, vocab=126464,
+    diffusion_steps_per_token=0.25,
+)
+
+# 64 experts x 60 layers x 3*5120*6400 ~= 377B total, top-2 active ~17B
+QWEN35_397B_A17B = ModelDims(
+    name="qwen3.5-397b-a17b", family=Family.MOE, n_layers=60, d_model=5120,
+    n_heads=64, n_kv_heads=8, head_dim=128, d_ff=6400, vocab=152064,
+    n_experts=64, top_k=2,
+)
+
+PAPER_MODELS = {m.name: m for m in
+                [LLAMA33_70B, QWEN3_32B, LLADA_8B, QWEN35_397B_A17B]}

@@ -1,0 +1,13 @@
+"""seamless-m4t-medium [audio]: enc-dec multimodal backbone
+[arXiv:2308.11596; hf].  Speech frontend is a stub: inputs are
+precomputed frame embeddings."""
+from repro.models.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="seamless-m4t-medium", family="encdec",
+    n_layers=12, n_encoder_layers=12, d_model=1024, n_heads=16,
+    n_kv_heads=16, head_dim=64, d_ff=4096, vocab=256206,
+    gated_ffn=False, rope_theta=10_000.0, modality="audio",
+    cross_len=4096,
+    notes="enc-dec; decoder self+cross attention; audio frontend stubbed",
+)

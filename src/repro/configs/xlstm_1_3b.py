@@ -1,0 +1,10 @@
+"""xlstm-1.3b [ssm]: alternating sLSTM + mLSTM blocks
+[arXiv:2405.04517; unverified].  d_ff=0: blocks carry their own
+projections.  O(1)/token decode -> runs long_500k."""
+from repro.models.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4, head_dim=512,
+    d_ff=0, vocab=50304, rope_theta=10_000.0,
+)

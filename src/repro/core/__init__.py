@@ -1,0 +1,34 @@
+"""MemExplorer core: unified memory modeling + NPU co-design DSE.
+
+The paper's primary contribution, as a composable library:
+
+  memtech     Table 1 technology catalog (unified abstraction)
+  hierarchy   Eq. 1 shoreline bound + Eqs. 2-5 double-buffered transfer model
+  compute     PLENA-style systolic/vector analytical compute model
+  power       Eq. 6 memory power + parametric compute power
+  dataflow    Section 4.2 software strategies (WS/IS/OS, storage, BW priority)
+  workload    Section 4.3 per-phase operator traffic for all model families
+  perfmodel   phase evaluation -> throughput/power/token-per-joule
+  npu         one co-design point (Table 2) incl. the paper's Table 6 configs
+  emulator    transaction-level cross-validation (Section 5.6)
+  disagg      PD-disaggregated system model (Sections 5.3/5.5)
+  dse         Sobol + GP/EHVI MOBO + NSGA-II + MO-TPE + random (Section 4.4)
+  quant       MX formats + accuracy proxy (Table 3)
+"""
+
+from .compute import ComputeConfig, Dataflow, gemm_cycles, vector_seconds
+from .dataflow import (BandwidthPriority, SoftwareStrategy, StoragePriority,
+                       place_data)
+from .hierarchy import (MemoryHierarchy, MemoryLevel, ShorelineError,
+                        max_stacks)
+from .memtech import CATALOG, MemKind, MemoryTechnology
+from .memtech import get as get_tech
+from .npu import (NPUConfig, baseline_npu, d1_npu, d2_npu, make_hierarchy,
+                  p1_npu, p2_npu)
+from .perfmodel import (InfeasibleConfig, PhaseResult, evaluate,
+                        evaluate_decode, evaluate_prefill, max_decode_batch)
+from .power import compute_power_w, memory_power_w, system_tdp_w
+from .quant.formats import FORMATS, MXFormat, QuantConfig, quantize_dequantize
+from .workload import (BFCL_WEB_SEARCH, CHATBOT, GSM8K_DLLM,
+                       OSWORLD_LIBREOFFICE, Family, ModelDims, Phase, Trace,
+                       layer_traffic, weight_footprint_gb)

@@ -1,0 +1,162 @@
+"""PLENA-style analytical compute model.
+
+The paper builds on PLENA's configurable compute abstraction: a systolic
+matrix engine of R x C processing elements plus a VLEN-wide vector unit.
+We model GEMM latency under the three dataflow strategies (weight-, input-,
+output-stationary) with explicit tiling over the PE array, and vector-op
+latency over VLEN lanes.  These cycle counts combine with the memory
+transfer model (hierarchy.py) in perfmodel.py: compute and (double-
+buffered) memory streams overlap, the slower one dominating.
+
+Conventions: a GEMM is (M x K) @ (K x N).  For transformer inference the
+"weights" operand is K x N, activations are M x K.  MACs = M*K*N.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+
+class Dataflow(enum.Enum):
+    WEIGHT_STATIONARY = "WS"
+    INPUT_STATIONARY = "IS"
+    OUTPUT_STATIONARY = "OS"
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeConfig:
+    """Compute-side design choices (Table 2: PE Array Dim, VLEN)."""
+
+    pe_rows: int = 128
+    pe_cols: int = 128
+    vlen: int = 2048
+    clock_ghz: float = 1.0
+
+    @property
+    def n_pe(self) -> int:
+        return self.pe_rows * self.pe_cols
+
+    @property
+    def peak_macs_per_s(self) -> float:
+        return self.n_pe * self.clock_ghz * 1e9
+
+    @property
+    def peak_flops(self) -> float:
+        return 2.0 * self.peak_macs_per_s
+
+    @property
+    def peak_vector_ops_per_s(self) -> float:
+        return self.vlen * self.clock_ghz * 1e9
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmTiming:
+    cycles: float
+    utilization: float      # ideal MAC-cycles / (cycles * n_pe)
+    macs: float
+    seconds: float
+
+
+def gemm_cycles(cfg: ComputeConfig, m: int, k: int, n: int,
+                dataflow: Dataflow = Dataflow.WEIGHT_STATIONARY,
+                count: float = 1.0) -> GemmTiming:
+    """Systolic GEMM latency under a dataflow strategy.
+
+    The stationary operand is double-buffered inside the array (ping-pong
+    weight registers, TPU-style), so tile swaps overlap with the previous
+    tile's streaming phase; one pipeline fill/drain is paid per GEMM pass
+    rather than per tile.  Resident-tile *loading* bandwidth is accounted
+    by the memory model (the weight stream), not here — charging it in
+    both places would double-count.
+
+    `count` independent same-shape GEMMs (batched heads / experts) may be
+    packed along the row dimension of the array when the natural row
+    extent is smaller than the array: floor(R / rows) instances execute
+    simultaneously on disjoint row bands (GQA attention with head_dim 64
+    on a 2048-row array packs 32 heads per pass).
+    """
+    if min(m, k, n) <= 0 or count <= 0:
+        return GemmTiming(0.0, 1.0, 0.0, 0.0)
+    r, c = cfg.pe_rows, cfg.pe_cols
+    fill = r + c  # pipeline skew in + drain out, once per pass
+
+    if dataflow is Dataflow.WEIGHT_STATIONARY:
+        rows = k                      # K maps to array rows
+    elif dataflow is Dataflow.INPUT_STATIONARY:
+        rows = m
+    else:                             # OUTPUT_STATIONARY
+        rows = m
+    pack = max(1, min(int(count), r // max(1, rows)))
+    eff_count = math.ceil(count / pack)
+    rows_used = rows * pack
+
+    if dataflow is Dataflow.WEIGHT_STATIONARY:
+        tiles = math.ceil(rows_used / r) * math.ceil(n / c)
+        stream = m                    # activation rows per tile
+    elif dataflow is Dataflow.INPUT_STATIONARY:
+        tiles = math.ceil(rows_used / r) * math.ceil(k / c)
+        stream = n
+    else:  # OUTPUT_STATIONARY
+        tiles = math.ceil(rows_used / r) * math.ceil(n / c)
+        stream = k
+    cycles = (float(tiles) * stream + fill) * eff_count
+    macs = float(m) * k * n * count
+    util = min(1.0, macs / (cycles * cfg.n_pe))
+    return GemmTiming(cycles=cycles, utilization=util, macs=macs,
+                      seconds=cycles / (cfg.clock_ghz * 1e9))
+
+
+def dataflow_traffic_multipliers(
+        cfg: ComputeConfig, m: int, k: int, n: int, dataflow: Dataflow,
+        a_bytes_per_elt: float, b_bytes_per_elt: float,
+        out_bytes_per_elt: float,
+        stage_a_bytes: float, stage_b_bytes: float,
+        stage_out_bytes: float) -> tuple[float, float]:
+    """(a_mult, b_mult): re-stream factors for an (m,k)@(k,n) GEMM.
+
+    Capacity-aware (Timeloop-style) staging model: the dataflow picks which
+    operand is *stationary*; the on-chip bytes available to stage it
+    (`stage_*`, from the storage-priority placement) set the chunk size, and
+    the other operand is re-streamed once per chunk:
+
+      WS: weights stationary, chunked into stage_b-sized pieces; the full
+          activation panel is re-read per chunk: a_mult = ceil(K*N*b / S_b).
+      IS: activations stationary: b_mult = ceil(M*K*a / S_a).
+      OS: an output tile (t x t, t = sqrt(S_out/o)) is stationary; both
+          operands are re-read per tile row/column.
+
+    Staging can never be smaller than one PE-array tile (the array itself
+    holds that much), so multipliers are capped at the array-level passes.
+    """
+    r, c = cfg.pe_rows, cfg.pe_cols
+    a_cap = float(math.ceil(n / c))        # worst case: re-read per col tile
+    b_cap = float(math.ceil(m / r))        # worst case: re-read per row tile
+    if dataflow is Dataflow.WEIGHT_STATIONARY:
+        stage = max(stage_b_bytes, r * c * b_bytes_per_elt)
+        a_mult = min(a_cap, math.ceil(k * n * b_bytes_per_elt / stage))
+        return float(max(1.0, a_mult)), 1.0
+    if dataflow is Dataflow.INPUT_STATIONARY:
+        stage = max(stage_a_bytes, r * c * a_bytes_per_elt)
+        b_mult = min(b_cap, math.ceil(m * k * a_bytes_per_elt / stage))
+        return 1.0, float(max(1.0, b_mult))
+    # OUTPUT_STATIONARY
+    stage = max(stage_out_bytes, r * c * out_bytes_per_elt)
+    t = math.sqrt(stage / max(out_bytes_per_elt, 1e-9))
+    a_mult = min(a_cap, math.ceil(n / max(t, c)))
+    b_mult = min(b_cap, math.ceil(m / max(t, r)))
+    return float(max(1.0, a_mult)), float(max(1.0, b_mult))
+
+
+def vector_cycles(cfg: ComputeConfig, elements: float,
+                  ops_per_element: float = 1.0) -> float:
+    """Vector-unit cycles for an elementwise/reduction op."""
+    if elements <= 0:
+        return 0.0
+    return math.ceil(elements / cfg.vlen) * ops_per_element
+
+
+def vector_seconds(cfg: ComputeConfig, elements: float,
+                   ops_per_element: float = 1.0) -> float:
+    return vector_cycles(cfg, elements, ops_per_element) / (cfg.clock_ghz * 1e9)

@@ -1,0 +1,153 @@
+"""Data Movement Model (paper Section 4.2).
+
+Three software-controlled strategies, jointly searched by the DSE:
+
+* Dataflow strategy   — GEMM execution order (WS / IS / OS), which operand
+                        stays resident in the PE array.
+* On-chip storage priority — which data class (weights / activations /
+                        KV cache / equal) claims on-chip capacity first.
+* Off-chip bandwidth priority — split of off-chip bandwidth between the
+                        matrix and vector streams (75/25 fixed policy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+from .compute import Dataflow
+from .hierarchy import MemoryHierarchy
+
+
+class StoragePriority(enum.Enum):
+    ACTIVATION = "Act"
+    KV_CACHE = "KV"
+    WEIGHT = "Weight"
+    EQUAL = "Equal"
+
+
+class BandwidthPriority(enum.Enum):
+    MATRIX = "Matrix"
+    VECTOR = "Vector"
+    EQUAL = "Equal"
+
+
+# Fixed allocation policy (Section 4.2): priority stream gets 75%.
+_BW_SPLIT = {
+    BandwidthPriority.MATRIX: (0.75, 0.25),
+    BandwidthPriority.VECTOR: (0.25, 0.75),
+    BandwidthPriority.EQUAL: (0.5, 0.5),
+}
+
+# Data classes, fixed order: [weights, activations, kv]
+WEIGHTS, ACTS, KV = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class SoftwareStrategy:
+    dataflow: Dataflow = Dataflow.WEIGHT_STATIONARY
+    storage_priority: StoragePriority = StoragePriority.EQUAL
+    bw_priority: BandwidthPriority = BandwidthPriority.EQUAL
+
+    def bw_split(self) -> tuple[float, float]:
+        """(matrix_share, vector_share) of off-chip bandwidth."""
+        return _BW_SPLIT[self.bw_priority]
+
+    def placement_order(self) -> list[int]:
+        """Class placement order, highest priority first."""
+        if self.storage_priority is StoragePriority.ACTIVATION:
+            return [ACTS, KV, WEIGHTS]
+        if self.storage_priority is StoragePriority.KV_CACHE:
+            return [KV, ACTS, WEIGHTS]
+        if self.storage_priority is StoragePriority.WEIGHT:
+            return [WEIGHTS, ACTS, KV]
+        return [ACTS, WEIGHTS, KV]   # Equal: round-robin-ish default order
+
+    def describe(self) -> str:
+        return (f"{self.dataflow.value}/{self.storage_priority.value}"
+                f"/{self.bw_priority.value}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Where each data class lives: fractions per hierarchy level."""
+
+    # fractions[level][cls] of that class's total bytes resident at level
+    fractions: tuple
+    sizes_gb: tuple = (0.0, 0.0, 0.0)    # total per class [weights, acts, kv]
+
+    def on_chip_bytes(self, cls: int, hierarchy: MemoryHierarchy) -> float:
+        """Absolute bytes of class `cls` staged in on-chip levels."""
+        from .memtech import MemKind
+        tot = 0.0
+        for lv, level in zip(self.fractions, hierarchy.levels):
+            if level.tech.kind is MemKind.ON_CHIP:
+                tot += lv[cls] * self.sizes_gb[cls] * 1e9
+        return tot
+
+    def resident_fraction_chain(self, cls: int) -> list[float]:
+        """alpha_i chain for hierarchy.transfer_time_s: fraction of data
+        arriving at boundary i that is resident at level i."""
+        fr = [lv[cls] for lv in self.fractions]
+        alphas = []
+        remaining = 1.0
+        for f in fr:
+            if remaining <= 1e-12:
+                alphas.append(1.0)
+                continue
+            alphas.append(min(1.0, f / remaining))
+            remaining -= f
+        if alphas:
+            alphas[-1] = 1.0
+        return alphas
+
+    def on_chip_fraction(self, cls: int, hierarchy: MemoryHierarchy) -> float:
+        from .memtech import MemKind
+        tot = 0.0
+        for lv, level in zip(self.fractions, hierarchy.levels):
+            if level.tech.kind is MemKind.ON_CHIP:
+                tot += lv[cls]
+        return tot
+
+
+def place_data(hierarchy: MemoryHierarchy, strategy: SoftwareStrategy,
+               sizes_gb: list[float]) -> Placement:
+    """Greedy placement of [weights, acts, kv] by the storage priority.
+
+    With EQUAL priority, each class gets a proportional share of every
+    level (no class monopolizes on-chip capacity).
+    Raises ValueError if the hierarchy lacks capacity (caller treats the
+    config as infeasible).
+    """
+    n = len(hierarchy.levels)
+    total = sum(sizes_gb)
+    if total > hierarchy.total_capacity_gb() + 1e-9:
+        raise ValueError(
+            f"workload needs {total:.1f} GB > capacity "
+            f"{hierarchy.total_capacity_gb():.1f} GB ({hierarchy.describe()})"
+        )
+    if strategy.storage_priority is StoragePriority.EQUAL and total > 0:
+        fractions = []
+        remaining = list(sizes_gb)
+        for level in hierarchy.levels:
+            cap = level.capacity_gb
+            rem_total = sum(remaining)
+            row = [0.0, 0.0, 0.0]
+            if rem_total > 1e-12:
+                share = min(1.0, cap / rem_total)
+                for c in range(3):
+                    take = remaining[c] * share
+                    row[c] = take / sizes_gb[c] if sizes_gb[c] > 0 else 0.0
+                    remaining[c] -= take
+            fractions.append(tuple(row))
+        return Placement(fractions=tuple(fractions), sizes_gb=tuple(sizes_gb))
+
+    placed = hierarchy.place_greedy(sizes_gb, strategy.placement_order())
+    fractions = tuple(
+        tuple((placed[lvl][c] / sizes_gb[c]) if sizes_gb[c] > 0 else 0.0
+              for c in range(3))
+        for lvl in range(n)
+    )
+    return Placement(fractions=fractions, sizes_gb=tuple(sizes_gb))
+
+

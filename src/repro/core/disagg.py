@@ -1,0 +1,154 @@
+"""Prefill/Decode-disaggregated system model (paper Sections 5.3, 5.5).
+
+A disaggregated serving system pairs a prefill-optimized device (or fleet)
+with a decode-optimized one; finished prefills hand their KV cache to the
+decode device over an interconnect (the paper models NVLink, following
+LLMCompass).  End-to-end metrics:
+
+  TTFT  = prefill latency + KV transfer time
+  TPS   = decode tokens/s (per request and aggregate)
+  token/J across both devices + transfer energy
+
+Extreme heterogeneity (Section 5.5) further splits the pipeline:
+  * prefill by layer group — attention-heavy vs FFN-heavy layers may use
+    different configurations (Fig. 9 left), evaluated per-group;
+  * decode by generation phase — early decode (short context) vs late
+    decode (long context) have different memory profiles (Fig. 9 right).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .npu import NPUConfig
+from .perfmodel import (PhaseResult, evaluate_decode, evaluate_prefill)
+from .workload import ModelDims, Phase, Trace, layer_traffic
+
+# NVLink-class chip-to-chip interconnect (LLMCompass-style constants)
+NVLINK_GBPS = 450.0         # effective per-direction bandwidth
+NVLINK_PJ_PER_BIT = 10.0    # link + serdes energy
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggResult:
+    ttft_s: float
+    decode_tps_per_request: float
+    decode_tps_aggregate: float
+    kv_transfer_s: float
+    total_power_w: float
+    tokens_per_joule: float
+    prefill: PhaseResult
+    decode: PhaseResult
+
+
+def kv_transfer_seconds(dims: ModelDims, trace: Trace, batch: int,
+                        quant) -> tuple[float, float]:
+    """(seconds, joules) to move one batch's prompt KV to the decode device."""
+    kv_bytes = dims.kv_bytes_per_token(quant) * trace.prompt_tokens * batch
+    t = kv_bytes / (NVLINK_GBPS * 1e9)
+    e = NVLINK_PJ_PER_BIT * kv_bytes * 8.0 * 1e-12
+    return t, e
+
+
+def evaluate_disaggregated(prefill_npu: NPUConfig, decode_npu: NPUConfig,
+                           dims: ModelDims, trace: Trace) -> DisaggResult:
+    """End-to-end PD-disaggregated evaluation (paper Fig. 8)."""
+    pre = evaluate_prefill(prefill_npu, dims, trace)
+    dec = evaluate_decode(decode_npu, dims, trace)
+    t_kv, e_kv = kv_transfer_seconds(dims, trace, 1, prefill_npu.quant)
+    ttft = pre.latency_s / pre.batch + t_kv   # per-request TTFT
+    # steady state: both devices busy; energy per generated token counts the
+    # amortized prefill energy per request's gen_tokens plus decode energy.
+    e_prefill_per_req = (pre.avg_power_w * pre.latency_s) / pre.batch
+    e_decode_per_tok = dec.energy_per_token_j
+    e_per_gen_token = (e_prefill_per_req + e_kv) / trace.gen_tokens \
+        + e_decode_per_tok
+    power = pre.avg_power_w + dec.avg_power_w
+    return DisaggResult(
+        ttft_s=ttft,
+        decode_tps_per_request=1.0 / dec.latency_s if dec.latency_s else 0.0,
+        decode_tps_aggregate=dec.throughput_tps,
+        kv_transfer_s=t_kv,
+        total_power_w=power,
+        tokens_per_joule=1.0 / e_per_gen_token if e_per_gen_token else 0.0,
+        prefill=pre, decode=dec)
+
+
+# ---------------------------------------------------------------------------
+# Extreme heterogeneity (Section 5.5)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerGroupSplit:
+    """Prefill split at the layer level: Attention vs FFN sub-workloads."""
+
+    attn_seconds: float
+    ffn_seconds: float
+    attn_bottleneck: str
+    ffn_bottleneck: str
+
+
+def prefill_layer_group_profile(npu: NPUConfig, dims: ModelDims,
+                                trace: Trace, batch: int = 1) -> LayerGroupSplit:
+    """Evaluate Attention and FFN layer groups separately (Fig. 9 left) by
+    zeroing out the other group's ops."""
+    from .perfmodel import _layer_time_and_energy, _placement_for
+    S = trace.prompt_tokens
+    placement = _placement_for(npu, dims, batch, S, S)
+    full = layer_traffic(dims, Phase.PREFILL, batch, S, npu.quant)
+    attn_only = dataclasses.replace(
+        dims, d_ff=0) if dims.d_ff else dims
+    t_attn_traffic = layer_traffic(attn_only, Phase.PREFILL, batch, S,
+                                   npu.quant)
+    t_attn, _, b_attn, _ = _layer_time_and_energy(npu, t_attn_traffic,
+                                                  placement)
+    # FFN group = full minus attention ops (rebuild with attention removed)
+    ffn_traffic = layer_traffic(dims, Phase.PREFILL, batch, S, npu.quant)
+    ffn_traffic.gemms = [g for g in full.gemms
+                         if g not in t_attn_traffic.gemms]
+    t_ffn, _, b_ffn, _ = _layer_time_and_energy(npu, ffn_traffic, placement)
+    return LayerGroupSplit(attn_seconds=t_attn, ffn_seconds=t_ffn,
+                           attn_bottleneck=b_attn, ffn_bottleneck=b_ffn)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePhaseSplit:
+    """Decode split by generation progress (Fig. 9 right)."""
+
+    early_step_s: float      # context = prompt + 25% of gen
+    late_step_s: float       # context = prompt + 75% of gen
+    early_bottleneck: str
+    late_bottleneck: str
+
+
+def decode_phase_profile(npu: NPUConfig, dims: ModelDims,
+                         trace: Trace,
+                         batch: Optional[int] = None) -> DecodePhaseSplit:
+    early = evaluate_decode(npu, dims, trace, batch=batch,
+                            context_override=trace.prompt_tokens
+                            + trace.gen_tokens // 4)
+    late = evaluate_decode(npu, dims, trace, batch=batch,
+                           context_override=trace.prompt_tokens
+                           + 3 * trace.gen_tokens // 4)
+    return DecodePhaseSplit(
+        early_step_s=early.latency_s, late_step_s=late.latency_s,
+        early_bottleneck=early.bottleneck, late_bottleneck=late.bottleneck)
+
+
+def best_per_phase(npus: list[NPUConfig], dims: ModelDims, trace: Trace,
+                   phase: Phase) -> tuple[NPUConfig, PhaseResult]:
+    """Pick the best device for a (sub-)phase — the Section 5.5 search."""
+    best = None
+    for npu in npus:
+        try:
+            r = (evaluate_prefill(npu, dims, trace)
+                 if phase is Phase.PREFILL
+                 else evaluate_decode(npu, dims, trace))
+        except Exception:
+            continue
+        if best is None or r.tokens_per_joule > best[1].tokens_per_joule:
+            best = (npu, r)
+    if best is None:
+        raise ValueError("no feasible device for phase")
+    return best

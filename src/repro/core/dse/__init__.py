@@ -1,0 +1,15 @@
+"""Design-space exploration (paper Section 4.4).
+
+space   Table 2 encoding <-> NPUConfig
+sobol   quasi-random initialization (N_init = 20)
+gp      GP surrogates (JAX, MLE-fit RBF-ARD)
+pareto  dominance / front / exact 2-D hypervolume (Eq. 7)
+runner  GP+EHVI MOBO (Eq. 8) + NSGA-II / MO-TPE / Random baselines
+"""
+
+from . import space
+from .pareto import (dominates, hv_contributions_2d, hypervolume_2d,
+                     pareto_front, pareto_mask, reference_point)
+from .runner import (METHODS, DSEResult, Objective, Observation,
+                     run_mobo, run_motpe, run_nsga2, run_random, shared_init)
+from .sobol import sobol

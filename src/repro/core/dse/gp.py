@@ -1,0 +1,105 @@
+"""Gaussian Process surrogate (paper Section 4.4) in JAX.
+
+Independent GPs per objective: RBF kernel with ARD lengthscales, signal
+variance and noise optimized by maximum likelihood (Adam on log-params).
+Inputs are the normalized design encodings in [0,1]^d; outputs are
+standardized internally.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _rbf(x1: jnp.ndarray, x2: jnp.ndarray, log_ls: jnp.ndarray,
+         log_sf: jnp.ndarray) -> jnp.ndarray:
+    ls = jnp.exp(log_ls)
+    d = (x1[:, None, :] - x2[None, :, :]) / ls
+    return jnp.exp(2.0 * log_sf) * jnp.exp(-0.5 * jnp.sum(d * d, axis=-1))
+
+
+def _nll(params, x, y):
+    log_ls, log_sf, log_sn = params["ls"], params["sf"], params["sn"]
+    n = x.shape[0]
+    k = _rbf(x, x, log_ls, log_sf) + jnp.exp(2.0 * log_sn) * jnp.eye(n) \
+        + 1e-6 * jnp.eye(n)
+    chol = jnp.linalg.cholesky(k)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    return (0.5 * y @ alpha + jnp.sum(jnp.log(jnp.diag(chol)))
+            + 0.5 * n * jnp.log(2.0 * jnp.pi))
+
+
+@jax.jit
+def _fit_adam(x, y, init_ls):
+    params = {"ls": init_ls, "sf": jnp.array(0.0), "sn": jnp.array(-2.0)}
+    grad_fn = jax.value_and_grad(_nll)
+    lr = 0.05
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, i):
+        params, m, v = carry
+        _, g = grad_fn(params, x, y)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        t = i + 1.0
+        mhat = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vhat = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        params = jax.tree.map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + 1e-8),
+            params, mhat, vhat)
+        # keep lengthscales in a sane band
+        params["ls"] = jnp.clip(params["ls"], -3.0, 3.0)
+        params["sn"] = jnp.clip(params["sn"], -5.0, 1.0)
+        return (params, m, v), 0.0
+
+    (params, _, _), _ = jax.lax.scan(step, (params, m, v),
+                                     jnp.arange(150.0))
+    return params
+
+
+@dataclasses.dataclass
+class GP:
+    """Fitted GP posterior over one standardized objective."""
+
+    x: np.ndarray
+    y_mean: float
+    y_std: float
+    params: dict
+    chol: np.ndarray
+    alpha: np.ndarray
+
+    @classmethod
+    def fit(cls, x: np.ndarray, y: np.ndarray) -> "GP":
+        x = np.asarray(x, dtype=np.float64)
+        y = np.asarray(y, dtype=np.float64)
+        mu, sd = float(y.mean()), float(y.std() + 1e-9)
+        ys = (y - mu) / sd
+        init_ls = jnp.zeros(x.shape[1]) - 0.5
+        params = _fit_adam(jnp.asarray(x), jnp.asarray(ys), init_ls)
+        params = {k: np.asarray(v) for k, v in params.items()}
+        k = np.array(_rbf(jnp.asarray(x), jnp.asarray(x),
+                          jnp.asarray(params["ls"]),
+                          jnp.asarray(params["sf"])))
+        k = k + (np.exp(2.0 * params["sn"]) + 1e-6) * np.eye(len(x))
+        chol = np.linalg.cholesky(k)
+        alpha = np.linalg.solve(chol.T, np.linalg.solve(chol, ys))
+        return cls(x=x, y_mean=mu, y_std=sd, params=params, chol=chol,
+                   alpha=alpha)
+
+    def predict(self, xq: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Posterior mean and stddev at query points (original scale)."""
+        xq = np.asarray(xq, dtype=np.float64)
+        ks = np.asarray(_rbf(jnp.asarray(xq), jnp.asarray(self.x),
+                             jnp.asarray(self.params["ls"]),
+                             jnp.asarray(self.params["sf"])))
+        mean = ks @ self.alpha
+        v = np.linalg.solve(self.chol, ks.T)
+        kss = float(np.exp(2.0 * self.params["sf"]))
+        var = np.maximum(kss - np.sum(v * v, axis=0), 1e-12)
+        return (mean * self.y_std + self.y_mean,
+                np.sqrt(var) * self.y_std)

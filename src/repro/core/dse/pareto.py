@@ -1,0 +1,95 @@
+"""Pareto utilities: dominance, front extraction, exact 2-D hypervolume.
+
+Objectives are MAXIMIZED throughout the DSE (throughput, -power); the
+hypervolume indicator (Eq. 7) is computed against a reference point that
+every observed objective vector dominates.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def dominates(a: np.ndarray, b: np.ndarray) -> bool:
+    """a Pareto-dominates b (maximization): >= everywhere, > somewhere."""
+    a = np.asarray(a, dtype=float)
+    b = np.asarray(b, dtype=float)
+    return bool(np.all(a >= b) and np.any(a > b))
+
+
+def pareto_mask(ys: np.ndarray) -> np.ndarray:
+    """Boolean mask of non-dominated rows (maximization)."""
+    ys = np.asarray(ys, dtype=float)
+    n = len(ys)
+    mask = np.ones(n, dtype=bool)
+    for i in range(n):
+        if not mask[i]:
+            continue
+        for j in range(n):
+            if i == j:
+                continue
+            if dominates(ys[j], ys[i]):
+                mask[i] = False
+                break
+    return mask
+
+
+def pareto_front(ys: np.ndarray) -> np.ndarray:
+    return np.asarray(ys, dtype=float)[pareto_mask(ys)]
+
+
+def hypervolume_2d(ys: np.ndarray, ref: np.ndarray) -> float:
+    """Exact dominated hypervolume for 2 maximized objectives (Eq. 7).
+
+    Points not dominating `ref` contribute nothing.
+    """
+    ys = np.asarray(ys, dtype=float)
+    ref = np.asarray(ref, dtype=float)
+    if ys.size == 0:
+        return 0.0
+    pts = ys[(ys[:, 0] > ref[0]) & (ys[:, 1] > ref[1])]
+    if len(pts) == 0:
+        return 0.0
+    front = pareto_front(pts)
+    # sort by f1 ascending; f2 is then descending along the front
+    order = np.argsort(front[:, 0])
+    front = front[order]
+    hv = 0.0
+    prev_x = ref[0]
+    # iterate right-to-left is equivalent; accumulate strips left-to-right
+    # strip i spans [prev_x, x_i] with height (y_i - ref2) where y_i is the
+    # max f2 among points with f1 >= x_i -> since front sorted ascending f1
+    # and descending f2, point i's own y is the height from its x leftward
+    # until a higher-y point.  Simpler: sweep descending f2:
+    hv = 0.0
+    prev_x = ref[0]
+    for i in range(len(front)):
+        x, y = front[i]
+        width_x = x - prev_x
+        if width_x < 0:
+            width_x = 0.0
+        # height: this point's y (front is descending in y as x grows, so
+        # the region right of prev_x up to x is topped by ... ) — use the
+        # classic staircase: process points sorted by f1 ascending and sum
+        # (x_i - x_{i-1}) * (y_i - ref2) over the *suffix maxima* of y.
+        hv += width_x * max(0.0, max(front[i:, 1]) - ref[1])
+        prev_x = x
+    return float(hv)
+
+
+def hv_contributions_2d(front: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    """Exclusive hypervolume contribution of each front point."""
+    base = hypervolume_2d(front, ref)
+    out = np.zeros(len(front))
+    for i in range(len(front)):
+        rest = np.delete(front, i, axis=0)
+        out[i] = base - hypervolume_2d(rest, ref)
+    return out
+
+
+def reference_point(ys: np.ndarray, margin: float = 0.05) -> np.ndarray:
+    """A reference point slightly below the observed minima."""
+    ys = np.asarray(ys, dtype=float)
+    lo = ys.min(axis=0)
+    span = np.maximum(ys.max(axis=0) - lo, 1e-9)
+    return lo - margin * span

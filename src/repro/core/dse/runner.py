@@ -1,0 +1,404 @@
+"""DSE orchestration: shared objective wrapper + the four search methods
+(GP+EHVI MOBO, NSGA-II, MO-TPE, Random), paper Section 4.4 / Figure 6.
+
+All methods maximize f(x) = (throughput_tps, -avg_power_w) subject to a
+TDP constraint, share the same Sobol/random initialization, and report
+their evaluation history so hypervolume-convergence curves can be drawn
+against a common reference point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..npu import NPUConfig
+from ..perfmodel import InfeasibleConfig, evaluate
+from ..workload import ModelDims, Phase, Trace
+from . import space as sp
+from .pareto import hypervolume_2d, pareto_front, pareto_mask
+from .sobol import sobol
+
+
+@dataclasses.dataclass
+class Observation:
+    x: list
+    f: Optional[tuple]          # (tps, -power) or None if infeasible
+    npu: Optional[NPUConfig]
+
+
+@dataclasses.dataclass
+class DSEResult:
+    method: str
+    observations: list          # in evaluation order
+
+    def feasible_f(self) -> np.ndarray:
+        return np.array([o.f for o in self.observations if o.f is not None],
+                        dtype=float)
+
+    def hv_history(self, ref: np.ndarray) -> np.ndarray:
+        """HV of the feasible front after each evaluation."""
+        out = []
+        fs = []
+        for o in self.observations:
+            if o.f is not None:
+                fs.append(o.f)
+            out.append(hypervolume_2d(np.array(fs, dtype=float), ref)
+                       if fs else 0.0)
+        return np.array(out)
+
+    def pareto(self) -> list:
+        obs = [o for o in self.observations if o.f is not None]
+        if not obs:
+            return []
+        mask = pareto_mask(np.array([o.f for o in obs]))
+        return [o for o, m in zip(obs, mask) if m]
+
+
+class Objective:
+    """Evaluate one design on one (model, trace, phase) under a TDP cap."""
+
+    def __init__(self, dims: ModelDims, trace: Trace, phase: Phase,
+                 tdp_limit_w: float = 700.0, batch: Optional[int] = None):
+        self.dims, self.trace, self.phase = dims, trace, phase
+        self.tdp_limit_w = tdp_limit_w
+        self.batch = batch
+        self.cache: dict = {}
+        self.n_evals = 0
+
+    def __call__(self, x) -> Observation:
+        key = tuple(int(v) for v in x)
+        if key in self.cache:
+            return self.cache[key]
+        self.n_evals += 1
+        obs = Observation(x=list(key), f=None, npu=None)
+        try:
+            npu = sp.decode(key)
+            obs.npu = npu
+            if npu.tdp_w() <= self.tdp_limit_w:
+                r = evaluate(npu, self.dims, self.trace, self.phase,
+                             batch=self.batch)
+                obs.f = (r.throughput_tps, -r.avg_power_w)
+        except (sp.InvalidDesign, InfeasibleConfig, ValueError):
+            pass
+        self.cache[key] = obs
+        return obs
+
+
+def shared_init(objective: Objective, n_init: int, seed: int) -> list:
+    """Sobol initialization (paper: N_init = 20), skipping duplicates."""
+    obs = []
+    seen = set()
+    u = sobol(4 * n_init, sp.N_DIMS, skip=seed * 101)
+    i = 0
+    while len(obs) < n_init and i < len(u):
+        x = tuple(sp.from_unit(u[i]))
+        i += 1
+        if x in seen:
+            continue
+        seen.add(x)
+        obs.append(objective(x))
+    rng = np.random.default_rng(seed)
+    while len(obs) < n_init:
+        x = tuple(sp.random_design(rng))
+        if x in seen:
+            continue
+        seen.add(x)
+        obs.append(objective(x))
+    return obs
+
+
+# ---------------------------------------------------------------------------
+# Random search baseline
+# ---------------------------------------------------------------------------
+
+def run_random(objective: Objective, n_total: int = 100, seed: int = 0,
+               init: Optional[list] = None) -> DSEResult:
+    rng = np.random.default_rng(seed + 7)
+    obs = list(init) if init else []
+    seen = {tuple(o.x) for o in obs}
+    while len(obs) < n_total:
+        x = tuple(sp.random_design(rng))
+        if x in seen:
+            continue
+        seen.add(x)
+        obs.append(objective(x))
+    return DSEResult(method="Random", observations=obs)
+
+
+# ---------------------------------------------------------------------------
+# GP + EHVI (ours)
+# ---------------------------------------------------------------------------
+
+def _mc_ehvi(front: np.ndarray, ref: np.ndarray, mu: np.ndarray,
+             sd: np.ndarray, z: np.ndarray) -> np.ndarray:
+    """Quasi-MC Expected Hypervolume Improvement for a candidate batch.
+
+    mu, sd: [n_cand, 2]; z: [n_samples, 2] standard-normal draws
+    (antithetic).  Returns EHVI estimates [n_cand].
+    """
+    base = hypervolume_2d(front, ref)
+    out = np.zeros(len(mu))
+    for i in range(len(mu)):
+        ys = mu[i] + sd[i] * z            # [s, 2]
+        hvs = 0.0
+        for y in ys:
+            if y[0] <= ref[0] or y[1] <= ref[1]:
+                continue
+            hvs += max(0.0, hypervolume_2d(
+                np.vstack([front, y[None, :]]) if len(front) else y[None, :],
+                ref) - base)
+        out[i] = hvs / len(ys)
+    return out
+
+
+def run_mobo(objective: Objective, n_total: int = 100, seed: int = 0,
+             init: Optional[list] = None, n_init: int = 20,
+             pool_size: int = 256, n_mc: int = 32) -> DSEResult:
+    """Multi-Objective Bayesian Optimization with GP surrogates + EHVI."""
+    from .gp import GP
+    rng = np.random.default_rng(seed + 13)
+    obs = list(init) if init else shared_init(objective, n_init, seed)
+    seen = {tuple(o.x) for o in obs}
+    half = rng.standard_normal((1, 2))  # placeholder; re-drawn per iter
+    while len(obs) < n_total:
+        feas = [o for o in obs if o.f is not None]
+        if len(feas) < 4:
+            x = tuple(sp.random_design(rng))
+            if x in seen:
+                continue
+            seen.add(x)
+            obs.append(objective(x))
+            continue
+        xs = np.array([sp.normalize(o.x) for o in feas])
+        fs = np.array([o.f for o in feas], dtype=float)
+        gps = [GP.fit(xs, fs[:, m]) for m in range(2)]
+        front = pareto_front(fs)
+        ref = fs.min(axis=0) - 0.05 * (fs.max(axis=0) - fs.min(axis=0) + 1e-9)
+        # candidate pool: random unevaluated designs, cheap-filtered
+        pool = []
+        tries = 0
+        while len(pool) < pool_size and tries < pool_size * 10:
+            tries += 1
+            x = tuple(sp.random_design(rng))
+            if x in seen:
+                continue
+            try:
+                npu = sp.decode(x)
+                if npu.tdp_w() > objective.tdp_limit_w:
+                    continue
+            except sp.InvalidDesign:
+                continue
+            pool.append(x)
+        if not pool:
+            break
+        xq = np.array([sp.normalize(x) for x in pool])
+        mus, sds = zip(*(g.predict(xq) for g in gps))
+        mu = np.stack(mus, axis=1)
+        sd = np.stack(sds, axis=1)
+        h = rng.standard_normal((n_mc // 2, 2))
+        z = np.vstack([h, -h])
+        scores = _mc_ehvi(front, ref, mu, sd, z)
+        x_best = pool[int(np.argmax(scores))]
+        seen.add(x_best)
+        obs.append(objective(x_best))
+    return DSEResult(method="GP+EHVI", observations=obs)
+
+
+# ---------------------------------------------------------------------------
+# NSGA-II baseline
+# ---------------------------------------------------------------------------
+
+def _fast_nondominated_sort(fs: np.ndarray) -> list:
+    n = len(fs)
+    S = [[] for _ in range(n)]
+    nd = np.zeros(n, dtype=int)
+    fronts = [[]]
+    for p in range(n):
+        for q in range(n):
+            if p == q:
+                continue
+            if (np.all(fs[p] >= fs[q]) and np.any(fs[p] > fs[q])):
+                S[p].append(q)
+            elif (np.all(fs[q] >= fs[p]) and np.any(fs[q] > fs[p])):
+                nd[p] += 1
+        if nd[p] == 0:
+            fronts[0].append(p)
+    i = 0
+    while fronts[i]:
+        nxt = []
+        for p in fronts[i]:
+            for q in S[p]:
+                nd[q] -= 1
+                if nd[q] == 0:
+                    nxt.append(q)
+        i += 1
+        fronts.append(nxt)
+    return [f for f in fronts if f]
+
+
+def _crowding(fs: np.ndarray, front: list) -> dict:
+    d = {i: 0.0 for i in front}
+    if len(front) <= 2:
+        return {i: np.inf for i in front}
+    for m in range(fs.shape[1]):
+        order = sorted(front, key=lambda i: fs[i, m])
+        d[order[0]] = d[order[-1]] = np.inf
+        span = fs[order[-1], m] - fs[order[0], m] + 1e-12
+        for j in range(1, len(order) - 1):
+            d[order[j]] += (fs[order[j + 1], m] - fs[order[j - 1], m]) / span
+    return d
+
+
+def run_nsga2(objective: Objective, n_total: int = 100, seed: int = 0,
+              init: Optional[list] = None, pop_size: int = 20,
+              p_cross: float = 0.9) -> DSEResult:
+    rng = np.random.default_rng(seed + 29)
+    obs = list(init) if init else []
+    seen = {tuple(o.x) for o in obs}
+
+    def penal(o: Observation) -> np.ndarray:
+        # constraint-domination: infeasible points sit far below
+        return (np.array(o.f) if o.f is not None
+                else np.array([-1e18, -1e18]))
+
+    pop = list(obs[-pop_size:])
+    while len(pop) < pop_size and len(obs) < n_total:
+        x = tuple(sp.random_design(rng))
+        if x in seen:
+            continue
+        seen.add(x)
+        o = objective(x)
+        obs.append(o)
+        pop.append(o)
+
+    while len(obs) < n_total:
+        fs = np.array([penal(o) for o in pop])
+        fronts = _fast_nondominated_sort(fs)
+        rank = {}
+        for r, fr in enumerate(fronts):
+            for i in fr:
+                rank[i] = r
+        crowd = {}
+        for fr in fronts:
+            crowd.update(_crowding(fs, fr))
+
+        def tournament() -> list:
+            a, b = rng.integers(len(pop)), rng.integers(len(pop))
+            if (rank[a], -crowd[a]) < (rank[b], -crowd[b]):
+                return list(pop[a].x)
+            return list(pop[b].x)
+
+        children = []
+        while len(children) < pop_size and len(obs) + len(children) < n_total:
+            p1, p2 = tournament(), tournament()
+            child = list(p1)
+            if rng.random() < p_cross:
+                for d in range(sp.N_DIMS):
+                    if rng.random() < 0.5:
+                        child[d] = p2[d]
+            for d in range(sp.N_DIMS):  # mutation
+                if rng.random() < 1.0 / sp.N_DIMS:
+                    child[d] = int(rng.integers(sp.CARDINALITIES[d]))
+            t = tuple(child)
+            if t in seen:
+                continue
+            seen.add(t)
+            children.append(t)
+        if not children:
+            # saturated: random restarts
+            x = tuple(sp.random_design(rng))
+            if x in seen:
+                continue
+            seen.add(x)
+            obs.append(objective(x))
+            continue
+        child_obs = [objective(c) for c in children]
+        obs.extend(child_obs)
+        # environmental selection on parents + children
+        union = pop + child_obs
+        fs = np.array([penal(o) for o in union])
+        fronts = _fast_nondominated_sort(fs)
+        new_pop = []
+        for fr in fronts:
+            if len(new_pop) + len(fr) <= pop_size:
+                new_pop.extend(fr)
+            else:
+                crowd = _crowding(fs, fr)
+                rest = sorted(fr, key=lambda i: -crowd[i])
+                new_pop.extend(rest[:pop_size - len(new_pop)])
+                break
+        pop = [union[i] for i in new_pop]
+    return DSEResult(method="NSGA-II", observations=obs[:n_total])
+
+
+# ---------------------------------------------------------------------------
+# MO-TPE baseline
+# ---------------------------------------------------------------------------
+
+def run_motpe(objective: Objective, n_total: int = 100, seed: int = 0,
+              init: Optional[list] = None, gamma: float = 0.3,
+              n_candidates: int = 24) -> DSEResult:
+    """Multi-objective TPE: split observations into good (near-Pareto) /
+    bad by hypervolume-contribution ranking; per-dimension categorical
+    densities l(x), g(x); propose argmax l/g."""
+    rng = np.random.default_rng(seed + 43)
+    obs = list(init) if init else []
+    seen = {tuple(o.x) for o in obs}
+    while len(obs) < n_total:
+        feas = [o for o in obs if o.f is not None]
+        if len(feas) < 6:
+            x = tuple(sp.random_design(rng))
+            if x in seen:
+                continue
+            seen.add(x)
+            obs.append(objective(x))
+            continue
+        fs = np.array([o.f for o in feas], dtype=float)
+        # rank: non-dominated first, then by scalarized distance
+        mask = pareto_mask(fs)
+        scal = (fs - fs.min(0)) / (np.ptp(fs, axis=0) + 1e-12)
+        score = scal.sum(axis=1) + mask * 10.0
+        order = np.argsort(-score)
+        n_good = max(2, int(gamma * len(feas)))
+        good = [feas[i] for i in order[:n_good]]
+        bad = [feas[i] for i in order[n_good:]] or good
+
+        def density(group: list) -> list:
+            ps = []
+            for d in range(sp.N_DIMS):
+                card = sp.CARDINALITIES[d]
+                cnt = np.ones(card)
+                for o in group:
+                    cnt[o.x[d]] += 1.0
+                ps.append(cnt / cnt.sum())
+            return ps
+
+        l_ps, g_ps = density(good), density(bad)
+        best_x, best_ratio = None, -np.inf
+        for _ in range(n_candidates):
+            x = tuple(int(rng.choice(sp.CARDINALITIES[d], p=l_ps[d]))
+                      for d in range(sp.N_DIMS))
+            if x in seen:
+                continue
+            ratio = sum(np.log(l_ps[d][x[d]]) - np.log(g_ps[d][x[d]])
+                        for d in range(sp.N_DIMS))
+            if ratio > best_ratio:
+                best_ratio, best_x = ratio, x
+        if best_x is None:
+            best_x = tuple(sp.random_design(rng))
+            if best_x in seen:
+                continue
+        seen.add(best_x)
+        obs.append(objective(best_x))
+    return DSEResult(method="MO-TPE", observations=obs)
+
+
+METHODS: dict[str, Callable] = {
+    "GP+EHVI": run_mobo,
+    "NSGA-II": run_nsga2,
+    "MO-TPE": run_motpe,
+    "Random": run_random,
+}

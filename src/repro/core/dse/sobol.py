@@ -1,0 +1,82 @@
+"""Sobol quasi-random sequence (paper: N_init = 20 Sobol points).
+
+Self-contained gray-code Sobol generator with Joe-Kuo style direction
+numbers for the first dimensions.  Direction-number rows beyond the
+well-known low dimensions remain *valid* Sobol initializers (odd m_i <
+2^i with primitive polynomials), which is sufficient for DSE
+initialization diversity (documented in DESIGN.md 8.5).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# (s, a, [m_1..m_s]) per dimension >= 2; dimension 1 is van der Corput.
+_JOE_KUO = [
+    (1, 0, [1]),
+    (2, 1, [1, 3]),
+    (3, 1, [1, 3, 1]),
+    (3, 2, [1, 1, 1]),
+    (4, 1, [1, 1, 3, 3]),
+    (4, 4, [1, 3, 5, 13]),
+    (5, 2, [1, 1, 5, 5, 17]),
+    (5, 4, [1, 1, 5, 5, 5]),
+    (5, 7, [1, 1, 7, 11, 19]),
+    (5, 11, [1, 1, 5, 1, 1]),
+    (5, 13, [1, 1, 1, 3, 11]),
+    (5, 14, [1, 3, 5, 5, 31]),
+    (6, 1, [1, 3, 3, 9, 7, 49]),
+    (6, 13, [1, 1, 1, 15, 21, 21]),
+    (6, 16, [1, 3, 1, 13, 27, 49]),
+    (6, 19, [1, 1, 1, 15, 7, 5]),
+    (6, 22, [1, 3, 1, 3, 25, 31]),
+    (6, 25, [1, 1, 5, 5, 19, 61]),
+    (7, 1, [1, 3, 7, 11, 41, 79, 113]),
+    (7, 4, [1, 3, 7, 5, 11, 27, 43]),
+    (7, 7, [1, 1, 5, 11, 27, 77, 3]),
+    (7, 8, [1, 3, 7, 3, 15, 63, 81]),
+    (7, 14, [1, 1, 7, 5, 47, 11, 55]),
+    (7, 19, [1, 3, 5, 5, 41, 43, 69]),
+]
+
+_BITS = 30
+
+
+def _direction_numbers(dim_index: int) -> np.ndarray:
+    """V_j (scaled direction integers) for one dimension."""
+    v = np.zeros(_BITS, dtype=np.int64)
+    if dim_index == 0:
+        for i in range(_BITS):
+            v[i] = 1 << (_BITS - 1 - i)
+        return v
+    s, a, m = _JOE_KUO[(dim_index - 1) % len(_JOE_KUO)]
+    m = list(m)
+    for i in range(s):
+        v[i] = m[i] << (_BITS - 1 - i)
+    for i in range(s, _BITS):
+        vi = v[i - s] ^ (v[i - s] >> s)
+        for k in range(1, s):
+            if (a >> (s - 1 - k)) & 1:
+                vi ^= v[i - k]
+        v[i] = vi
+    return v
+
+
+def sobol(n: int, dims: int, skip: int = 0) -> np.ndarray:
+    """First `n` points (after `skip`) of a `dims`-dimensional Sobol
+    sequence in [0,1)^dims, gray-code order."""
+    vs = np.stack([_direction_numbers(d) for d in range(dims)])  # [dims, BITS]
+    total = n + skip
+    x = np.zeros(dims, dtype=np.int64)
+    out = np.empty((total, dims), dtype=np.float64)
+    for i in range(total):
+        if i > 0:
+            # gray code: flip the bit of the lowest zero bit of (i-1)
+            c = 0
+            value = i - 1
+            while value & 1:
+                value >>= 1
+                c += 1
+            x ^= vs[:, c]
+        out[i] = x / float(1 << _BITS)
+    return out[skip:]

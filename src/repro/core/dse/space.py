@@ -1,0 +1,130 @@
+"""The co-design space (paper Table 2) and its integer encoding.
+
+A design point is a 17-dimensional integer vector indexing categorical
+choices; `decode` builds the NPUConfig (compute + hierarchy + quant +
+software strategy).  The off-chip hierarchy order is canonical by
+technology bandwidth class: HBM -> HBF -> GDDR -> LPDDR (matching the
+paper's Table 6 configurations).
+
+The encoded space (~7 x 10^8 raw combinations; ~10^6 after validity
+filtering) is searched by the optimizers in mobo.py / nsga2.py /
+motpe.py / random_search.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..compute import ComputeConfig, Dataflow
+from ..dataflow import BandwidthPriority, SoftwareStrategy, StoragePriority
+from ..hierarchy import MemoryHierarchy, MemoryLevel, ShorelineError
+from ..memtech import get as get_tech
+from ..npu import NPUConfig
+from ..quant.formats import QuantConfig
+
+PE_CHOICES = [(128, 128), (64, 256), (32, 512), (16, 1024),
+              (2048, 64), (2048, 128), (2048, 256), (1024, 64), (1024, 512)]
+VLEN_CHOICES = [128, 256, 512, 1024, 2048]
+SRAM3D_CHOICES = [0, 1, 2, 3, 4]
+SRAM2D_CHOICES = [0, 1]
+HBM_TYPES = ["HBM3E", "HBM4"]
+GDDR_TYPES = ["GDDR6", "GDDR7"]
+LPDDR_TYPES = ["LPDDR5X", "LPDDR6"]
+STACK_CHOICES = [0, 1, 2, 4, 8]
+LPDDR_STACK_CHOICES = [0, 1, 2, 4, 8, 16]
+ACT_FMTS = ["MXFP8", "MXFP16", "MXINT8", "MXINT16"]
+KV_FMTS = ["MXFP4", "MXFP8", "MXINT4", "MXINT8"]
+W_FMTS = ["MXFP4", "MXFP8", "MXINT4", "MXINT8"]
+STORAGE_CHOICES = [StoragePriority.ACTIVATION, StoragePriority.KV_CACHE,
+                   StoragePriority.WEIGHT, StoragePriority.EQUAL]
+DATAFLOW_CHOICES = [Dataflow.WEIGHT_STATIONARY, Dataflow.OUTPUT_STATIONARY,
+                    Dataflow.INPUT_STATIONARY]
+BW_CHOICES = [BandwidthPriority.MATRIX, BandwidthPriority.VECTOR,
+              BandwidthPriority.EQUAL]
+
+CARDINALITIES = [
+    len(PE_CHOICES), len(VLEN_CHOICES), len(SRAM3D_CHOICES),
+    len(SRAM2D_CHOICES), len(HBM_TYPES), len(STACK_CHOICES),
+    len(GDDR_TYPES), len(STACK_CHOICES), len(LPDDR_TYPES),
+    len(LPDDR_STACK_CHOICES), len(STACK_CHOICES),
+    len(ACT_FMTS), len(KV_FMTS), len(W_FMTS),
+    len(STORAGE_CHOICES), len(DATAFLOW_CHOICES), len(BW_CHOICES),
+]
+N_DIMS = len(CARDINALITIES)
+
+
+class InvalidDesign(ValueError):
+    pass
+
+
+def decode(x) -> NPUConfig:
+    """Integer vector -> NPUConfig. Raises InvalidDesign for impossible
+    combinations (no on-chip memory, no memory at all, shoreline)."""
+    x = [int(v) for v in x]
+    if len(x) != N_DIMS:
+        raise InvalidDesign(f"need {N_DIMS} genes, got {len(x)}")
+    for v, c in zip(x, CARDINALITIES):
+        if not (0 <= v < c):
+            raise InvalidDesign(f"gene out of range: {x}")
+    pe_r, pe_c = PE_CHOICES[x[0]]
+    compute = ComputeConfig(pe_rows=pe_r, pe_cols=pe_c,
+                            vlen=VLEN_CHOICES[x[1]])
+    levels: list[MemoryLevel] = []
+    n3d = SRAM3D_CHOICES[x[2]]
+    if n3d > 0:
+        levels.append(MemoryLevel(get_tech("3D-SRAM"), n3d))
+    if SRAM2D_CHOICES[x[3]]:
+        levels.append(MemoryLevel(get_tech("SRAM"), 1))
+    if not levels:
+        raise InvalidDesign("no on-chip memory")
+    # canonical off-chip order: HBM -> HBF -> GDDR -> LPDDR
+    if STACK_CHOICES[x[5]] > 0:
+        levels.append(MemoryLevel(get_tech(HBM_TYPES[x[4]]),
+                                  STACK_CHOICES[x[5]]))
+    if STACK_CHOICES[x[10]] > 0:
+        levels.append(MemoryLevel(get_tech("HBF"), STACK_CHOICES[x[10]]))
+    if STACK_CHOICES[x[7]] > 0:
+        levels.append(MemoryLevel(get_tech(GDDR_TYPES[x[6]]),
+                                  STACK_CHOICES[x[7]]))
+    if LPDDR_STACK_CHOICES[x[9]] > 0:
+        levels.append(MemoryLevel(get_tech(LPDDR_TYPES[x[8]]),
+                                  LPDDR_STACK_CHOICES[x[9]]))
+    try:
+        hierarchy = MemoryHierarchy(levels)
+    except ShorelineError as e:
+        raise InvalidDesign(str(e)) from None
+    strategy = SoftwareStrategy(
+        dataflow=DATAFLOW_CHOICES[x[15]],
+        storage_priority=STORAGE_CHOICES[x[14]],
+        bw_priority=BW_CHOICES[x[16]],
+    )
+    quant = QuantConfig(weight=W_FMTS[x[13]], activation=ACT_FMTS[x[11]],
+                        kv_cache=KV_FMTS[x[12]])
+    name = f"dse-{''.join(f'{v:x}' for v in x)}"
+    return NPUConfig(name=name, compute=compute, hierarchy=hierarchy,
+                     strategy=strategy, quant=quant)
+
+
+def normalize(x) -> np.ndarray:
+    """Integer vector -> [0,1]^d (GP input)."""
+    return np.array([(v + 0.5) / c for v, c in zip(x, CARDINALITIES)],
+                    dtype=np.float64)
+
+
+def from_unit(u) -> list[int]:
+    """[0,1)^d -> integer vector (Sobol mapping)."""
+    return [min(int(v * c), c - 1) for v, c in zip(u, CARDINALITIES)]
+
+
+def random_design(rng: np.random.Generator) -> list[int]:
+    return [int(rng.integers(c)) for c in CARDINALITIES]
+
+
+def space_cardinality() -> int:
+    out = 1
+    for c in CARDINALITIES:
+        out *= c
+    return out

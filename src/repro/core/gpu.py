@@ -1,0 +1,104 @@
+"""Analytical GPU baselines (A100 / H100) for the paper's comparisons.
+
+The paper measures vLLM on real GPUs; this environment has no CUDA, so the
+GPU baselines are *modeled* through the same roofline-style evaluator the
+NPU uses: time = max(compute, HBM traffic), power = activity-weighted TDP.
+Constants are public datasheet specs.  Documented deviation (DESIGN.md 8.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .quant.formats import QuantConfig
+from .workload import (ModelDims, Phase, Trace, layer_traffic,
+                       kv_footprint_gb, weight_footprint_gb,
+                       activation_footprint_gb)
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUSpec:
+    name: str
+    fp16_tflops: float          # dense tensor-core TFLOP/s
+    int8_tops: float            # dense int8 TOPS
+    hbm_gb: float
+    hbm_tbps: float
+    tdp_w: float
+    mfu: float = 0.45           # achievable fraction of peak in serving
+    mbu: float = 0.70           # achievable fraction of HBM bandwidth
+
+
+A100 = GPUSpec("A100-80G-SXM", fp16_tflops=312.0, int8_tops=624.0,
+               hbm_gb=80.0, hbm_tbps=2.039, tdp_w=400.0)
+H100 = GPUSpec("H100-80G-SXM", fp16_tflops=989.0, int8_tops=1979.0,
+               hbm_gb=80.0, hbm_tbps=3.35, tdp_w=700.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUPhaseResult:
+    latency_s: float
+    tokens: float
+    throughput_tps: float
+    avg_power_w: float
+    energy_per_token_j: float
+    batch: int
+
+    @property
+    def tokens_per_joule(self) -> float:
+        return 1.0 / self.energy_per_token_j if self.energy_per_token_j else 0.0
+
+
+def _phase_flops_bytes(dims: ModelDims, phase: Phase, batch: int,
+                       context: int, quant: QuantConfig) -> tuple[float, float]:
+    t = layer_traffic(dims, phase, batch, context, quant)
+    flops = 2.0 * t.total_macs() * dims.n_layers
+    # GPU traffic: weights + KV once per pass; activations have good L2 reuse
+    wb = weight_footprint_gb(dims, quant) * 1e9
+    kv_read = sum(g.k * g.n * g.count for g in t.gemms
+                  if g.b_class.name == "KV") * quant.kv_bytes * dims.n_layers
+    bytes_ = wb + kv_read + t.act_extra_bytes * dims.n_layers
+    return flops, bytes_
+
+
+def evaluate_gpu(spec: GPUSpec, dims: ModelDims, trace: Trace, phase: Phase,
+                 quant: QuantConfig, n_gpus: int = 4,
+                 batch: int | None = None) -> GPUPhaseResult:
+    """Roofline evaluation of `n_gpus` (tensor-parallel) GPUs."""
+    ctx_full = trace.prompt_tokens + trace.gen_tokens
+    cap = spec.hbm_gb * n_gpus
+    w = weight_footprint_gb(dims, quant)
+    if batch is None:
+        batch = 0
+        for b in [1, 2, 4, 8, 16, 32, 64, 128, 256]:
+            ctx = trace.prompt_tokens if phase is Phase.PREFILL else ctx_full
+            need = (w + kv_footprint_gb(dims, b, ctx, quant)
+                    + activation_footprint_gb(
+                        dims, b, trace.prompt_tokens
+                        if phase is Phase.PREFILL else 1, quant))
+            if need <= cap:
+                batch = b
+        if batch == 0:
+            raise ValueError(f"{dims.name} does not fit {n_gpus}x{spec.name}")
+
+    context = (trace.prompt_tokens if phase is Phase.PREFILL
+               else trace.prompt_tokens + trace.gen_tokens // 2)
+    flops, nbytes = _phase_flops_bytes(dims, phase, batch, context, quant)
+    int8 = quant.weight_bytes <= 1.3 and quant.activation_bytes <= 1.3
+    peak = (spec.int8_tops if int8 else spec.fp16_tflops) * 1e12 * n_gpus
+    bw = spec.hbm_tbps * 1e12 * n_gpus
+    t_compute = flops / (peak * spec.mfu)
+    t_mem = nbytes / (bw * spec.mbu)
+    latency = max(t_compute, t_mem)
+    tokens = float(batch * (trace.prompt_tokens if phase is Phase.PREFILL
+                            else 1))
+    # activity-weighted power: compute-bound phases run near TDP, memory-
+    # bound phases draw ~60% TDP (typical measured decode draw)
+    util = t_compute / latency
+    power = n_gpus * spec.tdp_w * (0.55 + 0.45 * util)
+    energy = power * latency
+    return GPUPhaseResult(
+        latency_s=latency, tokens=tokens,
+        throughput_tps=tokens / latency if latency else 0.0,
+        avg_power_w=power,
+        energy_per_token_j=energy / tokens if tokens else 0.0,
+        batch=batch)

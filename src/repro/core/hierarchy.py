@@ -1,0 +1,249 @@
+"""Hierarchical memory model: physical constraints (Eq. 1) and the
+double-buffered transfer model (Eqs. 2-5).
+
+A hierarchy is an ordered list of levels, innermost (on-chip, level 1) to
+outermost (level L).  Level 0 is the compute unit itself.  Boundary i is the
+link across which data moves from level i+1 territory into level i
+(boundary 1 = on-chip <- first off-chip, etc.).
+
+Transfer model (paper Eqs. 2-5)
+-------------------------------
+  B_i^eff   = B_i^peak - B_{i+1}^eff           (double-buffer pass-through)
+  tau_i     = lambda_i + alpha_i * x / B_i^eff
+  T_i(x)    = max( lambda_i + x / B_i^eff,     Case 1: boundary-i limited
+                   T_{i+1}((1-alpha_i) x) )    Case 2: deeper levels limited
+
+alpha_i is the fraction of the data arriving at boundary i that is already
+resident at level i; the remainder must be fetched from deeper levels, which
+overlaps with the boundary-i stream thanks to double buffering.  At the
+outermost level alpha_L == 1 by construction.
+
+The B^eff recursion can mathematically go negative when a deeper link is
+faster than the current one; physically a double-buffered level moves each
+datum across its port at most twice (in + out), so pass-through traffic can
+never cut the usable inbound bandwidth below half the port peak.  We clamp
+accordingly (documented deviation; the paper omits the guard).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from .memtech import MemKind, MemoryTechnology
+
+# Physical constants (paper Section 2.1).  The paper quotes a typical
+# 2-edge budget (2 x 33 mm) but its own Table 6 configurations (P2: HBM4 x2
+# + LPDDR5X x16) exceed it under the Table 1 footprints; we therefore
+# default to the full reticle perimeter and expose the strict bound as an
+# option (DESIGN.md section 8).
+RETICLE_LONG_MM = 33.0           # max exposure field 26 x 33 mm
+RETICLE_SHORT_MM = 26.0
+L_MEM_TWO_EDGE_MM = 2 * RETICLE_LONG_MM                     # 66 mm (strict)
+L_MEM_MAX_MM = 2 * (RETICLE_LONG_MM + RETICLE_SHORT_MM)     # 118 mm perimeter
+L_MARGIN_MM = 0.5                # inter-stack routing margin
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryLevel:
+    """A hierarchy level: one technology replicated `stacks` times."""
+
+    tech: MemoryTechnology
+    stacks: int = 1
+
+    def __post_init__(self):
+        if self.stacks < 1:
+            raise ValueError(f"stacks must be >= 1, got {self.stacks}")
+
+    @property
+    def capacity_gb(self) -> float:
+        return self.tech.capacity_gb * self.stacks
+
+    @property
+    def bandwidth_gbps(self) -> float:
+        return self.tech.bandwidth_gbps * self.stacks
+
+    @property
+    def latency_s(self) -> float:
+        return self.tech.latency_s
+
+    @property
+    def shoreline_mm(self) -> float:
+        if self.tech.kind is MemKind.ON_CHIP:
+            return 0.0
+        return (self.tech.shoreline_mm + L_MARGIN_MM) * self.stacks
+
+    def background_power_w(self) -> float:
+        return self.tech.background_power_w(self.capacity_gb)
+
+    def describe(self) -> str:
+        return f"{self.tech.name}x{self.stacks}"
+
+
+class ShorelineError(ValueError):
+    """Raised when a hierarchy violates the die-shoreline bound (Eq. 1)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferBreakdown:
+    """Result of the recursive transfer-time evaluation."""
+
+    total_s: float
+    case: str                      # "overlapped" | "bandwidth_limited" | "leaf"
+    boundary_times_s: tuple        # lambda_i + x_i / B_i^eff per boundary
+    resident_fractions: tuple      # alpha_i actually used
+
+
+class MemoryHierarchy:
+    """Ordered levels, innermost first. Validates Eq. 1 on construction."""
+
+    def __init__(self, levels: Sequence[MemoryLevel],
+                 l_mem_mm: float = L_MEM_MAX_MM,
+                 validate_shoreline: bool = True):
+        if not levels:
+            raise ValueError("hierarchy needs at least one level")
+        lv = list(levels)
+        # on-chip levels must precede off-chip levels
+        seen_off = False
+        for l in lv:
+            if l.tech.kind is MemKind.OFF_CHIP:
+                seen_off = True
+            elif seen_off:
+                raise ValueError("on-chip level found outside off-chip level")
+        self.levels: list[MemoryLevel] = lv
+        self.l_mem_mm = l_mem_mm
+        if validate_shoreline:
+            used = self.shoreline_used_mm()
+            if used > l_mem_mm + 1e-9:
+                raise ShorelineError(
+                    f"shoreline {used:.2f} mm exceeds budget {l_mem_mm:.2f} mm "
+                    f"for {self.describe()}"
+                )
+
+    # ---- static properties -------------------------------------------------
+
+    def describe(self) -> str:
+        return " | ".join(l.describe() for l in self.levels)
+
+    def shoreline_used_mm(self) -> float:
+        return sum(l.shoreline_mm for l in self.levels)
+
+    def total_capacity_gb(self) -> float:
+        return sum(l.capacity_gb for l in self.levels)
+
+    def on_chip_capacity_gb(self) -> float:
+        return sum(l.capacity_gb for l in self.levels
+                   if l.tech.kind is MemKind.ON_CHIP)
+
+    def off_chip_levels(self) -> list[MemoryLevel]:
+        return [l for l in self.levels if l.tech.kind is MemKind.OFF_CHIP]
+
+    def background_power_w(self) -> float:
+        return sum(l.background_power_w() for l in self.levels)
+
+    # ---- Eq. 2: effective bandwidths ---------------------------------------
+
+    def effective_bandwidths_gbps(self) -> list[float]:
+        """B_i^eff for each boundary i (innermost first), Eq. 2 with clamp."""
+        peaks = [l.bandwidth_gbps for l in self.levels]
+        effs = [0.0] * len(peaks)
+        deeper = 0.0
+        for i in reversed(range(len(peaks))):
+            eff = peaks[i] - deeper
+            eff = max(eff, 0.5 * peaks[i])      # double-buffer pass-through bound
+            effs[i] = eff
+            deeper = eff
+        return effs
+
+    # ---- Eqs. 3-5: recursive double-buffered transfer time ------------------
+
+    def transfer_time_s(
+        self,
+        x_bytes: float,
+        resident_fractions: Optional[Sequence[float]] = None,
+        bw_share: float = 1.0,
+    ) -> TransferBreakdown:
+        """Time to deliver `x_bytes` to the compute unit.
+
+        resident_fractions: alpha_i per level (fraction of the data arriving
+        at boundary i that is already resident at level i).  Defaults to all
+        zeros except the outermost level (weights streamed from the last
+        level).  `bw_share` scales every boundary's effective bandwidth (the
+        off-chip bandwidth-priority knob).
+        """
+        n = len(self.levels)
+        if resident_fractions is None:
+            alphas = [0.0] * (n - 1) + [1.0]
+        else:
+            alphas = list(resident_fractions)
+            if len(alphas) != n:
+                raise ValueError(f"need {n} fractions, got {len(alphas)}")
+        alphas[-1] = 1.0  # outermost level holds everything that reaches it
+        for a in alphas:
+            if not (0.0 <= a <= 1.0):
+                raise ValueError(f"fractions must be in [0,1], got {alphas}")
+
+        effs = [b * bw_share for b in self.effective_bandwidths_gbps()]
+        lams = [l.latency_s for l in self.levels]
+
+        boundary_times: list[float] = []
+
+        def rec(i: int, x: float) -> tuple[float, str]:
+            # time for all of x to cross boundary i
+            t_here = lams[i] + (x / (effs[i] * 1e9) if x > 0 else 0.0)
+            boundary_times.append(t_here)
+            if i == n - 1 or x <= 0:
+                return t_here, "leaf"
+            x_remain = (1.0 - alphas[i]) * x
+            t_deep, _ = rec(i + 1, x_remain)
+            if t_here >= t_deep:
+                return t_here, "overlapped"        # Case 1
+            return t_deep, "bandwidth_limited"     # Case 2
+
+        total, case = rec(0, float(x_bytes))
+        return TransferBreakdown(
+            total_s=total,
+            case=case,
+            boundary_times_s=tuple(boundary_times),
+            resident_fractions=tuple(alphas),
+        )
+
+    # ---- placement ----------------------------------------------------------
+
+    def place_greedy(self, sizes_gb: Sequence[float],
+                     priority: Sequence[int]) -> list[list[float]]:
+        """Greedily place data classes into levels, innermost first.
+
+        sizes_gb: size of each data class.  priority: evaluation order
+        (indices into sizes_gb, highest priority first).  Returns
+        placed[level][cls] = GB of class `cls` stored at `level`.
+        Raises ValueError if total capacity is insufficient.
+        """
+        n = len(self.levels)
+        placed = [[0.0] * len(sizes_gb) for _ in range(n)]
+        free = [l.capacity_gb for l in self.levels]
+        for cls in priority:
+            remaining = sizes_gb[cls]
+            for lvl in range(n):
+                take = min(remaining, free[lvl])
+                placed[lvl][cls] += take
+                free[lvl] -= take
+                remaining -= take
+                if remaining <= 1e-12:
+                    break
+            if remaining > 1e-12:
+                raise ValueError(
+                    f"capacity exhausted placing class {cls}: "
+                    f"{remaining:.2f} GB left over in {self.describe()}"
+                )
+        return placed
+
+    def fits(self, total_gb: float) -> bool:
+        return total_gb <= self.total_capacity_gb() + 1e-12
+
+
+def max_stacks(tech: MemoryTechnology, l_mem_mm: float = L_MEM_MAX_MM) -> int:
+    """Eq. 1: shoreline bound on the number of attachable stacks."""
+    if tech.kind is MemKind.ON_CHIP:
+        return 1_000_000  # unbounded by shoreline (thermal-bounded instead)
+    return int(l_mem_mm // (tech.shoreline_mm + L_MARGIN_MM))

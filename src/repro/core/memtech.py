@@ -1,0 +1,210 @@
+"""Unified memory-technology abstraction (paper Table 1).
+
+Every memory technology relevant to NPU co-design is described by a compact
+parameter set spanning physical integration (shoreline footprint, stacking)
+and performance (latency, capacity, bandwidth, energy).  This is the paper's
+central abstraction: heterogeneous technologies become points in a common
+(capacity, bandwidth, latency, power) space so the DSE can compose them into
+hierarchies.
+
+Units (kept explicit and consistent everywhere):
+  latency_s        seconds           I/O access latency
+  capacity_gb      GB (1e9 bytes)    per die / stack / package / chip
+  bandwidth_gbps   GB/s              peak, per die / stack / package / chip
+  shoreline_mm     mm                PHY shoreline footprint per stack
+                                     (None for on-chip technologies)
+  p_bg_mw_per_gb   mW/GB             static background power
+  e_read_pj_per_bit / e_write_pj_per_bit   pJ/bit dynamic access energy
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class MemKind(enum.Enum):
+    ON_CHIP = "on_chip"
+    OFF_CHIP = "off_chip"
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryTechnology:
+    """One row of the paper's Table 1."""
+
+    name: str
+    kind: MemKind
+    latency_s: float
+    capacity_gb: float
+    bandwidth_gbps: float
+    shoreline_mm: Optional[float]
+    p_bg_mw_per_gb: float
+    e_read_pj_per_bit: float
+    e_write_pj_per_bit: float
+    note: str = ""
+
+    # ---- derived helpers -------------------------------------------------
+
+    def background_power_w(self, capacity_gb: Optional[float] = None) -> float:
+        """Static leakage power in W for `capacity_gb` (defaults to one unit)."""
+        c = self.capacity_gb if capacity_gb is None else capacity_gb
+        return self.p_bg_mw_per_gb * c * 1e-3
+
+    def read_power_w(self, bw_gbps: float) -> float:
+        """Dynamic read power in W at a sustained read bandwidth (GB/s)."""
+        # GB/s -> bit/s: * 8e9 ; pJ/bit -> J/bit: * 1e-12
+        return self.e_read_pj_per_bit * bw_gbps * 8e9 * 1e-12
+
+    def write_power_w(self, bw_gbps: float) -> float:
+        return self.e_write_pj_per_bit * bw_gbps * 8e9 * 1e-12
+
+    def bytes_per_joule_read(self) -> float:
+        """Capacity-independent read efficiency."""
+        return 1.0 / (self.e_read_pj_per_bit * 8e-12 * 1e9)  # bytes per joule / 1e9
+
+    def capacity_per_shoreline(self) -> float:
+        """GB per shoreline mm (the HBF headline metric). inf for on-chip."""
+        if self.shoreline_mm is None or self.shoreline_mm == 0:
+            return float("inf")
+        return self.capacity_gb / self.shoreline_mm
+
+
+# ---------------------------------------------------------------------------
+# Table 1 catalog.  Ranged values in the paper ("~50-100") take midpoints;
+# each entry carries the paper's note.
+# ---------------------------------------------------------------------------
+
+SRAM_2D = MemoryTechnology(
+    name="SRAM",
+    kind=MemKind.ON_CHIP,
+    latency_s=1.5e-9,
+    capacity_gb=0.256,          # 256 MB per die
+    bandwidth_gbps=4096.0,      # 4 TB/s
+    shoreline_mm=None,
+    p_bg_mw_per_gb=30_000.0,    # 10k-50k midpoint
+    e_read_pj_per_bit=0.1,
+    e_write_pj_per_bit=0.1,
+    note="conventional 2D on-chip SRAM, one die",
+)
+
+SRAM_3D = MemoryTechnology(
+    name="3D-SRAM",
+    kind=MemKind.ON_CHIP,
+    latency_s=5e-9,
+    capacity_gb=1.0,            # 1 GB per stacked layer
+    bandwidth_gbps=8192.0,      # 8 TB/s per layer
+    shoreline_mm=None,
+    p_bg_mw_per_gb=30_000.0,
+    e_read_pj_per_bit=0.1,
+    e_write_pj_per_bit=0.1,
+    note="3D-stacked SRAM, per bonded layer (V-Cache style)",
+)
+
+HBM3E = MemoryTechnology(
+    name="HBM3E",
+    kind=MemKind.OFF_CHIP,
+    latency_s=100e-9,
+    capacity_gb=24.0,
+    bandwidth_gbps=1024.0,      # 1 TB/s per stack
+    shoreline_mm=11.0,
+    p_bg_mw_per_gb=75.0,        # 50-100 midpoint
+    e_read_pj_per_bit=3.0,
+    e_write_pj_per_bit=3.6,
+    note="8-high stack",
+)
+
+HBM4 = MemoryTechnology(
+    name="HBM4",
+    kind=MemKind.OFF_CHIP,
+    latency_s=100e-9,
+    capacity_gb=36.0,
+    bandwidth_gbps=2048.0,      # 2 TB/s per stack
+    shoreline_mm=15.0,
+    p_bg_mw_per_gb=75.0,
+    e_read_pj_per_bit=2.2,      # ~40% better energy than HBM3E
+    e_write_pj_per_bit=2.4,
+    note="12-high stack; 40% energy efficiency gain over HBM3E",
+)
+
+LPDDR5X = MemoryTechnology(
+    name="LPDDR5X",
+    kind=MemKind.OFF_CHIP,
+    latency_s=50e-9,
+    capacity_gb=16.0,
+    bandwidth_gbps=76.8,
+    shoreline_mm=4.1,
+    p_bg_mw_per_gb=7.65,
+    e_read_pj_per_bit=5.0,
+    e_write_pj_per_bit=6.5,
+    note="per package",
+)
+
+LPDDR6 = MemoryTechnology(
+    name="LPDDR6",
+    kind=MemKind.OFF_CHIP,
+    latency_s=50e-9,
+    capacity_gb=16.0,
+    bandwidth_gbps=172.8,
+    shoreline_mm=4.5,
+    p_bg_mw_per_gb=6.12,
+    e_read_pj_per_bit=3.75,
+    e_write_pj_per_bit=4.87,
+    note="20-30% more energy efficient than LPDDR5X",
+)
+
+GDDR6 = MemoryTechnology(
+    name="GDDR6",
+    kind=MemKind.OFF_CHIP,
+    latency_s=12e-9,
+    capacity_gb=2.0,
+    bandwidth_gbps=64.0,
+    shoreline_mm=11.0,
+    p_bg_mw_per_gb=100.0,
+    e_read_pj_per_bit=7.0,
+    e_write_pj_per_bit=8.8,
+    note="per chip",
+)
+
+GDDR7 = MemoryTechnology(
+    name="GDDR7",
+    kind=MemKind.OFF_CHIP,
+    latency_s=12e-9,
+    capacity_gb=3.0,
+    bandwidth_gbps=128.0,
+    shoreline_mm=11.0,
+    p_bg_mw_per_gb=120.0,
+    e_read_pj_per_bit=5.6,
+    e_write_pj_per_bit=7.0,
+    note="20% more energy efficient than GDDR6",
+)
+
+HBF = MemoryTechnology(
+    name="HBF",
+    kind=MemKind.OFF_CHIP,
+    latency_s=1e-6,
+    capacity_gb=384.0,
+    bandwidth_gbps=1024.0,      # 1 TB/s per stack
+    shoreline_mm=8.25,
+    p_bg_mw_per_gb=300.0,       # ~4x HBM3E
+    e_read_pj_per_bit=6.0,      # ~2x HBM3E
+    e_write_pj_per_bit=10.0,
+    note="High Bandwidth Flash: NAND + DRAM buffer + HB PHY",
+)
+
+CATALOG: dict[str, MemoryTechnology] = {
+    t.name: t
+    for t in [SRAM_2D, SRAM_3D, HBM3E, HBM4, LPDDR5X, LPDDR6, GDDR6, GDDR7, HBF]
+}
+
+ON_CHIP_TECHS = [t for t in CATALOG.values() if t.kind is MemKind.ON_CHIP]
+OFF_CHIP_TECHS = [t for t in CATALOG.values() if t.kind is MemKind.OFF_CHIP]
+
+
+def get(name: str) -> MemoryTechnology:
+    try:
+        return CATALOG[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown memory technology {name!r}; known: {sorted(CATALOG)}"
+        ) from None

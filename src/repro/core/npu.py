@@ -1,0 +1,126 @@
+"""NPU system configuration: compute + memory hierarchy + software strategy
++ quantization.  One point in the co-design space (paper Table 2 / Fig. 2)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .compute import ComputeConfig
+from .dataflow import SoftwareStrategy
+from .hierarchy import MemoryHierarchy, MemoryLevel
+from .memtech import get as get_tech
+from .power import system_tdp_w
+from .quant.formats import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class NPUConfig:
+    name: str
+    compute: ComputeConfig
+    hierarchy: MemoryHierarchy
+    strategy: SoftwareStrategy
+    quant: QuantConfig
+
+    def tdp_w(self) -> float:
+        return system_tdp_w(self.compute, self.hierarchy)
+
+    def describe(self) -> str:
+        return (f"{self.name}: PE {self.compute.pe_rows}x{self.compute.pe_cols}"
+                f" VLEN {self.compute.vlen} | {self.hierarchy.describe()}"
+                f" | {self.strategy.describe()} | {self.quant.describe()}")
+
+
+def make_hierarchy(spec: list[tuple[str, int]],
+                   validate_shoreline: bool = True) -> MemoryHierarchy:
+    """Build a hierarchy from [('3D-SRAM', 3), ('HBM4', 2), ('HBF', 1)]."""
+    levels = [MemoryLevel(get_tech(name), stacks) for name, stacks in spec]
+    return MemoryHierarchy(levels, validate_shoreline=validate_shoreline)
+
+
+def baseline_npu(quant: Optional[QuantConfig] = None) -> NPUConfig:
+    """The paper's Base configuration (Table 6): PE 2048x128, VLEN 2048,
+    SRAM x1 on-chip, HBM3E x4 off-chip, Equal/OS/Equal software."""
+    from .compute import Dataflow
+    from .dataflow import BandwidthPriority, StoragePriority
+    return NPUConfig(
+        name="Base",
+        compute=ComputeConfig(pe_rows=2048, pe_cols=128, vlen=2048),
+        hierarchy=make_hierarchy([("SRAM", 1), ("HBM3E", 4)]),
+        strategy=SoftwareStrategy(
+            dataflow=Dataflow.OUTPUT_STATIONARY,
+            storage_priority=StoragePriority.EQUAL,
+            bw_priority=BandwidthPriority.EQUAL,
+        ),
+        quant=quant or QuantConfig(),
+    )
+
+
+def p1_npu() -> NPUConfig:
+    """Paper Table 6 P1 (prefill-optimized)."""
+    from .compute import Dataflow
+    from .dataflow import BandwidthPriority, StoragePriority
+    return NPUConfig(
+        name="P1",
+        compute=ComputeConfig(pe_rows=2048, pe_cols=256, vlen=2048),
+        hierarchy=make_hierarchy([("3D-SRAM", 3), ("HBM4", 2), ("HBF", 1)]),
+        strategy=SoftwareStrategy(
+            dataflow=Dataflow.WEIGHT_STATIONARY,
+            storage_priority=StoragePriority.ACTIVATION,
+            bw_priority=BandwidthPriority.MATRIX,
+        ),
+        quant=QuantConfig(),
+    )
+
+
+def d1_npu() -> NPUConfig:
+    """Paper Table 6 D1 (decode-optimized)."""
+    from .compute import Dataflow
+    from .dataflow import BandwidthPriority, StoragePriority
+    return NPUConfig(
+        name="D1",
+        compute=ComputeConfig(pe_rows=2048, pe_cols=64, vlen=1024),
+        hierarchy=make_hierarchy([("SRAM", 1), ("HBM3E", 2), ("HBF", 1)]),
+        strategy=SoftwareStrategy(
+            dataflow=Dataflow.WEIGHT_STATIONARY,
+            storage_priority=StoragePriority.ACTIVATION,
+            bw_priority=BandwidthPriority.MATRIX,
+        ),
+        quant=QuantConfig(),
+    )
+
+
+def p2_npu() -> NPUConfig:
+    """Paper Table 6 P2 (prefill, efficiency-leaning)."""
+    from .compute import Dataflow
+    from .dataflow import BandwidthPriority, StoragePriority
+    return NPUConfig(
+        name="P2",
+        compute=ComputeConfig(pe_rows=1024, pe_cols=512, vlen=2048),
+        hierarchy=make_hierarchy([("3D-SRAM", 2), ("HBM4", 2),
+                                  ("LPDDR5X", 8), ("LPDDR5X", 8)]),
+        strategy=SoftwareStrategy(
+            dataflow=Dataflow.WEIGHT_STATIONARY,
+            storage_priority=StoragePriority.EQUAL,
+            bw_priority=BandwidthPriority.EQUAL,
+        ),
+        quant=QuantConfig(),
+    )
+
+
+def d2_npu() -> NPUConfig:
+    """Paper Table 6 D2 (decode, efficiency-leaning)."""
+    from .compute import Dataflow
+    from .dataflow import BandwidthPriority, StoragePriority
+    return NPUConfig(
+        name="D2",
+        compute=ComputeConfig(pe_rows=1024, pe_cols=64, vlen=1024),
+        hierarchy=make_hierarchy([("3D-SRAM", 1), ("HBM4", 2), ("HBF", 2),
+                                  ("LPDDR5X", 8)]),
+        strategy=SoftwareStrategy(
+            dataflow=Dataflow.WEIGHT_STATIONARY,
+            storage_priority=StoragePriority.ACTIVATION,
+            bw_priority=BandwidthPriority.MATRIX,
+        ),
+        quant=QuantConfig(),
+    )

@@ -1,0 +1,380 @@
+"""End-to-end analytical performance/power model.
+
+Combines the PLENA-style compute model (compute.py), the hierarchical
+double-buffered memory model (hierarchy.py), and the data-movement model
+(dataflow.py) to evaluate one NPU configuration on one workload phase —
+the `f(x)` that the DSE optimizes.
+
+Traffic derivation: every GEMM operand is routed through the memory
+hierarchy according to (a) its data class's placement (storage priority)
+and (b) the dataflow strategy's re-streaming multiplier.  Re-streamed
+operands that the storage priority pinned on-chip only consume on-chip
+bandwidth — this coupling is the paper's core co-design observation
+(Table 4/5: WS + activation-priority wins prefill).
+
+Phase evaluation (paper Section 4.3):
+  * PREFILL: single large batch; per-layer time = max(compute, matrix
+    stream, vector stream) (double-buffered overlap); TTFT and token/J.
+  * DECODE: batch maximized under the capacity constraint (weights + KV at
+    full context + activations must fit); per-step time at the average
+    context length; TPS and token/J.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .compute import (Dataflow, dataflow_traffic_multipliers, gemm_cycles,
+                      vector_seconds)
+from .dataflow import ACTS, KV, WEIGHTS, Placement, place_data
+from .hierarchy import MemoryHierarchy
+from .memtech import MemKind
+from .npu import NPUConfig
+from .power import E_MAC_PJ, E_VECTOR_OP_PJ, P_BASE_W, compute_power_w
+from .quant.formats import QuantConfig
+from .workload import (DataClass, Family, LayerTraffic, ModelDims, Phase,
+                       Trace, activation_footprint_gb, kv_footprint_gb,
+                       layer_traffic, lm_head_traffic, weight_footprint_gb)
+
+_CLS_INDEX = {DataClass.WEIGHT: WEIGHTS, DataClass.ACT: ACTS, DataClass.KV: KV}
+
+_ALL_DATAFLOWS = (Dataflow.WEIGHT_STATIONARY, Dataflow.INPUT_STATIONARY,
+                  Dataflow.OUTPUT_STATIONARY)
+
+
+def _gemm_dataflow(npu: NPUConfig, g) -> "Dataflow":
+    """The software strategy's dataflow governs weight-bearing GEMMs;
+    attention-internal GEMMs (scores/PV — no weight operand) run as a
+    fused kernel mapped for best array utilization."""
+    if g.b_class is DataClass.WEIGHT:
+        return npu.strategy.dataflow
+    return min(_ALL_DATAFLOWS,
+               key=lambda df: gemm_cycles(npu.compute, g.m, g.k, g.n, df,
+                                          count=g.count).cycles)
+
+
+class InfeasibleConfig(ValueError):
+    """Configuration cannot run the workload (capacity/shoreline/etc.)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseResult:
+    phase: Phase
+    batch: int
+    latency_s: float            # TTFT (prefill) or per-step latency (decode)
+    tokens: float               # tokens produced/processed per `latency_s`
+    throughput_tps: float
+    avg_power_w: float
+    energy_per_token_j: float
+    compute_time_s: float
+    memory_time_s: float
+    bottleneck: str             # "compute" | "matrix_mem" | "vector_mem"
+    mem_breakdown: dict
+
+    @property
+    def tokens_per_joule(self) -> float:
+        return 1.0 / self.energy_per_token_j if self.energy_per_token_j else 0.0
+
+
+SCRATCH = 3   # extra stream index: on-chip-only fused intermediates
+
+
+def class_traffic_bytes(npu: NPUConfig, traffic: LayerTraffic,
+                        placement: Placement) -> dict:
+    """Bytes streamed per data class, with capacity-aware dataflow
+    inflation.
+
+    The storage-priority placement decides how much on-chip staging each
+    class gets, which sets the re-stream factors.  Re-reads of a panel
+    whose chunk fits its on-chip staging never leave the chip: they are
+    accounted to the SCRATCH (on-chip-only) stream instead of the
+    hierarchy stream — this is the coupling that makes WS + activation-
+    priority the prefill winner (paper Table 4) and lets larger on-chip
+    capacity convert re-read traffic into cheap on-chip bandwidth
+    (paper Table 5).
+    """
+    q = npu.quant
+    bytes_of = {
+        DataClass.WEIGHT: q.weight_bytes,
+        DataClass.ACT: q.activation_bytes,
+        DataClass.KV: q.kv_bytes,
+        DataClass.SCRATCH: q.activation_bytes,
+    }
+    h = npu.hierarchy
+    min_stage = npu.compute.n_pe * q.activation_bytes
+    stage = {
+        DataClass.WEIGHT: placement.on_chip_bytes(WEIGHTS, h),
+        DataClass.ACT: placement.on_chip_bytes(ACTS, h),
+        DataClass.KV: placement.on_chip_bytes(KV, h),
+        DataClass.SCRATCH: max(placement.on_chip_bytes(ACTS, h), min_stage),
+    }
+    out = {WEIGHTS: 0.0, ACTS: 0.0, KV: 0.0, SCRATCH: 0.0}
+
+    def idx(cls: DataClass) -> int:
+        return SCRATCH if cls is DataClass.SCRATCH else _CLS_INDEX[cls]
+
+    def add(cls: DataClass, first_bytes: float, reread_bytes: float,
+            panel_bytes: float):
+        """First pass goes through the class's hierarchy path.  Re-reads
+        hit on-chip memory only for producer-resident classes (ACT /
+        SCRATCH: activations are produced on-chip and can stay while
+        their panel fits).  Weight/KV re-reads always traverse the
+        hierarchy: static placement pins *which* bytes live on-chip, it
+        is not a rotating per-layer staging buffer."""
+        out[idx(cls)] += first_bytes
+        if reread_bytes <= 0:
+            return
+        if cls is DataClass.SCRATCH or (
+                cls is DataClass.ACT and panel_bytes <= stage[cls] + 1e-9):
+            out[SCRATCH] += reread_bytes
+        else:
+            out[idx(cls)] += reread_bytes
+
+    for g in traffic.gemms:
+        a_mult, b_mult = dataflow_traffic_multipliers(
+            npu.compute, g.m, g.k, g.n, _gemm_dataflow(npu, g),
+            bytes_of[g.a_class], bytes_of[g.b_class], bytes_of[g.out_class],
+            stage[g.a_class], stage[g.b_class], stage[g.out_class])
+        a_once = g.m * g.k * g.count * bytes_of[g.a_class]
+        b_once = g.k * g.n * g.count * bytes_of[g.b_class]
+        a_panel = g.m * g.k * bytes_of[g.a_class] / max(1, g.a_chunks)
+        b_panel = g.k * g.n * bytes_of[g.b_class]
+        add(g.a_class, a_once, a_once * (a_mult - 1.0), a_panel)
+        add(g.b_class, b_once, b_once * (b_mult - 1.0), b_panel)
+        out[idx(g.out_class)] += g.m * g.n * g.count * bytes_of[g.out_class]
+    out[ACTS] += traffic.act_extra_bytes
+    out[KV] += traffic.kv_write_bytes
+    return out
+
+
+def _layer_time_and_energy(npu: NPUConfig, traffic: LayerTraffic,
+                           placement: Placement) -> tuple[float, float, str, dict]:
+    """One layer pass: (seconds, joules, bottleneck, breakdown)."""
+    h = npu.hierarchy
+    mx_share, vec_share = npu.strategy.bw_split()
+
+    # --- compute time ------------------------------------------------------
+    # narrow-precision datapaths execute more MACs per PE per cycle
+    t_gemm = sum(
+        gemm_cycles(npu.compute, g.m, g.k, g.n, _gemm_dataflow(npu, g),
+                    count=g.count).seconds
+        for g in traffic.gemms
+    ) / npu.quant.matrix_rate_scale
+    t_vec = (vector_seconds(npu.compute, traffic.vector_elems)
+             / npu.quant.vector_rate_scale)
+    t_compute = max(t_gemm, t_vec)   # matrix & vector engines run in parallel
+
+    # --- memory time (per stream, double-buffered against compute) ---------
+    cls_bytes = class_traffic_bytes(npu, traffic, placement)
+    t_streams = {}
+    for cls, name, share in ((WEIGHTS, "weights", mx_share),
+                             (KV, "kv", mx_share),
+                             (ACTS, "acts", vec_share)):
+        nbytes = cls_bytes[cls]
+        if nbytes <= 0:
+            t_streams[name] = 0.0
+            continue
+        alphas = placement.resident_fraction_chain(cls)
+        br = h.transfer_time_s(nbytes, resident_fractions=alphas,
+                               bw_share=share)
+        t_streams[name] = br.total_s
+    # scratch never leaves the chip: charged at full on-chip bandwidth
+    # (the off-chip BW-priority split does not apply on-chip)
+    scratch_bytes = cls_bytes[SCRATCH]
+    onchip_bw = sum(l.bandwidth_gbps for l in h.levels
+                    if l.tech.kind is MemKind.ON_CHIP) * 1e9
+    onchip_bw = max(onchip_bw, h.levels[0].bandwidth_gbps * 1e9)
+    t_streams["scratch"] = (scratch_bytes / onchip_bw
+                            if scratch_bytes > 0 else 0.0)
+    t_matrix = t_streams["weights"] + t_streams["kv"]
+    t_vector_mem = t_streams["acts"] + t_streams["scratch"]
+
+    # double buffering overlaps compute with both streams (Section 2.2)
+    t_layer = max(t_compute, t_matrix, t_vector_mem)
+    if t_layer == t_compute:
+        bneck = "compute"
+    elif t_layer == t_matrix:
+        bneck = "matrix_mem"
+    else:
+        bneck = "vector_mem"
+
+    # --- energy -------------------------------------------------------------
+    macs = traffic.total_macs()
+    e_compute = (E_MAC_PJ * macs + E_VECTOR_OP_PJ * traffic.vector_elems) * 1e-12
+    # memory dynamic energy: each class's bytes are read at the levels that
+    # hold them (placement fractions); KV writes and activation spills write.
+    e_mem = 0.0
+    for cls in (WEIGHTS, ACTS, KV):
+        nbytes = cls_bytes[cls]
+        if nbytes <= 0:
+            continue
+        wr_frac = 0.5 if cls == ACTS else (
+            min(1.0, traffic.kv_write_bytes / nbytes) if cls == KV else 0.0)
+        fr = [lv[cls] for lv in placement.fractions]
+        for level, f in zip(h.levels, fr):
+            bits = nbytes * f * 8.0
+            e_mem += level.tech.e_read_pj_per_bit * bits * (1 - wr_frac) * 1e-12
+            e_mem += level.tech.e_write_pj_per_bit * bits * wr_frac * 1e-12
+    # scratch: on-chip reads+writes at the innermost level's energy
+    if scratch_bytes > 0:
+        t0 = h.levels[0].tech
+        e_mem += ((t0.e_read_pj_per_bit + t0.e_write_pj_per_bit) / 2.0
+                  * scratch_bytes * 8.0 * 1e-12)
+    static_w = h.background_power_w() + compute_power_w(npu.compute, 0.0, 0.0)
+    e_static = static_w * t_layer
+    breakdown = {"compute_s": t_compute, "matrix_s": t_matrix,
+                 "vector_s": t_vector_mem, "scratch_s": t_streams["scratch"],
+                 "bytes_weights": cls_bytes[WEIGHTS],
+                 "bytes_acts": cls_bytes[ACTS],
+                 "bytes_kv": cls_bytes[KV],
+                 "bytes_scratch": scratch_bytes}
+    return t_layer, e_compute + e_mem + e_static, bneck, breakdown
+
+
+def _placement_for(npu: NPUConfig, dims: ModelDims, batch: int,
+                   context: int, q_len: int) -> Placement:
+    sizes = [
+        weight_footprint_gb(dims, npu.quant),
+        activation_footprint_gb(dims, batch, q_len, npu.quant),
+        kv_footprint_gb(dims, batch, context, npu.quant),
+    ]
+    try:
+        return place_data(npu.hierarchy, npu.strategy, sizes)
+    except ValueError as e:
+        raise InfeasibleConfig(str(e)) from None
+
+
+def max_prefill_batch(npu: NPUConfig, dims: ModelDims, trace: Trace,
+                      batch_choices: Optional[list[int]] = None) -> int:
+    """Largest prefill batch fitting weights + prompt-KV + activations.
+
+    This reproduces the paper's Table 6 'Batch' column (Base 1, P1 16 ...):
+    prefill batches amortize weight streaming across requests when the
+    hierarchy has the capacity for their KV and activations.
+    """
+    choices = batch_choices or [1, 2, 4, 8, 16, 32, 64, 128]
+    S = trace.prompt_tokens
+    w = weight_footprint_gb(dims, npu.quant)
+    cap = npu.hierarchy.total_capacity_gb()
+    best = 0
+    for b in choices:
+        need = (w + kv_footprint_gb(dims, b, S, npu.quant)
+                + activation_footprint_gb(dims, b, S, npu.quant))
+        if need <= cap:
+            best = b
+    if best == 0:
+        raise InfeasibleConfig(
+            f"prefill infeasible: weights {w:.1f} GB + batch-1 state exceed "
+            f"capacity {cap:.1f} GB ({npu.hierarchy.describe()})")
+    return best
+
+
+def evaluate_prefill(npu: NPUConfig, dims: ModelDims, trace: Trace,
+                     batch: Optional[int] = None) -> PhaseResult:
+    """Prefill-only throughput at the capacity-maximal batch."""
+    S = trace.prompt_tokens
+    batch = batch if batch is not None else max_prefill_batch(npu, dims, trace)
+    placement = _placement_for(npu, dims, batch, S, S)
+    traffic = layer_traffic(dims, Phase.PREFILL, batch, S, npu.quant)
+    t_layer, e_layer, bneck, bd = _layer_time_and_energy(npu, traffic, placement)
+    n_layers = dims.n_layers + dims.n_encoder_layers
+    head = lm_head_traffic(dims, batch, 1, npu.quant)
+    t_head, e_head, _, _ = _layer_time_and_energy(npu, head, placement)
+    latency = t_layer * n_layers + t_head
+    energy = e_layer * n_layers + e_head
+    tokens = float(batch * S)
+    power = energy / latency if latency > 0 else 0.0
+    return PhaseResult(
+        phase=Phase.PREFILL, batch=batch, latency_s=latency, tokens=tokens,
+        throughput_tps=tokens / latency if latency else 0.0,
+        avg_power_w=power,
+        energy_per_token_j=energy / tokens if tokens else 0.0,
+        compute_time_s=bd["compute_s"] * n_layers,
+        memory_time_s=max(bd["matrix_s"], bd["vector_s"]) * n_layers,
+        bottleneck=bneck, mem_breakdown=bd,
+    )
+
+
+def max_decode_batch(npu: NPUConfig, dims: ModelDims, trace: Trace,
+                     batch_choices: Optional[list[int]] = None) -> int:
+    """Largest batch whose weights+KV+activations fit (Section 4.3)."""
+    choices = batch_choices or [1, 2, 4, 8, 16, 32, 64, 128, 256, 512]
+    context = trace.prompt_tokens + trace.gen_tokens
+    w = weight_footprint_gb(dims, npu.quant)
+    cap = npu.hierarchy.total_capacity_gb()
+    best = 0
+    for b in choices:
+        need = (w + kv_footprint_gb(dims, b, context, npu.quant)
+                + activation_footprint_gb(dims, b, 1, npu.quant))
+        if need <= cap:
+            best = b
+    if best == 0:
+        raise InfeasibleConfig(
+            f"decode infeasible: weights alone {w:.1f} GB vs capacity "
+            f"{cap:.1f} GB ({npu.hierarchy.describe()})")
+    return best
+
+
+def evaluate_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
+                    batch: Optional[int] = None,
+                    context_override: Optional[int] = None) -> PhaseResult:
+    """Decode-only: max batch under capacity, per-step latency at the
+    average context length, sustained TPS and token/J."""
+    b = batch if batch is not None else max_decode_batch(npu, dims, trace)
+    ctx = (context_override if context_override is not None
+           else trace.prompt_tokens + trace.gen_tokens // 2)
+    if dims.family is Family.DLLM:
+        return _evaluate_dllm_decode(npu, dims, trace, b)
+    placement = _placement_for(npu, dims, b,
+                               trace.prompt_tokens + trace.gen_tokens, 1)
+    traffic = layer_traffic(dims, Phase.DECODE, b, ctx, npu.quant)
+    t_layer, e_layer, bneck, bd = _layer_time_and_energy(npu, traffic, placement)
+    n_layers = dims.n_layers
+    head = lm_head_traffic(dims, b, 1, npu.quant)
+    t_head, e_head, _, _ = _layer_time_and_energy(npu, head, placement)
+    step = t_layer * n_layers + t_head
+    energy = e_layer * n_layers + e_head
+    tokens = float(b)
+    power = energy / step if step else 0.0
+    return PhaseResult(
+        phase=Phase.DECODE, batch=b, latency_s=step, tokens=tokens,
+        throughput_tps=tokens / step if step else 0.0,
+        avg_power_w=power,
+        energy_per_token_j=energy / tokens if tokens else 0.0,
+        compute_time_s=bd["compute_s"] * n_layers,
+        memory_time_s=max(bd["matrix_s"], bd["vector_s"]) * n_layers,
+        bottleneck=bneck, mem_breakdown=bd,
+    )
+
+
+def _evaluate_dllm_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
+                          batch: int) -> PhaseResult:
+    """Diffusion LM decode (Section 5.4.1): each denoise step processes the
+    full sequence; steps per generated token given by the model."""
+    S = trace.prompt_tokens + trace.gen_tokens
+    placement = _placement_for(npu, dims, batch, S, S)
+    traffic = layer_traffic(dims, Phase.PREFILL, batch, S, npu.quant)
+    t_layer, e_layer, bneck, bd = _layer_time_and_energy(npu, traffic, placement)
+    steps = max(1.0, trace.gen_tokens * dims.diffusion_steps_per_token)
+    t_step = t_layer * dims.n_layers
+    e_step = e_layer * dims.n_layers
+    total_t = t_step * steps
+    total_e = e_step * steps
+    tokens = float(batch * trace.gen_tokens)
+    return PhaseResult(
+        phase=Phase.DECODE, batch=batch, latency_s=total_t, tokens=tokens,
+        throughput_tps=tokens / total_t if total_t else 0.0,
+        avg_power_w=total_e / total_t if total_t else 0.0,
+        energy_per_token_j=total_e / tokens if tokens else 0.0,
+        compute_time_s=bd["compute_s"] * dims.n_layers * steps,
+        memory_time_s=max(bd["matrix_s"], bd["vector_s"]) * dims.n_layers * steps,
+        bottleneck=bneck, mem_breakdown=bd,
+    )
+
+
+def evaluate(npu: NPUConfig, dims: ModelDims, trace: Trace, phase: Phase,
+             batch: Optional[int] = None) -> PhaseResult:
+    if phase is Phase.PREFILL:
+        return evaluate_prefill(npu, dims, trace, batch=batch)
+    return evaluate_decode(npu, dims, trace, batch=batch)

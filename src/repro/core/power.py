@@ -1,0 +1,81 @@
+"""Power models (paper Eq. 6 + parametric compute power).
+
+Memory power (exact Eq. 6):
+    P(C, BW_r, BW_w) = p_bg * C + e_read * BW_r + e_write * BW_w
+
+Compute power: the paper fits parametric models to Synopsys DC / 7nm
+OpenROAD synthesis samples of PLENA components.  Synthesis is unavailable
+here, so we keep the same parametric *form* — static leakage linear in PE
+count, dynamic energy linear in executed MACs / vector ops, plus a fixed
+SoC base — with coefficients calibrated so the paper's reported operating
+points hold (Base config ~= 300 W TDP / ~246 W average, Table 6).  This is
+a documented deviation (DESIGN.md section 8.1); all paper claims we
+reproduce are *relative* so the calibration preserves them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from .compute import ComputeConfig
+from .hierarchy import MemoryHierarchy
+
+# ---------------------------------------------------------------------------
+# Calibrated compute-power coefficients (7 nm class).
+# e_mac: energy per INT8/FP8-class MAC including local register movement.
+# ---------------------------------------------------------------------------
+E_MAC_PJ = 0.35            # pJ per MAC (datapath + local SRAM traffic)
+P_PE_STATIC_MW = 0.10      # mW leakage per PE
+E_VECTOR_OP_PJ = 1.20      # pJ per vector lane-op
+P_VECTOR_STATIC_MW = 0.30  # mW leakage per vector lane
+P_BASE_W = 25.0            # NoC + controllers + PHY logic base
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerBreakdown:
+    compute_w: float
+    memory_background_w: float
+    memory_dynamic_w: float
+
+    @property
+    def total_w(self) -> float:
+        return self.compute_w + self.memory_background_w + self.memory_dynamic_w
+
+
+def memory_power_w(hierarchy: MemoryHierarchy,
+                   read_gbps_per_level: list[float],
+                   write_gbps_per_level: list[float]) -> tuple[float, float]:
+    """Eq. 6 summed over levels -> (background_w, dynamic_w)."""
+    bg = hierarchy.background_power_w()
+    dyn = 0.0
+    for level, br, bw in zip(hierarchy.levels, read_gbps_per_level,
+                             write_gbps_per_level):
+        dyn += level.tech.read_power_w(br) + level.tech.write_power_w(bw)
+    return bg, dyn
+
+
+def compute_power_w(cfg: ComputeConfig, mac_rate_per_s: float,
+                    vector_rate_per_s: float = 0.0) -> float:
+    """Parametric compute power at a sustained MAC/vector-op rate."""
+    static = (P_PE_STATIC_MW * cfg.n_pe
+              + P_VECTOR_STATIC_MW * cfg.vlen) * 1e-3
+    dynamic = (E_MAC_PJ * mac_rate_per_s
+               + E_VECTOR_OP_PJ * vector_rate_per_s) * 1e-12
+    return P_BASE_W + static + dynamic
+
+
+def compute_tdp_w(cfg: ComputeConfig) -> float:
+    """Peak compute power (100% activity)."""
+    return compute_power_w(cfg, cfg.peak_macs_per_s, cfg.peak_vector_ops_per_s)
+
+
+def system_tdp_w(cfg: ComputeConfig, hierarchy: MemoryHierarchy) -> float:
+    """Thermal design power: all units at peak simultaneously."""
+    bg = hierarchy.background_power_w()
+    dyn = 0.0
+    for level in hierarchy.levels:
+        # peak: full-bandwidth reads (reads dominate inference traffic; use
+        # the more conservative of read/write energy)
+        e = max(level.tech.e_read_pj_per_bit, level.tech.e_write_pj_per_bit)
+        dyn += e * level.bandwidth_gbps * 8e9 * 1e-12
+    return compute_tdp_w(cfg) + bg + dyn

@@ -1,0 +1,193 @@
+"""Microscaling (MX) data-format definitions and bit-exact JAX emulation.
+
+The paper's accuracy-aware quantization simulation supports the full MX
+family: a block of B elements shares one scale with S exponent bits, each
+element stores either an INT (MXINT: sign + mantissa) or a minifloat
+(MXFP: sign + E exponent bits + M mantissa bits).  Parameterization is
+(M, E, S, B) following the paper / MASE.
+
+`quantize`/`dequantize` are pure-JAX, differentiable-through (straight-
+through on round) emulations used both by the accuracy proxy and by the
+quantized-KV-cache serving path; `bits_per_element` feeds the analytic
+traffic/storage model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MXFormat:
+    name: str
+    mantissa_bits: int        # M: mantissa bits (excl. sign, excl. implicit 1)
+    exponent_bits: int        # E: per-element exponent bits (0 => MXINT)
+    scale_bits: int = 8       # S: shared scale exponent bits
+    block_size: int = 32      # B: elements per shared scale
+
+    @property
+    def is_int(self) -> bool:
+        return self.exponent_bits == 0
+
+    @property
+    def element_bits(self) -> int:
+        # sign + mantissa (+ exponent for fp)
+        return 1 + self.mantissa_bits + self.exponent_bits
+
+    @property
+    def bits_per_element(self) -> float:
+        return self.element_bits + self.scale_bits / self.block_size
+
+    @property
+    def bytes_per_element(self) -> float:
+        return self.bits_per_element / 8.0
+
+
+# Catalog used in Table 2 / Table 3. Element bit budget matches the names:
+# MXINTk: 1 sign + (k-1) mantissa; MXFPk uses OCP-style splits.
+FORMATS: dict[str, MXFormat] = {
+    "MXINT4": MXFormat("MXINT4", mantissa_bits=3, exponent_bits=0),
+    "MXINT8": MXFormat("MXINT8", mantissa_bits=7, exponent_bits=0),
+    "MXINT16": MXFormat("MXINT16", mantissa_bits=15, exponent_bits=0),
+    "MXFP4": MXFormat("MXFP4", mantissa_bits=1, exponent_bits=2),
+    "MXFP8": MXFormat("MXFP8", mantissa_bits=3, exponent_bits=4),   # e4m3
+    "MXFP16": MXFormat("MXFP16", mantissa_bits=10, exponent_bits=5),
+    "FP16": MXFormat("FP16", mantissa_bits=10, exponent_bits=5, scale_bits=0,
+                     block_size=1),
+    "BF16": MXFormat("BF16", mantissa_bits=7, exponent_bits=8, scale_bits=0,
+                     block_size=1),
+}
+
+
+def get(name: str) -> MXFormat:
+    try:
+        return FORMATS[name]
+    except KeyError:
+        raise KeyError(f"unknown MX format {name!r}; known: {sorted(FORMATS)}")
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact emulation
+# ---------------------------------------------------------------------------
+
+def _blockify(x: jnp.ndarray, block: int) -> tuple[jnp.ndarray, int]:
+    """Reshape the trailing axis into blocks, padding with zeros."""
+    *lead, last = x.shape
+    pad = (-last) % block
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * len(lead) + [(0, pad)])
+    return x.reshape(*lead, -1, block), pad
+
+
+def _shared_scale(blocks: jnp.ndarray, fmt: MXFormat) -> jnp.ndarray:
+    """Power-of-two shared scale per block (S exponent bits)."""
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    amax = jnp.where(amax == 0, 1.0, amax)
+    if fmt.is_int:
+        qmax = 2.0 ** fmt.mantissa_bits - 1.0  # symmetric int range
+        target = qmax
+    else:
+        # largest representable minifloat magnitude
+        emax = 2 ** (fmt.exponent_bits - 1) - 1
+        target = (2.0 - 2.0 ** (-fmt.mantissa_bits)) * 2.0 ** emax
+    # scale = 2^ceil(log2(amax/target)), clipped to the S-bit exponent range
+    exp = jnp.ceil(jnp.log2(amax / target))
+    if fmt.scale_bits > 0:
+        lim = 2.0 ** (fmt.scale_bits - 1) - 1
+        exp = jnp.clip(exp, -lim, lim)
+    return 2.0 ** exp
+
+
+def _quantize_int(v: jnp.ndarray, fmt: MXFormat) -> jnp.ndarray:
+    qmax = 2.0 ** fmt.mantissa_bits - 1.0
+    return jnp.clip(jnp.round(v), -qmax, qmax)
+
+
+def _quantize_fp(v: jnp.ndarray, fmt: MXFormat) -> jnp.ndarray:
+    """Round to the nearest (E, M) minifloat value (with denormals)."""
+    emax = 2 ** (fmt.exponent_bits - 1) - 1
+    emin = 1 - emax
+    maxval = (2.0 - 2.0 ** (-fmt.mantissa_bits)) * 2.0 ** emax
+    sign = jnp.sign(v)
+    mag = jnp.abs(v)
+    mag = jnp.minimum(mag, maxval)
+    # exponent of each value, clamped into [emin, emax]
+    e = jnp.floor(jnp.log2(jnp.where(mag == 0, 1.0, mag)))
+    e = jnp.clip(e, emin, emax)
+    step = 2.0 ** (e - fmt.mantissa_bits)
+    q = jnp.round(mag / step) * step
+    return sign * q
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_name",))
+def quantize_dequantize(x: jnp.ndarray, fmt_name: str) -> jnp.ndarray:
+    """Fake-quantize x through the MX format (same shape/dtype out)."""
+    fmt = get(fmt_name)
+    orig_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if fmt.block_size == 1 and fmt.scale_bits == 0:
+        # plain fp16/bf16 style cast
+        out = _quantize_fp(xf, fmt) if not fmt.is_int else _quantize_int(xf, fmt)
+        return out.astype(orig_dtype)
+    last = x.shape[-1]
+    blocks, pad = _blockify(xf, fmt.block_size)
+    scale = _shared_scale(blocks, fmt)
+    v = blocks / scale
+    q = _quantize_int(v, fmt) if fmt.is_int else _quantize_fp(v, fmt)
+    out = (q * scale).reshape(*x.shape[:-1], -1)
+    out = out[..., :last]
+    return out.astype(orig_dtype)
+
+
+def quantization_error(x: jnp.ndarray, fmt_name: str) -> float:
+    """Relative L2 error of fake-quantization (accuracy-proxy building block)."""
+    q = quantize_dequantize(x, fmt_name)
+    num = jnp.linalg.norm((q - x).astype(jnp.float32))
+    den = jnp.linalg.norm(x.astype(jnp.float32)) + 1e-12
+    return float(num / den)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Per-tensor-class precision assignment (Table 2 rows)."""
+
+    weight: str = "MXINT8"
+    activation: str = "MXINT8"
+    kv_cache: str = "MXINT8"
+
+    @property
+    def weight_bytes(self) -> float:
+        return get(self.weight).bytes_per_element
+
+    @property
+    def activation_bytes(self) -> float:
+        return get(self.activation).bytes_per_element
+
+    @property
+    def kv_bytes(self) -> float:
+        return get(self.kv_cache).bytes_per_element
+
+    @property
+    def matrix_rate_scale(self) -> float:
+        """Datapath throughput multiplier vs a 16-bit MAC array: narrow
+        operands double/quadruple MACs per PE per cycle (W8A8 -> 2x)."""
+        bits = max(get(self.weight).element_bits,
+                   get(self.activation).element_bits)
+        return max(1.0, 16.0 / bits)
+
+    @property
+    def vector_rate_scale(self) -> float:
+        bits = get(self.activation).element_bits
+        return max(1.0, 16.0 / bits)
+
+    def describe(self) -> str:
+        return f"W:{self.weight}/A:{self.activation}/KV:{self.kv_cache}"
+
+
+FP16_CONFIG = QuantConfig("FP16", "FP16", "FP16")
+Q8_CONFIG = QuantConfig("MXINT8", "MXINT8", "MXINT8")
+Q4_CONFIG = QuantConfig("MXINT4", "MXINT4", "MXINT4")

@@ -1,0 +1,395 @@
+"""Workload specialization (paper Section 4.3).
+
+Turns an LLM architecture + trace (prompt/generated token counts, batch)
+into per-layer operator lists and memory-traffic aggregates for the
+prefill and decode phases.  These feed the analytical performance model
+(perfmodel.py) and the transaction emulator (emulator.py).
+
+Each GEMM op carries the data class of its operands so the data-movement
+model can apply dataflow-dependent traffic inflation (weight-stationary
+re-streams activations; input/output-stationary re-stream weights) and
+route each stream through the placement-derived hierarchy path.
+
+Families covered (the 10 assigned architectures + the paper's own models):
+dense / GQA transformers, MoE, encoder-decoder, cross-attention VLM,
+hybrid attention+SSM (Hymba), xLSTM (mLSTM/sLSTM), and diffusion LMs
+(full-sequence iterative denoising, Section 5.4.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from .quant.formats import QuantConfig
+
+
+class Phase(enum.Enum):
+    PREFILL = "prefill"
+    DECODE = "decode"
+
+
+class Family(enum.Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    ENCDEC = "encdec"
+    VLM = "vlm"
+    HYBRID = "hybrid"   # parallel attention + SSM heads
+    SSM = "ssm"         # fully recurrent (xLSTM)
+    DLLM = "dllm"       # diffusion LM
+
+
+class DataClass(enum.Enum):
+    WEIGHT = "weight"
+    ACT = "act"
+    KV = "kv"
+    SCRATCH = "scratch"   # fused intermediates (attention scores): never
+                          # leave on-chip memory (flash-attention style)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDims:
+    """Architecture dimensions, the analytic model's view of a model."""
+
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    gated_ffn: bool = True
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    # enc-dec / VLM
+    n_encoder_layers: int = 0
+    cross_attn_every: int = 0        # 1 cross-attn layer per this many layers
+    cross_len: int = 1024            # encoder / vision-token length
+    # SSM / hybrid
+    ssm_state: int = 0
+    attn_window: int = 0             # sliding window (0 = full attention)
+    # diffusion
+    diffusion_steps_per_token: float = 0.25   # denoise steps per generated token
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def group_size(self) -> int:
+        return max(1, self.n_heads // max(1, self.n_kv_heads))
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 1 and self.top_k >= 1
+
+    def ffn_weight_params(self) -> int:
+        if self.d_ff <= 0:
+            return 0
+        per_expert = (3 if self.gated_ffn else 2) * self.d_model * self.d_ff
+        if self.is_moe:
+            return self.n_experts * per_expert + self.d_model * self.n_experts
+        return per_expert
+
+    def attn_weight_params(self) -> int:
+        return (self.d_model * (self.q_dim + 2 * self.kv_dim)
+                + self.q_dim * self.d_model)
+
+    def ssm_weight_params(self) -> int:
+        if self.family is Family.SSM:
+            return 4 * self.d_model * self.q_dim + 2 * self.d_model
+        if self.family is Family.HYBRID:
+            d_inner = self.q_dim
+            return (2 * self.d_model * d_inner + 4 * d_inner
+                    + 2 * d_inner * self.ssm_state)
+        return 0
+
+    def layer_weight_params(self) -> int:
+        p = 0
+        if self.family is not Family.SSM:
+            p += self.attn_weight_params()
+        p += self.ssm_weight_params()
+        p += self.ffn_weight_params()
+        p += 2 * self.d_model  # norms
+        return p
+
+    def total_params(self) -> int:
+        body = self.n_layers * self.layer_weight_params()
+        if self.n_encoder_layers:
+            enc = self.n_encoder_layers * (self.attn_weight_params()
+                                           + self.ffn_weight_params())
+            body += enc + self.n_layers * self.attn_weight_params()  # cross
+        if self.cross_attn_every:
+            n_cross = self.n_layers // self.cross_attn_every
+            body += n_cross * self.attn_weight_params()
+        emb = self.vocab * self.d_model * 2   # embedding + untied head
+        return body + emb
+
+    def active_params_per_token(self) -> int:
+        """N_active for MODEL_FLOPS = 6*N_active*D (MoE routes top_k)."""
+        if not self.is_moe:
+            return self.total_params() - self.vocab * self.d_model
+        per_expert = (3 if self.gated_ffn else 2) * self.d_model * self.d_ff
+        dense_part = self.n_layers * (self.attn_weight_params()
+                                      + 2 * self.d_model
+                                      + self.d_model * self.n_experts)
+        return dense_part + self.n_layers * self.top_k * per_expert \
+            + self.vocab * self.d_model
+
+    def kv_bytes_per_token(self, quant: QuantConfig) -> float:
+        if self.family is Family.SSM:
+            return 0.0
+        per_layer = 2 * self.kv_dim * quant.kv_bytes
+        if self.n_encoder_layers:
+            per_layer *= 2      # decoder self-attn + cross-attn K/V
+        return self.n_layers * per_layer
+
+    def ssm_state_bytes(self, batch: int, quant: QuantConfig) -> float:
+        if self.family is Family.SSM:
+            per_layer = self.n_heads * (self.head_dim * self.head_dim
+                                        + 2 * self.head_dim)
+            return self.n_layers * batch * per_layer * quant.activation_bytes
+        if self.family is Family.HYBRID:
+            d_inner = self.q_dim
+            per_layer = d_inner * self.ssm_state + 4 * d_inner
+            return self.n_layers * batch * per_layer * quant.activation_bytes
+        return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """An agentic workload trace: token usage of one request class."""
+
+    name: str
+    prompt_tokens: int
+    gen_tokens: int
+
+
+# Representative traces from the paper (Section 5.1).
+BFCL_WEB_SEARCH = Trace("bfcl-web-search", 114_000, 5_000)
+OSWORLD_LIBREOFFICE = Trace("osworld-libreoffice", 90_000, 8_000)
+GSM8K_DLLM = Trace("gsm8k-dllm", 1_400, 200)
+CHATBOT = Trace("chatbot", 1_400, 200)
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmOp:
+    """(m x k) @ (k x n), `count` independent instances.
+
+    a_class / b_class / out_class: data classes of the operands, used by
+    the data-movement model for placement-aware, dataflow-inflated traffic.
+
+    a_chunks: the A panel is processed as this many independent M-chunks
+    (per-request panels in a batched prefill).  Re-read inflation is
+    assessed per chunk: a chunk that fits the on-chip staging allocation
+    re-reads from on-chip memory, not from the hierarchy.
+    """
+
+    m: int
+    k: int
+    n: int
+    count: float = 1.0
+    a_class: DataClass = DataClass.ACT
+    b_class: DataClass = DataClass.WEIGHT
+    out_class: DataClass = DataClass.ACT
+    a_chunks: int = 1
+
+    @property
+    def macs(self) -> float:
+        return float(self.m) * self.k * self.n * self.count
+
+
+@dataclasses.dataclass
+class LayerTraffic:
+    """Per-layer compute ops + non-GEMM traffic (bytes)."""
+
+    gemms: list = dataclasses.field(default_factory=list)
+    vector_elems: float = 0.0          # lane-op count for the vector unit
+    act_extra_bytes: float = 0.0       # residual/norm streams outside GEMMs
+    kv_write_bytes: float = 0.0
+
+    def total_macs(self) -> float:
+        return sum(g.macs for g in self.gemms)
+
+    def scale(self, f: float) -> "LayerTraffic":
+        return LayerTraffic(
+            gemms=[dataclasses.replace(g, count=g.count * f) for g in self.gemms],
+            vector_elems=self.vector_elems * f,
+            act_extra_bytes=self.act_extra_bytes * f,
+            kv_write_bytes=self.kv_write_bytes * f,
+        )
+
+    def merge(self, other: "LayerTraffic"):
+        self.gemms += other.gemms
+        self.vector_elems += other.vector_elems
+        self.act_extra_bytes += other.act_extra_bytes
+        self.kv_write_bytes += other.kv_write_bytes
+
+
+def _attn_ops(dims: ModelDims, batch: int, q_len: int, kv_len: int,
+              quant: QuantConfig, t: LayerTraffic, *, causal: bool = True):
+    """Attention block: projections + grouped SDPA + out projection."""
+    d, qd, kvd, dh = dims.d_model, dims.q_dim, dims.kv_dim, dims.head_dim
+    g = dims.group_size
+    tokens = batch * q_len
+    eff_kv = min(kv_len, dims.attn_window) if dims.attn_window else kv_len
+    # projections (weights); per-request panels chunk the batch
+    t.gemms.append(GemmOp(tokens, d, qd + 2 * kvd, a_chunks=batch))
+    t.gemms.append(GemmOp(tokens, qd, d, a_chunks=batch))
+    # SDPA, one GEMM per (batch, kv-head): the g query heads of a group
+    # stack along M and share the K/V matrices (GQA-aware traffic).
+    frac = 0.5 if (causal and q_len > 1 and q_len == kv_len) else 1.0
+    t.gemms.append(GemmOp(int(g * q_len * frac), dh, eff_kv,
+                          count=batch * dims.n_kv_heads,
+                          a_class=DataClass.ACT, b_class=DataClass.KV,
+                          out_class=DataClass.SCRATCH))
+    t.gemms.append(GemmOp(int(g * q_len * frac), eff_kv, dh,
+                          count=batch * dims.n_kv_heads,
+                          a_class=DataClass.SCRATCH, b_class=DataClass.KV))
+    # fused online softmax: single-pass max/exp/accumulate on dedicated
+    # activation pipelines -> ~1 vector lane-op per score element
+    t.vector_elems += batch * dims.n_heads * q_len * eff_kv * frac * 1.0
+    t.vector_elems += tokens * (qd + kvd)          # rope
+    t.vector_elems += tokens * d * 4.0             # rmsnorm
+    if dims.qk_norm:
+        t.vector_elems += tokens * (qd + kvd) * 4.0
+    t.kv_write_bytes += batch * q_len * 2 * kvd * quant.kv_bytes
+    t.act_extra_bytes += 2 * tokens * d * quant.activation_bytes
+
+
+def _ffn_ops(dims: ModelDims, batch: int, q_len: int, quant: QuantConfig,
+             t: LayerTraffic):
+    d, ff = dims.d_model, dims.d_ff
+    if ff <= 0:
+        return
+    tokens = batch * q_len
+    up_n = 2 * ff if dims.gated_ffn else ff
+    if dims.is_moe:
+        routed = tokens * dims.top_k
+        t.gemms.append(GemmOp(tokens, d, dims.n_experts, a_chunks=batch))  # router
+        t.vector_elems += tokens * dims.n_experts * 4.0
+        # expert GEMMs: routed tokens spread over touched experts; each
+        # touched expert streams its own weights.
+        experts_touched = min(dims.n_experts, max(1, int(routed)))
+        m_per = max(1, int(routed // experts_touched))
+        t.gemms.append(GemmOp(m_per, d, up_n, count=experts_touched,
+                              a_chunks=max(1, m_per * batch // max(1, tokens))))
+        t.gemms.append(GemmOp(m_per, ff, d, count=experts_touched,
+                              a_chunks=max(1, m_per * batch // max(1, tokens))))
+    else:
+        t.gemms.append(GemmOp(tokens, d, up_n, a_chunks=batch))
+        t.gemms.append(GemmOp(tokens, ff, d, a_chunks=batch))
+    t.vector_elems += tokens * ff * 2.0            # activation (+ gate mul)
+    t.vector_elems += tokens * d * 4.0             # norm
+    t.act_extra_bytes += 2 * tokens * d * quant.activation_bytes
+
+
+def _ssm_ops(dims: ModelDims, batch: int, q_len: int, quant: QuantConfig,
+             t: LayerTraffic):
+    """SSM / linear-recurrent branch ops."""
+    d = dims.d_model
+    tokens = batch * q_len
+    if dims.family is Family.SSM:
+        qd, dh, nh = dims.q_dim, dims.head_dim, dims.n_heads
+        t.gemms.append(GemmOp(tokens, d, 4 * qd, a_chunks=batch))
+        # mLSTM chunkwise state update + readout: ~2 dh x dh matmuls/token/head
+        t.gemms.append(GemmOp(dh, 1, dh, count=tokens * nh * 2,
+                              a_class=DataClass.ACT, b_class=DataClass.ACT))
+        t.vector_elems += tokens * nh * dh * 6.0
+        state = dims.ssm_state_bytes(batch, quant) / max(1, dims.n_layers)
+        t.kv_write_bytes += state
+        t.act_extra_bytes += state   # state read-back
+    else:  # HYBRID Mamba branch
+        d_inner = dims.q_dim
+        s = dims.ssm_state
+        t.gemms.append(GemmOp(tokens, d, 2 * d_inner, a_chunks=batch))
+        t.gemms.append(GemmOp(tokens, d_inner, d, a_chunks=batch))
+        t.vector_elems += tokens * d_inner * s * 4.0   # selective scan
+        state = dims.ssm_state_bytes(batch, quant) / max(1, dims.n_layers)
+        t.kv_write_bytes += state
+        t.act_extra_bytes += state
+    t.act_extra_bytes += 2 * tokens * d * quant.activation_bytes
+
+
+def layer_traffic(dims: ModelDims, phase: Phase, batch: int,
+                  context: int, quant: QuantConfig,
+                  q_len: Optional[int] = None) -> LayerTraffic:
+    """Ops + traffic for ONE decoder layer of `dims` in `phase`.
+
+    context: total KV length (prompt + generated so far).  PREFILL
+    processes q_len (default: the whole context) query tokens; DECODE
+    processes 1 token against the cache.
+    """
+    t = LayerTraffic()
+    if phase is Phase.PREFILL:
+        q = q_len if q_len is not None else context
+        kv = context
+    else:
+        q = 1
+        kv = context
+
+    if dims.family is Family.SSM:
+        _ssm_ops(dims, batch, q, quant, t)
+        _ffn_ops(dims, batch, q, quant, t)
+        return t
+
+    if dims.family is Family.HYBRID:
+        _attn_ops(dims, batch, q, kv, quant, t)
+        _ssm_ops(dims, batch, q, quant, t)
+        _ffn_ops(dims, batch, q, quant, t)
+        return t
+
+    _attn_ops(dims, batch, q, kv, quant, t)
+    if dims.cross_attn_every and dims.cross_attn_every > 0:
+        tc = LayerTraffic()
+        _attn_ops(dims, batch, q, dims.cross_len, quant, tc, causal=False)
+        t.merge(tc.scale(1.0 / dims.cross_attn_every))
+    _ffn_ops(dims, batch, q, quant, t)
+    return t
+
+
+def lm_head_traffic(dims: ModelDims, batch: int, tokens: int,
+                    quant: QuantConfig) -> LayerTraffic:
+    t = LayerTraffic()
+    t.gemms.append(GemmOp(batch * tokens, dims.d_model, dims.vocab,
+                          a_chunks=batch))
+    t.vector_elems += batch * tokens * dims.vocab * 3.0   # softmax/sample
+    t.act_extra_bytes += batch * tokens * dims.d_model * quant.activation_bytes
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Footprints (capacity planning; paper Section 4.3 decode max-batch rule)
+# ---------------------------------------------------------------------------
+
+def weight_footprint_gb(dims: ModelDims, quant: QuantConfig) -> float:
+    return dims.total_params() * quant.weight_bytes / 1e9
+
+
+def kv_footprint_gb(dims: ModelDims, batch: int, context: int,
+                    quant: QuantConfig) -> float:
+    ctx = min(context, dims.attn_window) if dims.attn_window else context
+    kv = dims.kv_bytes_per_token(quant) * batch * ctx
+    kv += dims.ssm_state_bytes(batch, quant)
+    return kv / 1e9
+
+
+def activation_footprint_gb(dims: ModelDims, batch: int, q_len: int,
+                            quant: QuantConfig) -> float:
+    """Resident activation state: every request's residual-stream panel
+    plus ONE active request's widest transient (the d_ff intermediate) —
+    requests are processed panel-at-a-time through each layer."""
+    resident = batch * q_len * dims.d_model
+    width = dims.d_ff if (dims.d_ff and not dims.is_moe) else dims.d_model
+    active = q_len * max(width, dims.d_model)
+    return (resident + active) * quant.activation_bytes / 1e9

@@ -1,0 +1,122 @@
+"""Single-token decode attention kernel (Pallas, TPU target).
+
+Decode is the paper's memory-bound phase: per step the whole KV cache
+streams HBM -> VMEM once while compute is a rank-1 update.  The kernel
+keeps the (grouped) query vector and the online-softmax state in VMEM
+and streams the cache in BLOCK_K-token blocks; supports an int8
+quantized cache (the paper's KV-precision axis) by fusing dequant into
+the stream — which is exactly how the KV-bytes term of the analytic
+model drops with kv_bits.
+
+q: [B, Hq, Dh] (one token per sequence); cache k/v: [B, S, Hkv, Dh];
+valid length t masks the unwritten tail.  Grid: (B * Hkv, n_kv_blocks),
+the group's G query heads ride along the sublane dim of one block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(t_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, sm_scale: float, block_k: int, n_kv_blocks: int,
+                   window: int, ring: bool):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    t = t_ref[0]
+    q = q_ref[0].astype(jnp.float32)            # [G, Dh]
+    k = k_ref[0].astype(jnp.float32)            # [bk, Dh]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                            # [G, bk]
+
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    if ring:
+        # ring buffer: all slots valid once wrapped
+        valid = (k_pos <= t) | (t >= n_kv_blocks * block_k)
+    else:
+        valid = k_pos <= t
+        if window > 0:
+            valid &= k_pos > t - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_kv_heads", "window", "ring", "block_k", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     t: jnp.ndarray, *, n_kv_heads: int, window: int = 0,
+                     ring: bool = False, block_k: int = DEFAULT_BLOCK_K,
+                     interpret: bool = True) -> jnp.ndarray:
+    """q: [B, Hq, Dh]; k/v cache: [B, S, Hkv, Dh]; t: scalar int32 current
+    position.  Returns [B, Hq, Dh]."""
+    b, hq, dh = q.shape
+    skv = k.shape[1]
+    group = hq // n_kv_heads
+    sm_scale = 1.0 / (dh ** 0.5)
+    bk = min(block_k, skv)
+    if skv % bk:
+        raise ValueError(f"cache length {skv} must divide block {bk}")
+    n_k = skv // bk
+
+    # [B, Hkv, G, Dh]: the group's queries share one grid row
+    qf = q.reshape(b, n_kv_heads, group, dh).reshape(
+        b * n_kv_heads, group, dh)
+    kf = k.swapaxes(1, 2).reshape(b * n_kv_heads, skv, dh)
+    vf = v.swapaxes(1, 2).reshape(b * n_kv_heads, skv, dh)
+    t_arr = jnp.asarray(t, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _decode_kernel, sm_scale=sm_scale, block_k=bk, n_kv_blocks=n_k,
+        window=window, ring=ring)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * n_kv_heads, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, group, dh), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, dh), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, dh), lambda bh, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, dh), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * n_kv_heads, group, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(t_arr, qf, kf, vf)
+    return out.reshape(b, n_kv_heads * group, dh)

@@ -1,0 +1,138 @@
+"""Flash attention forward kernel (Pallas, TPU target).
+
+This is the paper's "activations stay on-chip" prefill insight made
+TPU-native: Q/accumulator tiles are pinned in VMEM while K/V stream
+HBM -> VMEM block by block, so the S x S score matrix NEVER touches HBM
+(the XLA fallback materializes q-chunk score tiles; see
+models/layers.sdpa_chunked).  Online softmax with running (m, l, acc)
+scratch carried across the innermost (KV) grid dimension.
+
+Tiling: q blocks (BLOCK_Q x head_dim) x kv blocks (BLOCK_K x head_dim);
+MXU-aligned (multiples of 128 for seq blocks; head_dim 64/128/512 per
+the assigned archs).  Grid: (batch*q_heads, n_q_blocks, n_kv_blocks),
+dimension semantics (parallel, parallel, arbitrary) — scratch persists
+across the sequential KV dimension.
+
+GQA is handled in the index maps: kv block row = (b * n_kv_heads +
+q_head // group) — K/V are NOT repeated in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, block_q: int,
+                  block_k: int, n_kv_blocks: int, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # [bq, dh]
+    k = k_ref[0].astype(jnp.float32)          # [bk, dh]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * sm_scale                          # [bq, bk]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "n_kv_heads",
+                     "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, n_kv_heads: int, causal: bool = True,
+                    window: int = 0, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = True) -> jnp.ndarray:
+    """q: [B, S, Hq, Dh]; k/v: [B, S, Hkv, Dh] -> [B, S, Hq, Dh].
+
+    interpret=True validates on CPU (this environment); on a real TPU
+    pass interpret=False to compile through Mosaic.
+    """
+    b, s, hq, dh = q.shape
+    skv = k.shape[1]
+    group = hq // n_kv_heads
+    sm_scale = 1.0 / (dh ** 0.5)
+
+    bq = min(block_q, s)
+    bk = min(block_k, skv)
+    n_q = -(-s // bq)
+    n_k = -(-skv // bk)
+    if s % bq or skv % bk:
+        raise ValueError(f"seq {s}/{skv} must divide blocks {bq}/{bk}")
+
+    qf = q.swapaxes(1, 2).reshape(b * hq, s, dh)
+    kf = k.swapaxes(1, 2).reshape(b * n_kv_heads, skv, dh)
+    vf = v.swapaxes(1, 2).reshape(b * n_kv_heads, skv, dh)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // hq) * n_kv_heads + (bh % hq) // group, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale, causal=causal, block_q=bq,
+        block_k=bk, n_kv_blocks=n_k, window=window)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), q_map),
+            pl.BlockSpec((1, bk, dh), kv_map),
+            pl.BlockSpec((1, bk, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((bq, dh), jnp.float32),   # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, s, dh).swapaxes(1, 2)

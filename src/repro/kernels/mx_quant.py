@@ -1,0 +1,87 @@
+"""MX block quantization kernel (Pallas, TPU target).
+
+Quantizes a tensor to MXINT8-style blocks: 32 consecutive elements share
+one power-of-two scale (stored as f32 for simplicity; 8-bit exponent in
+the format spec).  Used by the quantized-KV-cache path and the traffic
+model's bits-per-element accounting; the kernel form keeps quantization
+on-chip so writing a cache block costs int8 bytes, not bf16.
+
+Tiling: [BLOCK_N x D] row tiles in VMEM; lane dim D stays contiguous and
+MXU/VPU aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MX_BLOCK = 32
+DEFAULT_BLOCK_N = 256
+QMAX = 127.0
+
+
+def _quant_kernel(x_ref, q_ref, s_ref, *, d: int):
+    x = x_ref[...].astype(jnp.float32)              # [bn, d]
+    bn = x.shape[0]
+    xb = x.reshape(bn, d // MX_BLOCK, MX_BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    amax = jnp.where(amax == 0, 1.0, amax)
+    exp = jnp.ceil(jnp.log2(amax / QMAX))
+    scale = jnp.exp2(exp)
+    q = jnp.clip(jnp.round(xb / scale), -QMAX, QMAX)
+    q_ref[...] = q.reshape(bn, d).astype(jnp.int8)
+    s_ref[...] = scale[..., 0].astype(jnp.float32)
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref, *, d: int):
+    q = q_ref[...].astype(jnp.float32)
+    bn = q.shape[0]
+    qb = q.reshape(bn, d // MX_BLOCK, MX_BLOCK)
+    x = qb * s_ref[...][..., None]
+    x_ref[...] = x.reshape(bn, d).astype(x_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def mx_quantize(x: jnp.ndarray, block_n: int = DEFAULT_BLOCK_N,
+                interpret: bool = True) -> tuple:
+    """x: [N, D] (D % 32 == 0) -> (int8 [N, D], scales f32 [N, D/32])."""
+    n, d = x.shape
+    if d % MX_BLOCK:
+        raise ValueError(f"D={d} must be a multiple of {MX_BLOCK}")
+    bn = min(block_n, n)
+    if n % bn:
+        raise ValueError(f"N={n} must divide block_n={bn}")
+    grid = (n // bn,)
+    q, s = pl.pallas_call(
+        functools.partial(_quant_kernel, d=d),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                   pl.BlockSpec((bn, d // MX_BLOCK), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), jnp.int8),
+                   jax.ShapeDtypeStruct((n, d // MX_BLOCK), jnp.float32)],
+        interpret=interpret,
+    )(x)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "dtype", "interpret"))
+def mx_dequantize(q: jnp.ndarray, s: jnp.ndarray,
+                  block_n: int = DEFAULT_BLOCK_N, dtype=jnp.float32,
+                  interpret: bool = True) -> jnp.ndarray:
+    n, d = q.shape
+    bn = min(block_n, n)
+    if n % bn:
+        raise ValueError(f"N={n} must divide block_n={bn}")
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, d=d),
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bn, d), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, d // MX_BLOCK), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), dtype),
+        interpret=interpret,
+    )(q, s)

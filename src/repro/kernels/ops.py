@@ -1,0 +1,48 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute through the Pallas
+interpreter (`interpret=True`, bit-faithful to the kernel body); on TPU
+set REPRO_PALLAS_INTERPRET=0 to compile through Mosaic.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .mx_quant import mx_dequantize, mx_quantize
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention_op(q, k, v, *, n_kv_heads, causal=True, window=0,
+                       block_q=128, block_k=128):
+    return flash_attention(q, k, v, n_kv_heads=n_kv_heads, causal=causal,
+                           window=window, block_q=block_q, block_k=block_k,
+                           interpret=_interpret_default())
+
+
+def decode_attention_op(q, k, v, t, *, n_kv_heads, window=0, ring=False,
+                        block_k=512):
+    return decode_attention(q, k, v, t, n_kv_heads=n_kv_heads,
+                            window=window, ring=ring, block_k=block_k,
+                            interpret=_interpret_default())
+
+
+def mx_quantize_op(x, block_n=256):
+    return mx_quantize(x, block_n=block_n, interpret=_interpret_default())
+
+
+def mx_dequantize_op(q, s, block_n=256, dtype=None):
+    import jax.numpy as jnp
+    return mx_dequantize(q, s, block_n=block_n,
+                         dtype=dtype or jnp.float32,
+                         interpret=_interpret_default())

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MX_BLOCK = 32
+QMAX = 127.0
+
+
+def flash_attention_ref(q, k, v, *, n_kv_heads: int, causal: bool = True,
+                        window: int = 0) -> jnp.ndarray:
+    """q: [B, S, Hq, Dh]; k/v: [B, Skv, Hkv, Dh] -> [B, S, Hq, Dh]."""
+    b, s, hq, dh = q.shape
+    skv = k.shape[1]
+    g = hq // n_kv_heads
+    qf = q.reshape(b, s, n_kv_heads, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((s, skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, dh).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, t, *, n_kv_heads: int, window: int = 0,
+                         ring: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, Dh]; cache [B, S, Hkv, Dh]; t scalar -> [B, Hq, Dh]."""
+    b, hq, dh = q.shape
+    skv = k.shape[1]
+    g = hq // n_kv_heads
+    qf = q.reshape(b, n_kv_heads, g, dh).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qf,
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
+    kpos = jnp.arange(skv)
+    valid = kpos <= t
+    if ring:
+        valid = valid | (t >= skv)
+    elif window > 0:
+        valid &= kpos > t - window
+    scores = jnp.where(valid[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, dh).astype(q.dtype)
+
+
+def mx_quantize_ref(x) -> tuple:
+    n, d = x.shape
+    xb = x.astype(jnp.float32).reshape(n, d // MX_BLOCK, MX_BLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    amax = jnp.where(amax == 0, 1.0, amax)
+    scale = jnp.exp2(jnp.ceil(jnp.log2(amax / QMAX)))
+    q = jnp.clip(jnp.round(xb / scale), -QMAX, QMAX)
+    return (q.reshape(n, d).astype(jnp.int8),
+            scale[..., 0].astype(jnp.float32))
+
+
+def mx_dequantize_ref(q, s, dtype=jnp.float32) -> jnp.ndarray:
+    n, d = q.shape
+    qb = q.astype(jnp.float32).reshape(n, d // MX_BLOCK, MX_BLOCK)
+    return (qb * s[..., None]).reshape(n, d).astype(dtype)

@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, with memory / cost / collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b \
+        --shape train_4k [--multi-pod] [--scan] [--out results.jsonl]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+The first two lines above MUST stay first: jax fixes the device count at
+first initialization.  Skipped cells (long_500k on full-attention archs)
+are reported as `skip` rows, per DESIGN.md section 4.
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, cell_supported, get_arch       # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.specs import build_lowering                   # noqa: E402
+from repro.models.config import SHAPES                          # noqa: E402
+from repro.roofline import hlo as hlo_mod                       # noqa: E402
+from repro.roofline.report import (RooflineCell,                # noqa: E402
+                                   model_flops_for_cell)
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             unroll_layers: bool = True, kv_quant=None,
+             extra_opts=None, verbose: bool = True,
+             moe_blocks=None, cache_mode: str = "dh",
+             microbatches=None, seq_parallel: bool = False) -> dict:
+    """Lower+compile one cell; returns the result row (or skip/error)."""
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = get_arch(arch)
+    ok, why = cell_supported(cfg, SHAPES[shape])
+    base = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    if not ok:
+        return {**base, "status": "skip", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        spec = build_lowering(arch, shape, mesh,
+                              unroll_layers=unroll_layers,
+                              kv_quant=kv_quant, extra_opts=extra_opts,
+                              moe_blocks=moe_blocks, cache_mode=cache_mode,
+                              microbatches=microbatches,
+                              seq_parallel=seq_parallel)
+        jf = jax.jit(spec.step, out_shardings=spec.out_shardings,
+                     donate_argnums=spec.donate)
+        with mesh:
+            lowered = jf.lower(*spec.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        return {**base, "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    text = compiled.as_text()
+    totals = hlo_mod.analyze(text)
+    n_chips = 512 if multi_pod else 256
+    # memory traffic: XLA's fusion-accurate per-device 'bytes accessed'
+    # (loop bodies x1) scaled by the text-derived loop amplification.
+    # Deeply nested scans (xLSTM's layer x 4096-timestep sLSTM) blow the
+    # aggregate-ratio estimator up; clamp and flag (EXPERIMENTS.md notes).
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    amp = totals.mem_amplification()
+    mem_bytes = xla_bytes * min(amp, 200.0)
+    cell = RooflineCell(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        hlo_flops=totals.dot_flops, hlo_bytes=mem_bytes,
+        coll_bytes=totals.coll_bytes,
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)),
+        model_flops_global=model_flops_for_cell(cfg, SHAPES[shape]),
+        arg_bytes=float(mem.argument_size_in_bytes),
+        temp_bytes=float(mem.temp_size_in_bytes),
+        coll_by_kind=totals.coll_by_kind,
+        n_whiles=totals.n_whiles,
+    )
+    row = {**base, "status": "ok", **cell.row(),
+           "coll_by_kind": totals.coll_by_kind,
+           "alias_gb_per_dev": mem.alias_size_in_bytes / 1e9,
+           "out_gb_per_dev": mem.output_size_in_bytes / 1e9,
+           "xla_flops_per_dev": cell.xla_flops,
+           "xla_bytes_per_dev": cell.xla_bytes,
+           "mem_amp_raw": amp,
+           "mem_proxy_clamped": amp > 200.0,
+           "n_whiles": totals.n_whiles,
+           "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2)}
+    if verbose:
+        print(f"[{arch} x {shape} @ {mesh_name}] "
+              f"compile={t_compile:.1f}s "
+              f"args={mem.argument_size_in_bytes/1e9:.2f}GB/dev "
+              f"temp={mem.temp_size_in_bytes/1e9:.2f}GB/dev "
+              f"flops/dev={totals.dot_flops:.3e} "
+              f"coll/dev={totals.coll_bytes:.3e}B "
+              f"bneck={cell.bottleneck} "
+              f"roofline={cell.roofline_fraction:.3f}")
+        print("  memory_analysis:", mem)
+        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+              (cell.xla_flops, cell.xla_bytes))
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id")
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch x shape) cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--scan", action="store_true",
+                    help="scan-over-layers lowering (fast; loop-aware "
+                         "analysis still applies)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache for decode cells")
+    ap.add_argument("--out", default=None, help="append JSONL results")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape))
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    rows = []
+    for arch, shape in cells:
+        for mp in meshes:
+            row = run_cell(arch, shape, mp,
+                           unroll_layers=not args.scan,
+                           kv_quant=args.kv_quant or None)
+            rows.append(row)
+            if row["status"] == "error":
+                print(f"[{arch} x {shape} @ "
+                      f"{'2x16x16' if mp else '16x16'}] ERROR: "
+                      f"{row['error']}")
+            elif row["status"] == "skip":
+                print(f"[{arch} x {shape}] SKIP: {row['reason']}")
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(row) + "\n")
+    n_err = sum(r["status"] == "error" for r in rows)
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skip" for r in rows)
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skip, {n_err} error")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Serving launcher: prefill + batched decode for any registered arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+        --batch 4 --prompt 48 --gen 32 [--kv-quant]
+
+The prefill and decode phases print separate timings — the host-scale
+analogue of the paper's PD disaggregation (on a real deployment the two
+jits run on different pods; see launch/mesh.py and core/disagg.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.data import DataConfig, batch_for_step
+from repro.runtime.steps import make_decode_step, make_prefill_step, model_fns
+from repro.sharding.partition import param_shardings
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=4, d_model=128, vocab=1024)
+    if args.kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    mesh = make_host_mesh(args.model_parallel)
+    mf = model_fns(cfg)
+    with mesh:
+        params = mf.init(jax.random.key(0))
+        params = jax.tree.map(lambda a, s: jax.device_put(a, s), params,
+                              param_shardings(params, mesh))
+
+    s_max = args.prompt + args.gen
+    prefill = jax.jit(make_prefill_step(cfg, s_max=s_max))
+    decode = jax.jit(make_decode_step(cfg))
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.prompt,
+                    global_batch=args.batch, seed=0)
+    frames = args.prompt if cfg.family == "encdec" else 0
+    raw = batch_for_step(dc, 0, with_frames=frames, d_model=cfg.d_model)
+    batch = {k: jnp.asarray(v) for k, v in raw.items()}
+    if cfg.family == "encdec":
+        batch["frames"] = batch["frames"].astype(cfg.jax_dtype)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((args.batch, cfg.cross_len,
+                                      cfg.d_model), cfg.jax_dtype)
+
+    print(f"== {cfg.name}{' (reduced)' if args.reduced else ''}: "
+          f"batch={args.batch} prompt={args.prompt} gen={args.gen} "
+          f"kv_quant={cfg.kv_quant} ==")
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, batch)
+    jax.block_until_ready(logits)
+    print(f"prefill: {1e3*(time.perf_counter()-t0):.1f} ms "
+          f"({args.batch*args.prompt} tokens)")
+
+    tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+    out = [np.asarray(tok)]
+    dec_start = (batch["tokens"].shape[1] if cfg.family != "encdec"
+                 else batch["tokens"].shape[1])
+    t0 = time.perf_counter()
+    for step in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(dec_start + step))
+        tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    print(f"decode: {args.gen-1} steps, {1e3*dt/(args.gen-1):.1f} ms/step, "
+          f"{args.batch*(args.gen-1)/dt:.0f} tok/s aggregate")
+    print("sample:", np.stack(out, 1)[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""Dry-run input specs: ShapeDtypeStruct stand-ins (no allocation) with
+shardings for every (arch x shape) step function.
+
+input_specs() covers the assignment's modality stubs: [audio] archs get
+precomputed frame embeddings, [vlm] archs get patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import LONG_WINDOWS, cell_supported, get_arch
+from repro.models import encdec, hymba, transformer, xlstm
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.models.transformer import ForwardOptions
+from repro.runtime.optim import AdamWConfig, init_opt_state
+from repro.runtime.steps import (make_decode_step, make_prefill_step,
+                                 make_train_step, model_fns)
+from repro.sharding.partition import (cache_shardings, input_spec,
+                                      param_shardings)
+
+# decoder prompt length used for enc-dec prefill cells (the 32k/500k
+# sequence budget belongs to the encoder frames)
+ENCDEC_PREFILL_DEC_LEN = 1
+
+
+def _with_shardings(struct_tree, sharding_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct_tree, sharding_tree)
+
+
+def param_structs(cfg: ArchConfig, mesh: Mesh):
+    mf = model_fns(cfg)
+    shapes = jax.eval_shape(mf.init, jax.random.key(0))
+    return _with_shardings(shapes, param_shardings(shapes, mesh))
+
+
+def opt_structs(cfg: ArchConfig, mesh: Mesh):
+    params = jax.eval_shape(model_fns(cfg).init, jax.random.key(0))
+    opt = jax.eval_shape(init_opt_state, params)
+    from repro.sharding.partition import opt_state_shardings
+    return _with_shardings(opt, opt_state_shardings(opt, mesh))
+
+
+def _sds(mesh: Mesh, shape: tuple, dtype, batch_sharded: bool = True):
+    spec = input_spec(mesh, shape[0], len(shape)) if batch_sharded \
+        else P(*([None] * len(shape)))
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_structs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh) -> dict:
+    """Training / prefill batch ShapeDtypeStructs (the `input_specs()`
+    of the assignment: token ids + stub frame/patch embeddings)."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.family == "encdec":
+        dec_len = s if shape.kind == "train" else ENCDEC_PREFILL_DEC_LEN
+        out["frames"] = _sds(mesh, (b, s, cfg.d_model), cfg.jax_dtype)
+        out["tokens"] = _sds(mesh, (b, dec_len), jnp.int32)
+        if shape.kind == "train":
+            out["targets"] = _sds(mesh, (b, dec_len), jnp.int32)
+        return out
+    out["tokens"] = _sds(mesh, (b, s), jnp.int32)
+    if shape.kind == "train":
+        out["targets"] = _sds(mesh, (b, s), jnp.int32)
+    if cfg.family == "vlm":
+        out["patches"] = _sds(mesh, (b, cfg.cross_len, cfg.d_model),
+                              cfg.jax_dtype)
+    return out
+
+
+def cache_structs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh):
+    """Decode-state ShapeDtypeStructs with cache shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    window = LONG_WINDOWS.get(cfg.name) if shape.name == "long_500k" else None
+    if cfg.family == "hybrid":
+        shapes = jax.eval_shape(
+            lambda: hymba.empty_cache(cfg, b, s, window))
+        return cache_shardings_tree(shapes, mesh)
+    if cfg.family == "ssm":
+        shapes = jax.eval_shape(lambda: xlstm.empty_cache(cfg, b))
+        return cache_shardings_tree(shapes, mesh)
+    if cfg.family == "encdec":
+        def mk():
+            self_cache = encdec.empty_cache(cfg, b, s)
+            ck = jnp.zeros((cfg.n_layers, b, cfg.cross_len, cfg.n_kv_heads,
+                            cfg.head_dim_), cfg.jax_dtype)
+            return {"self": self_cache, "cross_k": ck, "cross_v": ck}
+        shapes = jax.eval_shape(mk)
+        return cache_shardings_tree(shapes, mesh)
+    shapes = jax.eval_shape(lambda: transformer.empty_cache(cfg, b, s))
+    return cache_shardings_tree(shapes, mesh)
+
+
+_CACHE_MODE = "dh"
+
+
+def cache_shardings_tree(shapes, mesh: Mesh):
+    shards = cache_shardings(shapes, mesh, batch_axis=1, mode=_CACHE_MODE)
+    return _with_shardings(shapes, shards)
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    """Everything needed to lower one (arch x shape) cell."""
+
+    name: str
+    step: Callable
+    args: tuple
+    donate: tuple
+    out_shardings: object
+
+
+TRAIN_MICROBATCHES = 4   # grad-accumulation chunks for train_4k cells
+
+
+def build_lowering(arch_name: str, shape_name: str, mesh: Mesh,
+                   unroll_layers: bool = False,
+                   kv_quant: Optional[bool] = None,
+                   extra_opts: Optional[dict] = None,
+                   microbatches: Optional[int] = None,
+                   moe_blocks: Optional[int] = None,
+                   cache_mode: str = "dh",
+                   seq_parallel: bool = False) -> LoweringSpec:
+    """Construct the jit-able step + ShapeDtypeStruct args for one cell."""
+    cfg = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell skipped: {arch_name} x {shape_name}: {why}")
+    if kv_quant is not None:
+        cfg = dataclasses.replace(cfg, kv_quant=kv_quant)
+    if moe_blocks is not None:
+        cfg = dataclasses.replace(cfg, moe_blocks=moe_blocks)
+    global _CACHE_MODE
+    _CACHE_MODE = cache_mode
+    window = LONG_WINDOWS.get(cfg.name) if shape.name == "long_500k" else None
+    from repro.sharding.partition import batch_axes
+    opts = ForwardOptions(unroll_layers=unroll_layers,
+                          window_override=window,
+                          seq_shard_axes=(batch_axes(mesh)
+                                          if seq_parallel else None),
+                          **(extra_opts or {}))
+    params = param_structs(cfg, mesh)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        mb = microbatches if microbatches is not None else TRAIN_MICROBATCHES
+        step = make_train_step(cfg, AdamWConfig(), opts, microbatches=mb)
+        opt = opt_structs(cfg, mesh)
+        batch = batch_structs(cfg, shape, mesh)
+        out_shardings = (
+            repl,
+            jax.tree.map(lambda x: x.sharding, params),
+            jax.tree.map(lambda x: x.sharding, opt),
+            {"grad_norm": repl, "lr": repl},
+        )
+        return LoweringSpec(
+            name=f"{arch_name}|{shape_name}",
+            step=step, args=(params, opt, batch),
+            donate=(0, 1), out_shardings=out_shardings)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, s_max=shape.seq_len, opts=opts,
+                                 window=window)
+        batch = batch_structs(cfg, shape, mesh)
+        cache_sh = jax.tree.map(lambda x: x.sharding,
+                                cache_structs(cfg, shape, mesh))
+        logits_sh = NamedSharding(
+            mesh, input_spec(mesh, shape.global_batch, 2))
+        return LoweringSpec(
+            name=f"{arch_name}|{shape_name}",
+            step=step, args=(params, batch),
+            donate=(), out_shardings=(logits_sh, cache_sh))
+
+    # decode
+    step = make_decode_step(cfg, opts)
+    cache = cache_structs(cfg, shape, mesh)
+    token = _sds(mesh, (shape.global_batch,), jnp.int32)
+    t = jax.ShapeDtypeStruct((), jnp.int32, sharding=repl)
+    logits_sh = NamedSharding(mesh, input_spec(mesh, shape.global_batch, 2))
+    cache_sh = jax.tree.map(lambda x: x.sharding, cache)
+    return LoweringSpec(
+        name=f"{arch_name}|{shape_name}",
+        step=step, args=(params, cache, token, t),
+        donate=(1,), out_shardings=(logits_sh, cache_sh))
+
+

@@ -1,0 +1,114 @@
+"""Training launcher: any registered arch on the available devices.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --reduced --steps 100 --batch 16 --seq 64 --ckpt-dir /tmp/ck
+
+On real hardware run the FULL config under the production mesh; on this
+CPU container use --reduced.  The loop composes the whole runtime:
+sharded params (DP x TP), ZeRO-1 moments, microbatching, deterministic
+step-indexed data, periodic checkpoints, straggler detection and
+retry-with-restore.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.runtime import checkpoint as ckpt
+from repro.runtime.data import DataConfig, batch_for_step
+from repro.runtime.fault import (RetryPolicy, StragglerDetector,
+                                 TrainSupervisor)
+from repro.runtime.optim import AdamWConfig, init_opt_state
+from repro.runtime.steps import make_train_step, model_fns
+from repro.sharding.partition import (input_spec, opt_state_shardings,
+                                      param_shardings)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=4, d_model=128, vocab=1024)
+    mesh = make_host_mesh(args.model_parallel)
+    print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name} "
+          f"({'reduced' if args.reduced else 'FULL'})")
+
+    mf = model_fns(cfg)
+    with mesh:
+        params = mf.init(jax.random.key(0))
+        params = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), params,
+            param_shardings(params, mesh))
+        opt = init_opt_state(params)
+        opt = jax.tree.map(lambda a, s: jax.device_put(a, s), opt,
+                           opt_state_shardings(opt, mesh))
+    start_step = 0
+    if args.resume and args.ckpt_dir:
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            template = jax.eval_shape(lambda: {"params": params, "opt": opt})
+            state, start_step = ckpt.restore(args.ckpt_dir, last, template)
+            params, opt = state["params"], state["opt"]
+            start_step += 1
+            print(f"resumed from step {start_step - 1}")
+
+    step_fn = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=args.lr), microbatches=args.microbatches))
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                    global_batch=args.batch, seed=0)
+    state = {"params": params, "opt": opt}
+
+    def save(step):
+        if args.ckpt_dir:
+            ckpt.save(args.ckpt_dir, step, state)
+
+    sup = TrainSupervisor(retry=RetryPolicy(), straggler=StragglerDetector(),
+                          checkpoint_every=args.ckpt_every,
+                          checkpoint_fn=save)
+    t0 = time.time()
+    for i in range(start_step, args.steps):
+        frames = args.seq if cfg.family == "encdec" else 0
+        raw = batch_for_step(dc, i, with_frames=frames, d_model=cfg.d_model)
+        batch = {k: jnp.asarray(v) for k, v in raw.items()}
+        if cfg.family == "encdec":
+            batch["frames"] = batch["frames"].astype(cfg.jax_dtype)
+        if cfg.family == "vlm":
+            batch["patches"] = jnp.zeros((args.batch, cfg.cross_len,
+                                          cfg.d_model), cfg.jax_dtype)
+
+        def one(b):
+            loss, p2, o2, m = step_fn(state["params"], state["opt"], b)
+            state["params"], state["opt"] = p2, o2
+            return float(loss), float(m["grad_norm"])
+
+        loss, gnorm = sup.run_step(i, one, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            rate = (i - start_step + 1) / (time.time() - t0)
+            print(f"step {i:5d}  loss={loss:7.4f}  gnorm={gnorm:7.3f}  "
+                  f"{rate:5.2f} it/s  median={sup.straggler.median()*1e3:.0f}ms")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""JAX model zoo: shared layers + the four family implementations."""

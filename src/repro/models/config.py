@@ -1,0 +1,151 @@
+"""Architecture configuration shared by the JAX models, the launchers and
+the analytical core (convertible to core.workload.ModelDims)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | encdec | vlm | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    gated_ffn: bool = True
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 500_000.0
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1           # MoE FFN in 1 of every `moe_every` layers
+    moe_blocks: int = 1          # DP-block-local dispatch (perf iter A)
+    # enc-dec / VLM
+    n_encoder_layers: int = 0
+    cross_attn_every: int = 0
+    cross_len: int = 1024        # encoder/vision sequence length (stub)
+    modality: str = "text"       # text | audio | vision
+    # SSM / hybrid
+    ssm_state: int = 0
+    attn_window: int = 0         # sliding window for long-context shapes
+    # training/serving knobs
+    dtype: str = "bfloat16"
+    vocab_align: int = 256
+    remat: bool = True
+    scan_layers: bool = True
+    kv_quant: bool = False       # int8 KV cache serving path
+    notes: str = ""
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim_
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim_
+
+    @property
+    def vocab_padded(self) -> int:
+        return round_up(self.vocab, self.vocab_align)
+
+    @property
+    def jax_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic path available (SSM state / sliding window)."""
+        return self.family in ("hybrid", "ssm")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True   # all assigned archs decode (enc-dec has a decoder)
+
+    def reduced(self, n_layers: int = 2, d_model: int = 64,
+                vocab: int = 512) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        heads = max(2, min(4, self.n_heads))
+        kv = max(1, min(heads, self.n_kv_heads))
+        hd = max(8, d_model // heads)
+        enc = min(self.n_encoder_layers, n_layers) if self.n_encoder_layers \
+            else 0
+        cross = 2 if self.cross_attn_every else 0
+        nl = n_layers if not self.cross_attn_every else 2 * max(1, cross)
+        return dataclasses.replace(
+            self,
+            n_layers=nl,
+            d_model=d_model,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=hd,
+            d_ff=0 if self.d_ff == 0 else d_model * 2,
+            vocab=vocab,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            n_encoder_layers=enc,
+            cross_attn_every=cross,
+            cross_len=16,
+            ssm_state=min(self.ssm_state, 8) if self.ssm_state else 0,
+            attn_window=min(self.attn_window, 32) if self.attn_window else 0,
+            dtype="float32",
+            vocab_align=64,
+            remat=False,
+        )
+
+    def to_model_dims(self):
+        """Adapter to the analytical core's ModelDims."""
+        from repro.core.workload import Family, ModelDims
+        fam = {"dense": Family.DENSE, "moe": Family.MOE,
+               "encdec": Family.ENCDEC, "vlm": Family.VLM,
+               "hybrid": Family.HYBRID, "ssm": Family.SSM,
+               "dllm": Family.DLLM}[self.family]
+        return ModelDims(
+            name=self.name, family=fam, n_layers=self.n_layers,
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim_,
+            d_ff=self.d_ff, vocab=self.vocab, gated_ffn=self.gated_ffn,
+            qkv_bias=self.qkv_bias, qk_norm=self.qk_norm,
+            n_experts=self.n_experts, top_k=self.top_k,
+            n_encoder_layers=self.n_encoder_layers,
+            cross_attn_every=self.cross_attn_every, cross_len=self.cross_len,
+            ssm_state=self.ssm_state, attn_window=self.attn_window,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str                    # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

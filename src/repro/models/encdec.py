@@ -1,0 +1,219 @@
+"""Encoder-decoder transformer (Seamless-M4T medium backbone).
+
+[audio] modality: the speech frontend is a STUB per the assignment —
+inputs are precomputed frame embeddings [B, S_enc, D].  The text decoder
+is standard: self-attention (cached) + cross-attention over the encoder
+output + FFN.  Cross-attention K/V are computed once per request at
+prefill and reused for every decode step (their own cache).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (KVQuantizer, attention, attn_init, dense_init, mlp,
+                     mlp_init, rmsnorm, rmsnorm_init)
+from .transformer import ForwardOptions, attn_spec
+
+
+def _enc_layer_init(cfg: ArchConfig, key, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(ks[0], attn_spec(cfg, causal=False), dtype),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype, cfg.gated_ffn),
+    }
+
+
+def _dec_layer_init(cfg: ArchConfig, key, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "ln_x": rmsnorm_init(cfg.d_model, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "self_attn": attn_init(ks[0], attn_spec(cfg), dtype),
+        "cross_attn": attn_init(ks[1], attn_spec(cfg, causal=False), dtype),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype, cfg.gated_ffn),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = cfg.jax_dtype
+    k_emb, k_enc, k_dec, k_head = jax.random.split(key, 4)
+    ek = jax.random.split(k_enc, cfg.n_encoder_layers)
+    dk = jax.random.split(k_dec, cfg.n_layers)
+    return {
+        "embed": dense_init(k_emb, cfg.vocab_padded, cfg.d_model, dtype),
+        "enc_norm": rmsnorm_init(cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab_padded, dtype),
+        "encoder": jax.vmap(lambda k: _enc_layer_init(cfg, k, dtype))(ek),
+        "decoder": jax.vmap(lambda k: _dec_layer_init(cfg, k, dtype))(dk),
+    }
+
+
+def encode(cfg: ArchConfig, params: dict, frames: jnp.ndarray,
+           opts: ForwardOptions = ForwardOptions()) -> jnp.ndarray:
+    """Bidirectional encoder over precomputed frame embeddings."""
+    spec = attn_spec(cfg, causal=False)
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1], dtype=jnp.int32)[None, :],
+        frames.shape[:2])
+
+    def body(h, p):
+        a, _ = attention(p["attn"], spec, rmsnorm(h, p["ln1"]), positions)
+        h = h + a
+        h = h + mlp(p["mlp"], rmsnorm(h, p["ln2"]))
+        return h, ()
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    h, _ = jax.lax.scan(body_fn, frames, params["encoder"],
+                        unroll=opts.unroll_layers)
+    return rmsnorm(h, params["enc_norm"])
+
+
+def empty_cache(cfg: ArchConfig, batch: int, s_max: int) -> dict:
+    dtype = cfg.jax_dtype
+    shape = (cfg.n_layers, batch, s_max, cfg.n_kv_heads, cfg.head_dim_)
+
+    def one():
+        if cfg.kv_quant:
+            return {"q": jnp.zeros(shape, jnp.int8),
+                    "scale": jnp.zeros((*shape[:-1], 1), jnp.float32)}
+        return jnp.zeros(shape, dtype)
+
+    return {"k": one(), "v": one()}
+
+
+def _cross_kv(cfg: ArchConfig, params: dict, enc_out: jnp.ndarray) -> tuple:
+    """Precompute cross-attention K/V for all decoder layers: [L,B,Se,H,D]."""
+    b, se, _ = enc_out.shape
+
+    def body(_, p):
+        k = (enc_out @ p["cross_attn"]["wk"]).reshape(
+            b, se, cfg.n_kv_heads, cfg.head_dim_)
+        v = (enc_out @ p["cross_attn"]["wv"]).reshape(
+            b, se, cfg.n_kv_heads, cfg.head_dim_)
+        return (), (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, (), params["decoder"])
+    return ks, vs
+
+
+def _decoder_pass(cfg: ArchConfig, params: dict, h: jnp.ndarray,
+                  positions, cross_k, cross_v, cache=None, cache_index=None,
+                  opts: ForwardOptions = ForwardOptions()) -> tuple:
+    spec = attn_spec(cfg)
+    spec_x = attn_spec(cfg, causal=False)
+    kvq = KVQuantizer(cfg.jax_dtype) if (cfg.kv_quant and cache is not None) \
+        else None
+    from .layers import sdpa
+
+    def body(carry, xs):
+        hh = carry
+        p, ck, cv, lk, lv = xs
+        a, new_kv = attention(p["self_attn"], spec, rmsnorm(hh, p["ln1"]),
+                              positions, kv_cache=(lk, lv) if lk is not None
+                              else None,
+                              cache_index=cache_index, kv_quant=kvq)
+        hh = hh + a
+        # cross attention against precomputed K/V
+        xq = rmsnorm(hh, p["ln_x"])
+        b, s, _ = xq.shape
+        q = (xq @ p["cross_attn"]["wq"]).reshape(b, s, cfg.n_heads,
+                                                 cfg.head_dim_)
+        xo = sdpa(q, ck, cv, None, cfg.n_heads // cfg.n_kv_heads)
+        hh = hh + xo.reshape(b, s, -1) @ p["cross_attn"]["wo"]
+        hh = hh + mlp(p["mlp"], rmsnorm(hh, p["ln2"]))
+        return hh, new_kv
+
+    if cache is None:
+        def nb(carry, xs):
+            p, ck, cv = xs
+            hh, _ = body(carry, (p, ck, cv, None, None))
+            return hh, ()
+        nb_fn = jax.checkpoint(nb) if cfg.remat else nb
+        h, _ = jax.lax.scan(nb_fn, h,
+                            (params["decoder"], cross_k, cross_v),
+                            unroll=opts.unroll_layers)
+        return h, None
+    h, new_cache = jax.lax.scan(
+        body, h, (params["decoder"], cross_k, cross_v,
+                  cache["k"], cache["v"]),
+        unroll=opts.unroll_layers)
+    return h, {"k": new_cache[0], "v": new_cache[1]}
+
+
+def forward(cfg: ArchConfig, params: dict, frames: jnp.ndarray,
+            tokens: jnp.ndarray, cache: Optional[dict] = None,
+            cache_index: Optional[jnp.ndarray] = None,
+            opts: ForwardOptions = ForwardOptions(),
+            last_token_only: bool = False) -> tuple:
+    """Teacher-forced enc-dec forward (training)."""
+    enc_out = encode(cfg, params, frames, opts)
+    cross_k, cross_v = _cross_kv(cfg, params, enc_out)
+    h = params["embed"][tokens]
+    b, s = h.shape[:2]
+    base = cache_index if cache_index is not None else 0
+    positions = jnp.broadcast_to(
+        base + jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+    h, new_cache = _decoder_pass(cfg, params, h, positions, cross_k, cross_v,
+                                 cache=cache, cache_index=cache_index,
+                                 opts=opts)
+    h = rmsnorm(h, params["final_norm"])
+    if last_token_only:
+        h = h[:, -1:, :]
+    return h @ params["lm_head"], new_cache
+
+
+def loss_fn(cfg: ArchConfig, params: dict, frames: jnp.ndarray,
+            tokens: jnp.ndarray, targets: jnp.ndarray,
+            opts: ForwardOptions = ForwardOptions()) -> jnp.ndarray:
+    logits, _ = forward(cfg, params, frames, tokens, opts=opts)
+    logits = logits.astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill(cfg: ArchConfig, params: dict, frames: jnp.ndarray,
+            tokens: jnp.ndarray, s_max: int,
+            opts: ForwardOptions = ForwardOptions()) -> tuple:
+    """Encode + teacher-forced prompt pass.  Returns (last logits, state)
+    where state carries the self-attn cache AND the cross-K/V cache."""
+    enc_out = encode(cfg, params, frames, opts)
+    cross_k, cross_v = _cross_kv(cfg, params, enc_out)
+    b, s = tokens.shape
+    cache = empty_cache(cfg, b, s_max)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :],
+                                 (b, s))
+    h = params["embed"][tokens]
+    h, cache = _decoder_pass(cfg, params, h, positions, cross_k, cross_v,
+                             cache=cache, cache_index=jnp.int32(0), opts=opts)
+    h = rmsnorm(h[:, -1:], params["final_norm"])
+    logits = h @ params["lm_head"]
+    return logits[:, 0], {"self": cache, "cross_k": cross_k,
+                          "cross_v": cross_v}
+
+
+def decode_step(cfg: ArchConfig, params: dict, state: dict,
+                token: jnp.ndarray, t: jnp.ndarray,
+                opts: ForwardOptions = ForwardOptions()) -> tuple:
+    b = token.shape[0]
+    h = params["embed"][token[:, None]]
+    positions = jnp.broadcast_to(t + jnp.zeros((b, 1), jnp.int32), (b, 1))
+    h, cache = _decoder_pass(cfg, params, h, positions,
+                             state["cross_k"], state["cross_v"],
+                             cache=state["self"], cache_index=t, opts=opts)
+    h = rmsnorm(h, params["final_norm"])
+    logits = h @ params["lm_head"]
+    return logits[:, 0], {"self": cache, "cross_k": state["cross_k"],
+                          "cross_v": state["cross_v"]}

@@ -1,0 +1,167 @@
+"""Hymba-style hybrid LM: every layer runs attention heads and a Mamba
+SSM branch IN PARALLEL on the same input, outputs averaged (arXiv
+2411.13676's parallel-head design), followed by the FFN.
+
+The SSM branch carries long-range state, so the attention half can use a
+sliding window for the `long_500k` shape (window from the config or a
+ForwardOptions override) — the sub-quadratic path required by the
+assignment.
+
+Serving state per layer = (attention KV cache, SSM state); the KV cache
+is window-sized under sliding-window mode.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import (KVQuantizer, attention, attn_init, dense_init, mlp,
+                     mlp_init, rmsnorm, rmsnorm_init)
+from .ssm import ssm_forward, ssm_init, ssm_step
+from .transformer import ForwardOptions, attn_spec
+
+
+def _layer_init(cfg: ArchConfig, key, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(ks[0], attn_spec(cfg), dtype),
+        "ssm": ssm_init(ks[1], cfg.d_model, cfg.q_dim, cfg.ssm_state, dtype),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, dtype, cfg.gated_ffn),
+    }
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = cfg.jax_dtype
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    return {
+        "embed": dense_init(k_emb, cfg.vocab_padded, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab_padded, dtype),
+        "layers": jax.vmap(lambda k: _layer_init(cfg, k, dtype))(keys),
+    }
+
+
+def empty_cache(cfg: ArchConfig, batch: int, s_max: int,
+                window: Optional[int] = None) -> dict:
+    """(KV cache, SSM state) stacked over layers.  Under sliding-window
+    serving the KV buffer only needs `window` slots."""
+    dtype = cfg.jax_dtype
+    s_kv = min(s_max, window) if window else s_max
+    kv_shape = (cfg.n_layers, batch, s_kv, cfg.n_kv_heads, cfg.head_dim_)
+    if cfg.kv_quant:
+        k = {"q": jnp.zeros(kv_shape, jnp.int8),
+             "scale": jnp.zeros((*kv_shape[:-1], 1), jnp.float32)}
+        v = {"q": jnp.zeros(kv_shape, jnp.int8),
+             "scale": jnp.zeros((*kv_shape[:-1], 1), jnp.float32)}
+    else:
+        k = jnp.zeros(kv_shape, dtype)
+        v = jnp.zeros(kv_shape, dtype)
+    ssm_state = jnp.zeros((cfg.n_layers, batch, cfg.q_dim, cfg.ssm_state),
+                          jnp.float32)
+    return {"k": k, "v": v, "ssm": ssm_state}
+
+
+def _layer(cfg: ArchConfig, p: dict, h: jnp.ndarray, positions, kv=None,
+           ssm_state=None, cache_index=None, kv_quant=None, mask_index=None,
+           opts: ForwardOptions = ForwardOptions()) -> tuple:
+    spec = attn_spec(cfg, opts.window_override)
+    x = rmsnorm(h, p["ln1"])
+    a_out, new_kv = attention(p["attn"], spec, x, positions, kv_cache=kv,
+                              cache_index=cache_index, kv_quant=kv_quant,
+                              mask_index=mask_index)
+    if x.shape[1] == 1 and ssm_state is not None:
+        s_out, new_state = ssm_step(p["ssm"], x, ssm_state)
+    else:
+        s_out, new_state = ssm_forward(p["ssm"], x, ssm_state)
+    h = h + 0.5 * (a_out + s_out)          # parallel heads, averaged
+    h = h + mlp(p["mlp"], rmsnorm(h, p["ln2"]))
+    return h, new_kv, new_state
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jnp.ndarray,
+            cache: Optional[dict] = None,
+            cache_index: Optional[jnp.ndarray] = None,
+            mask_index: Optional[jnp.ndarray] = None,
+            opts: ForwardOptions = ForwardOptions(),
+            last_token_only: bool = False) -> tuple:
+    h = params["embed"][tokens]
+    b, s = h.shape[:2]
+    base = (mask_index if mask_index is not None
+            else cache_index if cache_index is not None else 0)
+    positions = base + jnp.arange(s, dtype=jnp.int32)[None, :]
+    positions = jnp.broadcast_to(positions, (b, s))
+    kvq = KVQuantizer(cfg.jax_dtype) if (cfg.kv_quant and cache is not None) \
+        else None
+
+    if cache is None:
+        def body(carry, p):
+            hh, aux = carry
+            hn, _, _ = _layer(cfg, p, hh, positions, opts=opts)
+            return (hn, aux), ()
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (h, _), _ = jax.lax.scan(body_fn, (h, jnp.float32(0.0)),
+                                 params["layers"], unroll=opts.unroll_layers)
+        new_cache = None
+    else:
+        def body(carry, xs):
+            hh = carry
+            p, lk, lv, lstate = xs
+            hn, (nk, nv), nstate = _layer(
+                cfg, p, hh, positions, kv=(lk, lv), ssm_state=lstate,
+                cache_index=cache_index, kv_quant=kvq,
+                mask_index=mask_index, opts=opts)
+            return hn, {"k": nk, "v": nv, "ssm": nstate}
+        h, new_cache = jax.lax.scan(
+            body, h, (params["layers"], cache["k"], cache["v"], cache["ssm"]),
+            unroll=opts.unroll_layers)
+
+    h = rmsnorm(h, params["final_norm"])
+    if last_token_only:
+        h = h[:, -1:, :]
+    logits = h @ params["lm_head"]
+    return logits, new_cache
+
+
+def loss_fn(cfg: ArchConfig, params: dict, tokens: jnp.ndarray,
+            targets: jnp.ndarray,
+            opts: ForwardOptions = ForwardOptions()) -> jnp.ndarray:
+    logits, _ = forward(cfg, params, tokens, opts=opts)
+    logits = logits.astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jnp.ndarray, s_max: int,
+            window: Optional[int] = None,
+            opts: ForwardOptions = ForwardOptions()) -> tuple:
+    b = tokens.shape[0]
+    cache = empty_cache(cfg, b, s_max, window)
+    logits, cache = forward(cfg, params, tokens, cache=cache,
+                            cache_index=jnp.int32(0), opts=opts,
+                            last_token_only=True)
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict,
+                token: jnp.ndarray, t: jnp.ndarray,
+                opts: ForwardOptions = ForwardOptions()) -> tuple:
+    """One decode step.  Under sliding-window serving the cache write
+    index wraps modulo the window (ring buffer); the causal mask uses the
+    logical position."""
+    s_kv = (cache["k"]["q"] if cfg.kv_quant else cache["k"]).shape[2]
+    idx = jnp.mod(t, s_kv)
+    logits, cache = forward(cfg, params, token[:, None], cache=cache,
+                            cache_index=idx, mask_index=t, opts=opts,
+                            last_token_only=True)
+    return logits[:, 0], cache

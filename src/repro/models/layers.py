@@ -1,0 +1,478 @@
+"""Shared transformer building blocks (pure JAX, functional style).
+
+All layer functions operate on UNSTACKED single-layer parameter dicts;
+models stack parameters along a leading layer axis and drive these
+functions through `jax.lax.scan`.  Initializers mirror the forward
+structure so `jax.eval_shape(init, ...)` yields allocation-free
+ShapeDtypeStructs for the multi-pod dry-run.
+
+Attention covers every assigned-architecture variant through flags:
+GQA (n_kv_heads < n_heads), decoupled head_dim (Qwen3), per-head q/k
+RMSNorm (Qwen3), QKV bias (Qwen1.5-110B), sliding windows (Hymba long
+context), cross-attention (Seamless decoder / Llama-3.2-Vision), and a
+quantizable KV cache (int8 + per-block scales, the paper's KV-precision
+axis as a real serving feature).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+DType = jnp.dtype
+
+
+# ---------------------------------------------------------------------------
+# Initialization helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalization / rotary embedding
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * gamma
+
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: [B, S, H, Dh]; positions: [B, S] (int)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # [Dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [B, S, Dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    window: int = 0              # 0 = full attention
+    causal: bool = True
+    rope: bool = True
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+def attn_init(key, spec: AttnSpec, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], spec.d_model, spec.q_dim, dtype),
+        "wk": dense_init(ks[1], spec.d_model, spec.kv_dim, dtype),
+        "wv": dense_init(ks[2], spec.d_model, spec.kv_dim, dtype),
+        "wo": dense_init(ks[3], spec.q_dim, spec.d_model, dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((spec.q_dim,), dtype)
+        p["bk"] = jnp.zeros((spec.kv_dim,), dtype)
+        p["bv"] = jnp.zeros((spec.kv_dim,), dtype)
+    if spec.qk_norm:
+        p["q_norm"] = rmsnorm_init(spec.head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(spec.head_dim, dtype)
+    return p
+
+
+def _split_heads(x: jnp.ndarray, n: int, dh: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, dh)
+
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         mask: Optional[jnp.ndarray], n_rep: int) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention.
+
+    q: [B, Sq, Hq, Dh]; k/v: [B, Skv, Hkv, Dh]; mask: [B, 1, Sq, Skv] bool
+    (True = attend) or None.  Returns [B, Sq, Hq, Dh].
+    """
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    qg = q.reshape(b, sq, hkv, n_rep, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+Q_CHUNK = 512          # query-chunk size for the memory-sane SDPA path
+CHUNKED_THRESHOLD = 2048   # q_len at which attention switches to chunking
+
+
+def sdpa_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 n_rep: int, q_start, *, causal: bool,
+                 window: int = 0, ring_full: bool = False) -> jnp.ndarray:
+    """Query-chunked attention: scan over q chunks so the live score tile
+    is [B, Hq, q_chunk, Skv] instead of [B, Hq, Sq, Skv].
+
+    This is the XLA-level analogue of flash attention's on-chip tiling
+    (the Pallas kernel in repro/kernels is the TPU-native version; this
+    path keeps dry-run memory analysis faithful for 32k-500k sequences).
+
+    q_start: absolute position of q[0] (int or traced scalar).
+    ring_full: sliding-window ring buffer where every K slot is valid.
+    """
+    b, sq, hq, dh = q.shape
+    skv = k.shape[1]
+    qc = min(Q_CHUNK, sq)
+    pad = (-sq) % qc
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = q.shape[1] // qc
+    qs = q.reshape(b, n_chunks, qc, hq, dh).swapaxes(0, 1)
+    kpos = jnp.arange(skv)
+
+    # flash-style remat: probabilities are recomputed in the backward
+    # pass instead of stashing an [B, H, qc, Skv] residual per chunk
+    @jax.checkpoint
+    def chunk(carry, xs):
+        qj, j = xs
+        qpos = q_start + j * qc + jnp.arange(qc)
+        if causal and not ring_full:
+            m = kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                m &= kpos[None, :] > qpos[:, None] - window
+        elif ring_full:
+            m = (kpos[None, :] <= qpos[:, None]) | (qpos[:, None] >= skv)
+        else:
+            m = jnp.ones((qc, skv), bool)
+        out = sdpa(qj, k, v, m[None, None], n_rep)
+        return carry, out
+
+    _, outs = jax.lax.scan(chunk, (),
+                           (qs, jnp.arange(n_chunks)))
+    out = outs.swapaxes(0, 1).reshape(b, n_chunks * qc, hq, dh)
+    return out[:, :sq]
+
+
+def causal_mask(sq: int, skv: int, window: int = 0,
+                offset: int = 0) -> jnp.ndarray:
+    """[1, 1, sq, skv] boolean mask; offset = absolute position of query 0."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def attention(params: dict, spec: AttnSpec, x: jnp.ndarray,
+              positions: jnp.ndarray,
+              kv_cache: Optional[tuple] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              kv_quant: Optional["KVQuantizer"] = None,
+              context: Optional[jnp.ndarray] = None,
+              mask_index: Optional[jnp.ndarray] = None) -> tuple:
+    """Self- or cross-attention with optional KV cache.
+
+    x: [B, S, D].  context: [B, Sc, D] for cross-attention (no cache
+    update, no causal mask).  kv_cache: (k, v) stacked buffers
+    [B, S_max, Hkv, Dh] (possibly quantized containers).  cache_index:
+    scalar write offset.  mask_index: logical position used for the
+    causal mask when it differs from the physical write offset (ring-
+    buffer sliding-window serving).  Returns (out, new_cache or None).
+    """
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    if spec.qkv_bias:
+        q = q + params["bq"]
+    q = _split_heads(q, spec.n_heads, spec.head_dim)
+
+    n_rep = spec.n_heads // spec.n_kv_heads
+    if context is not None:
+        k = _split_heads(context @ params["wk"], spec.n_kv_heads,
+                         spec.head_dim)
+        v = _split_heads(context @ params["wv"], spec.n_kv_heads,
+                         spec.head_dim)
+        if spec.qk_norm:
+            q = rmsnorm(q, params["q_norm"])
+            k = rmsnorm(k, params["k_norm"])
+        if s >= CHUNKED_THRESHOLD:
+            out = sdpa_chunked(q, k, v, n_rep, 0, causal=False)
+        else:
+            out = sdpa(q, k, v, None, n_rep)
+        return out.reshape(b, s, -1) @ params["wo"], None
+
+    k = _split_heads(x @ params["wk"] + (params["bk"] if spec.qkv_bias else 0),
+                     spec.n_kv_heads, spec.head_dim)
+    v = _split_heads(x @ params["wv"] + (params["bv"] if spec.qkv_bias else 0),
+                     spec.n_kv_heads, spec.head_dim)
+    if spec.qk_norm:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    if spec.rope:
+        q = apply_rope(q, positions, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_theta)
+
+    if kv_cache is None:
+        if s >= CHUNKED_THRESHOLD:
+            out = sdpa_chunked(q, k, v, n_rep, 0, causal=spec.causal,
+                               window=spec.window)
+        else:
+            mask = causal_mask(s, s, spec.window) if spec.causal else None
+            out = sdpa(q, k, v, mask, n_rep)
+        return out.reshape(b, s, -1) @ params["wo"], (k, v)
+
+    # cached decode / chunked prefill: write new K/V at cache_index
+    ck, cv = kv_cache
+
+    def update(cache, new):
+        if kv_quant is not None:
+            nq = kv_quant.quantize(new)
+            return {
+                "q": jax.lax.dynamic_update_slice_in_dim(
+                    cache["q"], nq["q"], cache_index, axis=1),
+                "scale": jax.lax.dynamic_update_slice_in_dim(
+                    cache["scale"], nq["scale"], cache_index, axis=1),
+            }
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), cache_index, axis=1)
+
+    ck = update(ck, k)
+    cv = update(cv, v)
+    k_full = (kv_quant.dequantize(ck) if kv_quant is not None else ck)
+    v_full = (kv_quant.dequantize(cv) if kv_quant is not None else cv)
+    s_max = k_full.shape[1]
+    logical = cache_index if mask_index is None else mask_index
+    if s >= CHUNKED_THRESHOLD:
+        out = sdpa_chunked(q, k_full.astype(q.dtype),
+                           v_full.astype(q.dtype), n_rep, logical,
+                           causal=True, window=spec.window,
+                           ring_full=mask_index is not None)
+    else:
+        kpos = jnp.arange(s_max)[None, :]
+        qpos = logical + jnp.arange(s)[:, None]
+        m = (kpos[None] <= qpos[None])            # [1, sq, s_max]
+        if mask_index is not None:
+            # ring buffer: once wrapped, every physical slot is in-window
+            m = m | (qpos[None] >= s_max)
+        elif spec.window > 0:
+            m = m & (kpos[None] > qpos[None] - spec.window)
+        out = sdpa(q, k_full.astype(q.dtype), v_full.astype(q.dtype),
+                   m[:, None], n_rep)
+    return out.reshape(b, s, -1) @ params["wo"], (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV cache (the paper's KV-precision axis as a serving feature)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantizer:
+    """Symmetric int8 KV quantization with per-(token, head) scales."""
+
+    dtype: DType = jnp.bfloat16
+
+    def quantize(self, x: jnp.ndarray) -> dict:
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+        scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+        return {"q": q.astype(jnp.int8), "scale": scale.astype(jnp.float32)}
+
+    def dequantize(self, c) -> jnp.ndarray:
+        if isinstance(c, dict):
+            return (c["q"].astype(jnp.float32) * c["scale"]).astype(self.dtype)
+        return c
+
+    def empty(self, shape, dtype=None) -> dict:
+        return {"q": jnp.zeros(shape, jnp.int8),
+                "scale": jnp.zeros((*shape[:-1], 1), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward: dense (gated / plain) and Mixture-of-Experts
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype, gated: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    up = x @ params["w_up"]
+    if "w_gate" in params:
+        up = jax.nn.silu(x @ params["w_gate"]) * up
+    else:
+        up = jax.nn.gelu(up)
+    return up @ params["w_down"]
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int, dtype,
+             gated: bool = True) -> dict:
+    ks = jax.random.split(key, 4)
+    scale = (2.0 / (d_model + d_ff)) ** 0.5
+
+    def ew(k, a, b):
+        return (jax.random.normal(k, (n_experts, a, b), jnp.float32)
+                * scale).astype(dtype)
+
+    p = {"router": dense_init(ks[0], d_model, n_experts, dtype),
+         "w_up": ew(ks[1], d_model, d_ff),
+         "w_down": ew(ks[2], d_ff, d_model)}
+    if gated:
+        p["w_gate"] = ew(ks[3], d_model, d_ff)
+    return p
+
+
+def _moe_tokens(params: dict, tokens: jnp.ndarray, top_k: int,
+                capacity_factor: float) -> tuple:
+    """GShard-style capacity dispatch for a flat token chunk [T, D]."""
+    t, d = tokens.shape
+    n_exp = params["router"].shape[-1]
+    logits = (tokens @ params["router"]).astype(jnp.float32)   # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    # capacity floor min(T, 64) makes small chunks (decode steps) dropless
+    cap = max(1, int(capacity_factor * t * top_k / n_exp), min(t, 64))
+
+    gates, picks = jax.lax.top_k(probs, top_k)                 # [T, k]
+    gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+
+    dispatch = jnp.zeros((t, n_exp, cap), tokens.dtype)
+    combine = jnp.zeros((t, n_exp, cap), jnp.float32)
+    base = jnp.zeros((n_exp,), jnp.int32)    # slots used by earlier ranks
+    for slot in range(top_k):
+        e = picks[:, slot]                                     # [T]
+        onehot = jax.nn.one_hot(e, n_exp, dtype=jnp.int32)     # [T, E]
+        rank = jnp.cumsum(onehot, axis=0) * onehot             # 1-based
+        pos_t = jnp.sum((rank + base[None, :] - 1) * onehot, axis=1)
+        keep = (pos_t < cap) & (pos_t >= 0)
+        oh_cap = jax.nn.one_hot(pos_t, cap) * keep[:, None]
+        upd = onehot[:, :, None] * oh_cap[:, None, :]
+        dispatch = dispatch + upd.astype(tokens.dtype)
+        combine = combine + upd * gates[:, slot][:, None, None]
+        base = base + jnp.sum(onehot, axis=0)
+
+    xe = jnp.einsum("td,tec->ecd", tokens, dispatch)           # [E, C, D]
+    up = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    if "w_gate" in params:
+        up = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe,
+                                    params["w_gate"])) * up
+    else:
+        up = jax.nn.gelu(up)
+    ye = jnp.einsum("ecf,efd->ecd", up, params["w_down"])      # [E, C, D]
+    out = jnp.einsum("ecd,tec->td", ye, combine.astype(ye.dtype))
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(picks[:, 0], n_exp), axis=0)
+    aux = n_exp * jnp.sum(me * ce)
+    return out.astype(tokens.dtype), aux
+
+
+# Bound on tokens per dispatch chunk: the [T, E, C] dispatch tensor is
+# O(T^2 k / E); chunking the sequence keeps it ~O(T_MAX^2) regardless of
+# global batch (the chunks run under lax.scan, so peak memory is 1 chunk).
+MOE_CHUNK_TOKENS = 16_384
+
+
+def moe(params: dict, x: jnp.ndarray, top_k: int,
+        capacity_factor: float = 1.25, dp_blocks: int = 1) -> tuple:
+    """Capacity-based MoE over [B, S, D], sequence-chunked (see above).
+
+    Tokens beyond an expert's capacity are dropped (residual passes
+    through), keeping compute at tokens * top_k * expert_ffn — the
+    paper's N_active accounting.
+
+    dp_blocks > 1 (perf iteration A): tokens are dispatched in
+    `dp_blocks` independent blocks matching the data-parallel sharding,
+    via vmap over a leading block axis.  The dispatch/combine einsums
+    then contract within a block instead of across the token-sharded
+    dim, removing the [E, C, D] partial-sum all-reduce across the DP
+    axis that dominates MoE training collectives.
+    """
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    total = b * s
+
+    if dp_blocks > 1 and total % dp_blocks == 0 \
+            and (total // dp_blocks) % 128 == 0:
+        blocks = tokens.reshape(dp_blocks, total // dp_blocks, d)
+
+        @jax.checkpoint
+        def one_block(blk):
+            per = blk.shape[0]
+            if per > MOE_CHUNK_TOKENS and per % MOE_CHUNK_TOKENS == 0:
+                chunks = blk.reshape(per // MOE_CHUNK_TOKENS,
+                                     MOE_CHUNK_TOKENS, d)
+
+                def body(carry, chunk):
+                    o, a = _moe_tokens(params, chunk, top_k,
+                                       capacity_factor)
+                    return carry + a, o
+
+                a, outs = jax.lax.scan(body, jnp.float32(0.0), chunks)
+                return outs.reshape(per, d), a
+            return _moe_tokens(params, blk, top_k, capacity_factor)
+
+        outs, auxs = jax.vmap(one_block)(blocks)
+        return (outs.reshape(b, s, d), jnp.mean(auxs))
+
+    if total <= MOE_CHUNK_TOKENS:
+        out, aux = _moe_tokens(params, tokens, top_k, capacity_factor)
+        return out.reshape(b, s, d), aux
+    # pad to a whole number of chunks, scan over them
+    n_chunks = -(-total // MOE_CHUNK_TOKENS)
+    pad = n_chunks * MOE_CHUNK_TOKENS - total
+    padded = jnp.pad(tokens, ((0, pad), (0, 0)))
+    chunks = padded.reshape(n_chunks, MOE_CHUNK_TOKENS, d)
+
+    # remat the dispatch: the [T, E, C] one-hot tensors are recomputed in
+    # the backward pass instead of being saved per chunk (without this,
+    # grad-of-scan stashes ~C x tokens x E residuals per layer)
+    @jax.checkpoint
+    def body(carry, chunk):
+        out, aux = _moe_tokens(params, chunk, top_k, capacity_factor)
+        return carry + aux, out
+
+    aux_sum, outs = jax.lax.scan(body, jnp.float32(0.0), chunks)
+    out = outs.reshape(n_chunks * MOE_CHUNK_TOKENS, d)[:total]
+    return out.reshape(b, s, d), aux_sum / n_chunks

@@ -1,0 +1,80 @@
+"""Mamba-style selective SSM branch (for the Hymba hybrid architecture).
+
+Linear time-varying recurrence  h_t = a_t * h_{t-1} + b_t  evaluated with
+`jax.lax.associative_scan` (parallel prefix) for sequence inputs and a
+single fused update for decode.  State: [B, d_inner, ssm_state].
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def ssm_init(key, d_model: int, d_inner: int, state: int, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "w_out": dense_init(ks[1], d_inner, d_model, dtype),
+        "w_bc": dense_init(ks[2], d_inner, 2 * state, dtype),
+        "w_dt": dense_init(ks[3], d_inner, 1, dtype),
+        # log-spaced stable decay rates (S4/Mamba init)
+        "log_a": jnp.log(jnp.linspace(1.0, float(state), state))[None, :]
+        .astype(jnp.float32) * jnp.ones((d_inner, 1), jnp.float32),
+        "d_skip": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _gates(params: dict, x_in: jnp.ndarray):
+    """x_in: [..., d_inner] -> (a [..., d_inner, N], bu, c)."""
+    bc = x_in @ params["w_bc"]
+    b, c = jnp.split(bc, 2, axis=-1)                       # [..., N]
+    dt = jax.nn.softplus((x_in @ params["w_dt"]))          # [..., 1]
+    a = jnp.exp(-dt[..., None] * jnp.exp(params["log_a"])
+                .astype(jnp.float32))                      # [..., d, N]
+    bu = (dt * x_in)[..., None] * b[..., None, :]          # [..., d, N]
+    return a, bu, c
+
+
+def ssm_forward(params: dict, x: jnp.ndarray,
+                state: jnp.ndarray = None) -> tuple:
+    """x: [B, S, D] -> ([B, S, D], final_state [B, d_inner, N])."""
+    bsz, s, _ = x.shape
+    xz = x @ params["w_in"]
+    x_in, z = jnp.split(xz, 2, axis=-1)                    # [B, S, d]
+    x_in = jax.nn.silu(x_in)
+    a, bu, c = _gates(params, x_in)                        # [B,S,d,N]
+    a = a.astype(jnp.float32)
+    bu = bu.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((bsz, a.shape[2], a.shape[3]), jnp.float32)
+    # prepend the carried state as step 0: h_0' = state (a=1)
+    a_full = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+    bu_full = jnp.concatenate([state[:, None], bu], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a_full, bu_full), axis=1)
+    h = h[:, 1:]                                           # [B,S,d,N]
+    y = jnp.einsum("bsdn,bsn->bsd", h, c.astype(jnp.float32))
+    y = y.astype(x.dtype) + x_in * params["d_skip"]
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"], h[:, -1]
+
+
+def ssm_step(params: dict, x: jnp.ndarray, state: jnp.ndarray) -> tuple:
+    """One decode step: x [B, 1, D], state [B, d_inner, N]."""
+    xz = x @ params["w_in"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = jax.nn.silu(x_in)
+    a, bu, c = _gates(params, x_in[:, 0])                  # [B,d,N]
+    new_state = a.astype(jnp.float32) * state + bu.astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", new_state, c.astype(jnp.float32))
+    y = y.astype(x.dtype) + x_in[:, 0] * params["d_skip"]
+    y = y * jax.nn.silu(z[:, 0])
+    return (y @ params["w_out"])[:, None], new_state

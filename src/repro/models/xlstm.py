@@ -1,0 +1,332 @@
+"""xLSTM LM (arXiv 2405.04517): alternating mLSTM and sLSTM blocks.
+
+mLSTM: matrix-memory linear attention with exponential input gates and
+sigmoid forget gates.  We use the chunkwise-parallel formulation
+(O(T * d^2), sub-quadratic) — chunk-local quadratic attention plus a
+recurrent inter-chunk state [B, H, Dk, Dv], carried by `lax.scan` over
+chunks.  Decode is a single fused state update (O(1) per token) — this
+is the assignment's long_500k sub-quadratic path.
+
+sLSTM: scalar-memory recurrence per head with exponential gating and a
+normalizer/stabilizer state, scanned over time.
+
+d_ff == 0 per the assigned config: blocks carry their own up/down
+projections, no separate FFN.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import dense_init, rmsnorm, rmsnorm_init
+from .transformer import ForwardOptions
+
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_init(cfg: ArchConfig, key, dtype) -> dict:
+    d, qd = cfg.d_model, cfg.q_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "w_q": dense_init(ks[0], d, qd, dtype),
+        "w_k": dense_init(ks[1], d, qd, dtype),
+        "w_v": dense_init(ks[2], d, qd, dtype),
+        "w_if": dense_init(ks[3], d, 2 * cfg.n_heads, dtype),  # i/f gates
+        "w_o": dense_init(ks[4], qd, d, dtype),
+        "w_gate": dense_init(ks[5], d, qd, dtype),
+    }
+
+
+def _mlstm_heads(cfg: ArchConfig, p: dict, x: jnp.ndarray):
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim_
+    q = (x @ p["w_q"]).reshape(b, s, h, dh) / jnp.sqrt(jnp.float32(dh)).astype(x.dtype)
+    k = (x @ p["w_k"]).reshape(b, s, h, dh)
+    v = (x @ p["w_v"]).reshape(b, s, h, dh)
+    gates = (x @ p["w_if"]).astype(jnp.float32).reshape(b, s, h, 2)
+    log_f = jax.nn.log_sigmoid(gates[..., 0] + 4.0)     # forget, biased open
+    log_i = gates[..., 1] - 4.0                         # exponential input
+    return q, k, v, log_f, log_i
+
+
+def mlstm_forward(cfg: ArchConfig, p: dict, x_in: jnp.ndarray,
+                  state: Optional[dict] = None) -> tuple:
+    """Chunkwise-parallel mLSTM. x_in: [B, S, D] (pre-norm inside)."""
+    x = rmsnorm(x_in, p["ln"])
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim_
+    q, k, v, log_f, log_i = _mlstm_heads(cfg, p, x)
+    if state is None:
+        state = mlstm_empty_state(cfg, b)
+    # pad to a whole number of chunks
+    pad = (-s) % CHUNK
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+    n_chunks = q.shape[1] // CHUNK
+
+    def split(a):
+        return a.reshape(b, n_chunks, CHUNK, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = split(q), split(k), split(v)
+    fc, ic = split(log_f), split(log_i)
+
+    def chunk_body(carry, xs):
+        S, n = carry                        # S: [B,H,Dk,Dv], n: [B,H,Dk]
+        qj, kj, vj, fj, ij = xs             # [B,C,H,*]
+        # cumulative forget within chunk (inclusive)
+        cf = jnp.cumsum(fj, axis=1)                       # [B,C,H]
+        total_f = cf[:, -1]                               # [B,H]
+        # decay from chunk start to position t (exclusive of t's own f? use
+        # inclusive: state contribution uses product of f_1..f_t)
+        decay_in = jnp.exp(cf)                            # [B,C,H]
+        # intra-chunk attention: D[t,u] = exp(cf_t - cf_u + i_u), u <= t
+        lt = cf[:, :, None, :] - cf[:, None, :, :] + ij[:, None, :, :]
+        mask = jnp.tril(jnp.ones((CHUNK, CHUNK), bool))
+        lt = jnp.where(mask[None, :, :, None], lt, -1e30)  # [B,C,C,H]
+        w = jnp.exp(jnp.clip(lt, -60.0, 20.0)).astype(qj.dtype)
+        scores = jnp.einsum("bthd,buhd->btuh", qj, kj) * w.transpose(
+            0, 1, 2, 3)
+        intra = jnp.einsum("btuh,buhd->bthd", scores, vj)
+        # inter-chunk: q_t decayed against carried state
+        inter = jnp.einsum("bthd,bhde->bthe",
+                           qj * decay_in[..., None].astype(qj.dtype),
+                           S.astype(qj.dtype))
+        # normalizer (denominator) for stability
+        norm_intra = jnp.einsum("btuh,buhd->bthd", scores,
+                                jnp.ones_like(vj))[..., :1]
+        norm_inter = jnp.einsum(
+            "bthd,bhd->bth", qj * decay_in[..., None].astype(qj.dtype),
+            n.astype(qj.dtype))[..., None]
+        denom = jnp.maximum(jnp.abs(norm_intra + norm_inter), 1.0)
+        out = (intra + inter) / denom
+        # state update: S' = f_total * S + sum_u exp(total_f - cf_u + i_u) k_u v_u^T
+        g = jnp.exp(jnp.clip(total_f[:, None] - cf + ij, -60.0, 20.0))
+        S_new = (jnp.exp(jnp.clip(total_f, -60.0, 20.0))[..., None, None]
+                 * S
+                 + jnp.einsum("buh,buhd,buhe->bhde",
+                              g, kc_cur(kj), vj.astype(jnp.float32)))
+        n_new = (jnp.exp(jnp.clip(total_f, -60.0, 20.0))[..., None] * n
+                 + jnp.einsum("buh,buhd->bhd", g, kc_cur(kj)))
+        return (S_new, n_new), out
+
+    def kc_cur(kj):
+        return kj.astype(jnp.float32)
+
+    (S_f, n_f), outs = jax.lax.scan(
+        chunk_body, (state["S"], state["n"]), (qc, kc, vc, fc, ic))
+    out = outs.swapaxes(0, 1).reshape(b, n_chunks * CHUNK, h, dh)[:, :s]
+    out = out.reshape(b, s, h * dh)
+    out = out * jax.nn.silu(x @ p["w_gate"])
+    return x_in + out @ p["w_o"], {"S": S_f, "n": n_f}
+
+
+def mlstm_step(cfg: ArchConfig, p: dict, x_in: jnp.ndarray,
+               state: dict) -> tuple:
+    """O(1) decode update. x_in: [B, 1, D]."""
+    x = rmsnorm(x_in, p["ln"])
+    q, k, v, log_f, log_i = _mlstm_heads(cfg, p, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                   # [B,H,Dh]
+    f = jnp.exp(jnp.clip(log_f[:, 0], -60.0, 0.0))        # [B,H]
+    i = jnp.exp(jnp.clip(log_i[:, 0], -60.0, 20.0))
+    S = (f[..., None, None] * state["S"]
+         + jnp.einsum("bh,bhd,bhe->bhde", i, k.astype(jnp.float32),
+                      v.astype(jnp.float32)))
+    n = f[..., None] * state["n"] + i[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), S)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32),
+                                         n))[..., None], 1.0)
+    out = (num / den).astype(x.dtype).reshape(x.shape[0], 1, -1)
+    out = out * jax.nn.silu(x @ p["w_gate"])
+    return x_in + out @ p["w_o"], {"S": S, "n": n}
+
+
+def mlstm_empty_state(cfg: ArchConfig, batch: int) -> dict:
+    h, dh = cfg.n_heads, cfg.head_dim_
+    return {"S": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def _slstm_dims(cfg: ArchConfig) -> tuple:
+    """(dp, n_heads, head_width): projection factor 1 and block-diagonal
+    per-head recurrence (the real sLSTM keeps R head-local)."""
+    dp = cfg.d_model
+    h = cfg.n_heads
+    return dp, h, dp // h
+
+
+def slstm_init(cfg: ArchConfig, key, dtype) -> dict:
+    d = cfg.d_model
+    dp, h, hw = _slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    scale = (2.0 / (hw + 4 * hw)) ** 0.5
+    r_in = (jax.random.normal(ks[1], (h, hw, 4 * hw), jnp.float32)
+            * scale).astype(dtype)
+    return {
+        "ln": rmsnorm_init(d, dtype),
+        "w_in": dense_init(ks[0], d, 4 * dp, dtype),   # z, i, f, o preacts
+        "r_in": r_in,                                  # block-diag recurrence
+        "w_down": dense_init(ks[2], dp, d, dtype),
+    }
+
+
+def _recurrent_pre(p: dict, h_state, dtype):
+    """Block-diagonal recurrent preactivation: [B, dp] -> [B, 4*dp] in
+    the z/i/f/o-concatenated layout of w_in."""
+    n_h, hw, _ = p["r_in"].shape
+    b = h_state.shape[0]
+    hh = h_state.astype(dtype).reshape(b, n_h, hw)
+    pre = jnp.einsum("bhw,hwf->bhf", hh, p["r_in"])     # [B, H, 4*hw]
+    pre = pre.reshape(b, n_h, 4, hw).swapaxes(1, 2).reshape(b, 4 * n_h * hw)
+    return pre
+
+
+def slstm_empty_state(cfg: ArchConfig, batch: int) -> dict:
+    dp, _, _ = _slstm_dims(cfg)
+    z = jnp.zeros((batch, dp), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def _slstm_cell(pre: jnp.ndarray, st: dict) -> dict:
+    """Stabilized sLSTM cell (exponential gating with max-state m)."""
+    z, i, f, o = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f + 1.0)
+    m_new = jnp.maximum(log_f + st["m"], i)
+    i_e = jnp.exp(i - m_new)
+    f_e = jnp.exp(log_f + st["m"] - m_new)
+    c = f_e * st["c"] + i_e * jnp.tanh(z)
+    n = f_e * st["n"] + i_e
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_forward(cfg: ArchConfig, p: dict, x_in: jnp.ndarray,
+                  state: Optional[dict] = None) -> tuple:
+    x = rmsnorm(x_in, p["ln"])
+    b, s, _ = x.shape
+    if state is None:
+        state = slstm_empty_state(cfg, b)
+    pre_all = x @ p["w_in"]                               # [B,S,4dp]
+
+    def step(st, pre_t):
+        pre = pre_t + _recurrent_pre(p, st["h"], x.dtype)
+        st2 = _slstm_cell(pre, st)
+        return st2, st2["h"]
+
+    state_f, hs = jax.lax.scan(step, state, pre_all.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)                # [B,S,dp]
+    return x_in + hs @ p["w_down"], state_f
+
+
+def slstm_step(cfg: ArchConfig, p: dict, x_in: jnp.ndarray,
+               state: dict) -> tuple:
+    x = rmsnorm(x_in, p["ln"])
+    pre = (x[:, 0] @ p["w_in"]) + _recurrent_pre(p, state["h"], x.dtype)
+    st2 = _slstm_cell(pre, state)
+    h = st2["h"].astype(x.dtype)[:, None]
+    return x_in + h @ p["w_down"], st2
+
+
+# ---------------------------------------------------------------------------
+# Full model: alternating (mLSTM, sLSTM) pairs scanned over depth
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = cfg.jax_dtype
+    n_pairs = cfg.n_layers // 2
+    k_emb, k_m, k_s, k_head = jax.random.split(key, 4)
+    mk = jax.random.split(k_m, n_pairs)
+    sk = jax.random.split(k_s, n_pairs)
+    return {
+        "embed": dense_init(k_emb, cfg.vocab_padded, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab_padded, dtype),
+        "mlstm": jax.vmap(lambda k: mlstm_init(cfg, k, dtype))(mk),
+        "slstm": jax.vmap(lambda k: slstm_init(cfg, k, dtype))(sk),
+    }
+
+
+def empty_cache(cfg: ArchConfig, batch: int) -> dict:
+    n_pairs = cfg.n_layers // 2
+    stack = lambda tree: jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_pairs, *x.shape)), tree)
+    return {"mlstm": stack(mlstm_empty_state(cfg, batch)),
+            "slstm": stack(slstm_empty_state(cfg, batch))}
+
+
+def forward(cfg: ArchConfig, params: dict, tokens: jnp.ndarray,
+            cache: Optional[dict] = None,
+            opts: ForwardOptions = ForwardOptions(),
+            last_token_only: bool = False) -> tuple:
+    h = params["embed"][tokens]
+    s = h.shape[1]
+    single = (s == 1 and cache is not None)
+
+    def body(carry, xs):
+        hh = carry
+        pm, ps, ms, ss = xs
+        if single:
+            hh, ms2 = mlstm_step(cfg, pm, hh, ms)
+            hh, ss2 = slstm_step(cfg, ps, hh, ss)
+        else:
+            hh, ms2 = mlstm_forward(cfg, pm, hh, ms)
+            hh, ss2 = slstm_forward(cfg, ps, hh, ss)
+        return hh, {"mlstm": ms2, "slstm": ss2}
+
+    if cache is None:
+        b = h.shape[0]
+        cache = empty_cache(cfg, b)
+    body_fn = jax.checkpoint(body) if (cfg.remat and not single) else body
+    h, new_cache = jax.lax.scan(
+        body_fn, h,
+        (params["mlstm"], params["slstm"], cache["mlstm"], cache["slstm"]),
+        unroll=opts.unroll_layers)
+    h = rmsnorm(h, params["final_norm"])
+    if last_token_only:
+        h = h[:, -1:, :]
+    logits = h @ params["lm_head"]
+    return logits, new_cache
+
+
+def loss_fn(cfg: ArchConfig, params: dict, tokens: jnp.ndarray,
+            targets: jnp.ndarray,
+            opts: ForwardOptions = ForwardOptions()) -> jnp.ndarray:
+    logits, _ = forward(cfg, params, tokens, opts=opts)
+    logits = logits.astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def prefill(cfg: ArchConfig, params: dict, tokens: jnp.ndarray,
+            opts: ForwardOptions = ForwardOptions()) -> tuple:
+    logits, cache = forward(cfg, params, tokens, cache=None, opts=opts,
+                            last_token_only=True)
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: ArchConfig, params: dict, cache: dict,
+                token: jnp.ndarray, t: jnp.ndarray = None,
+                opts: ForwardOptions = ForwardOptions()) -> tuple:
+    logits, cache = forward(cfg, params, token[:, None], cache=cache,
+                            opts=opts, last_token_only=True)
+    return logits[:, 0], cache

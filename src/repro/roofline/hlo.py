@@ -1,0 +1,257 @@
+"""Loop-aware HLO text analysis for the roofline terms.
+
+XLA's HloCostAnalysis counts while-loop bodies ONCE (verified in this
+environment); our models keep inner scans even when the layer stack is
+unrolled (sLSTM over time, MoE dispatch chunks, chunked attention).
+This module parses compiled HLO text, builds the computation call graph,
+extracts per-computation dot-FLOPs / memory-traffic proxy / collective
+bytes, and multiplies while bodies by their trip counts.
+
+Facts the parser relies on (verified against this XLA version):
+  * instruction operands are referenced by %name; shapes come from a
+    per-computation symbol table (SSA order: defs precede uses);
+  * while ops carry backend_config={"known_trip_count":{"n":"N"}}
+    (fallback: the max integer constant in the condition computation);
+  * fusion interiors live in separate computations reached via
+    `calls=`; we count fusions at the call site (operands + result
+    bytes) and do NOT walk into them;
+  * memory traffic proxy = operand + result buffer bytes of every
+    top-level op except layout/tuple plumbing — an upper-bound HBM
+    proxy given XLA's fusion boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "while", "iota"}
+# tuple result types may embed /*index=k*/ comments (which contain '=');
+# they never contain parentheses, so `\([^()]*\)` spans them safely.
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"(\([^()]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"([\w\-]+)\(")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{$")
+
+
+def shape_bytes(text: str) -> float:
+    """Sum buffer bytes of every `dtype[dims]` shape literal in text."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    return tuple(int(d) for d in dims.split(",")) if dims else ()
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)    # walked x1
+    whiles: list = dataclasses.field(default_factory=list)   # (body, trips)
+    max_constant: int = 0
+
+
+def _matching_paren(s: str, start: int) -> int:
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s) - 1
+
+
+def parse_hlo(text: str) -> tuple:
+    """-> (comps dict, entry_name)."""
+    comps: dict[str, CompStats] = {}
+    symbols: dict[str, str] = {}
+    current: Optional[str] = None
+    entry_name = None
+    cond_consts: dict[str, int] = {}
+
+    for raw in text.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and "->" in line:
+            h = _HEADER_RE.match(line)
+            if h:
+                current = h.group(2)
+                comps[current] = CompStats()
+                symbols = {}
+                if h.group(1):
+                    entry_name = current
+                continue
+        if current is None:
+            continue
+        if line.startswith("}"):
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, result_type, opcode = im.groups()
+        symbols[name] = result_type
+        st = comps[current]
+        for c in re.finditer(r"constant\((\d+)\)", line):
+            st.max_constant = max(st.max_constant, int(c.group(1)))
+        # operand list: between the opcode's paren and its match
+        op_start = im.end() - 1
+        op_end = _matching_paren(line, op_start)
+        operands = re.findall(r"%([\w\.\-]+)", line[op_start:op_end])
+        tail = line[op_end:]
+        operand_bytes = sum(shape_bytes(symbols.get(o, "")) for o in operands)
+        result_bytes = shape_bytes(result_type)
+
+        if opcode in _COLLECTIVES:
+            b = operand_bytes if operand_bytes else result_bytes
+            st.coll_bytes += b
+            st.coll_by_kind[opcode] = st.coll_by_kind.get(opcode, 0.0) + b
+        elif opcode == "while":
+            mbody = re.search(r"body=%?([\w\.\-]+)", tail)
+            trips = None
+            mt = re.search(r'known_trip_count[":{]+n["\s:]+"?(\d+)', tail)
+            if mt:
+                trips = int(mt.group(1))
+            mcond = re.search(r"condition=%?([\w\.\-]+)", tail)
+            if mbody:
+                st.whiles.append((mbody.group(1),
+                                  mcond.group(1) if mcond else None, trips))
+        elif opcode == "dot":
+            lhs = operands[0] if operands else None
+            lhs_dims = _shape_dims(symbols.get(lhs, "")) if lhs else ()
+            mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", tail)
+            contract = 1
+            if mc and mc.group(1):
+                for d in mc.group(1).split(","):
+                    di = int(d)
+                    contract *= lhs_dims[di] if di < len(lhs_dims) else 1
+            n_out = 1
+            for d in _shape_dims(result_type):
+                n_out *= d
+            st.dot_flops += 2.0 * n_out * contract
+            st.mem_bytes += operand_bytes + result_bytes
+        elif opcode in ("call", "conditional"):
+            for mm in re.finditer(r"(?:calls|to_apply|branch_computations)"
+                                  r"=\{?%?([\w\.\-]+)", tail):
+                st.calls.append(mm.group(1))
+            st.mem_bytes += 0.0
+        elif opcode in _SKIP_BYTES_OPS:
+            pass
+        elif opcode == "dynamic-slice":
+            # physical traffic = the slice, not the sliced-from buffer
+            st.mem_bytes += 2.0 * result_bytes
+        elif opcode == "dynamic-update-slice":
+            # physical traffic = the update (in-place buffer write)
+            upd = sum(shape_bytes(symbols.get(o, "")) for o in operands[1:2])
+            st.mem_bytes += 2.0 * (upd if upd else result_bytes)
+        else:
+            # fusion / custom-call / elementwise / reduce / copy
+            st.mem_bytes += operand_bytes + result_bytes
+    return comps, entry_name
+
+
+@dataclasses.dataclass
+class HLOTotals:
+    dot_flops: float
+    mem_bytes: float
+    coll_bytes: float
+    coll_by_kind: dict
+    n_whiles: int
+    trip_counts: list
+    # loops-counted-once variants (to scale XLA cost_analysis aggregates)
+    dot_flops_x1: float = 0.0
+    mem_bytes_x1: float = 0.0
+    coll_bytes_x1: float = 0.0
+
+    def mem_amplification(self) -> float:
+        """Loop amplification of memory traffic: multiply XLA's
+        (fusion-accurate, loops-x1) 'bytes accessed' by this."""
+        return self.mem_bytes / self.mem_bytes_x1 if self.mem_bytes_x1 \
+            else 1.0
+
+
+def analyze(text: str) -> HLOTotals:
+    """Whole-module totals with while-body trip multipliers (and the
+    loops-x1 variant from the same walk)."""
+    comps, entry = parse_hlo(text)
+    memo: dict[str, tuple] = {}
+    trip_counts: list = []
+    state = {"n_whiles": 0}
+
+    def walk(name: str, depth: int = 0) -> tuple:
+        if name in memo:
+            return memo[name]
+        st = comps.get(name)
+        if st is None or depth > 60:
+            return (0.0, 0.0, 0.0, {}, 0.0, 0.0, 0.0)
+        flops, mem, coll = st.dot_flops, st.mem_bytes, st.coll_bytes
+        f1, m1, c1 = st.dot_flops, st.mem_bytes, st.coll_bytes
+        kinds = dict(st.coll_by_kind)
+        for callee in st.calls:
+            f, m, c, k, fx, mx, cx = walk(callee, depth + 1)
+            flops += f
+            mem += m
+            coll += c
+            f1 += fx
+            m1 += mx
+            c1 += cx
+            for kk, vv in k.items():
+                kinds[kk] = kinds.get(kk, 0.0) + vv
+        for body, cond, trips in st.whiles:
+            if trips is None:
+                cst = comps.get(cond) if cond else None
+                trips = max(1, cst.max_constant if cst else 1)
+            state["n_whiles"] += 1
+            trip_counts.append(trips)
+            f, m, c, k, fx, mx, cx = walk(body, depth + 1)
+            flops += trips * f
+            mem += trips * m
+            coll += trips * c
+            f1 += fx
+            m1 += mx
+            c1 += cx
+            for kk, vv in k.items():
+                kinds[kk] = kinds.get(kk, 0.0) + trips * vv
+        memo[name] = (flops, mem, coll, kinds, f1, m1, c1)
+        return memo[name]
+
+    if entry:
+        flops, mem, coll, kinds, f1, m1, c1 = walk(entry)
+    else:
+        flops = mem = coll = f1 = m1 = c1 = 0.0
+        kinds = {}
+    return HLOTotals(dot_flops=flops, mem_bytes=mem, coll_bytes=coll,
+                     coll_by_kind=kinds, n_whiles=state["n_whiles"],
+                     trip_counts=trip_counts, dot_flops_x1=f1,
+                     mem_bytes_x1=m1, coll_bytes_x1=c1)

@@ -1,0 +1,135 @@
+"""Roofline terms from a compiled dry-run cell (TPU v5e constants).
+
+  compute term    = HLO_FLOPs / (chips x peak FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM bandwidth)
+  collective term = collective bytes / (chips x ICI link bandwidth)
+
+Two FLOP sources are reported: XLA cost_analysis (per-device, loop bodies
+x1 — kept for reference) and the loop-aware HLO-text analysis (per-device
+x trip counts — used for the terms).  MODEL_FLOPS = 6*N_active*D flags
+remat/dispatch overhead through the useful-compute ratio.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# TPU v5e class hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link (effective per-chip)
+
+
+@dataclasses.dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    # per-device quantities (collected from the compiled module)
+    hlo_flops: float              # loop-aware dot flops
+    hlo_bytes: float              # loop-aware memory traffic (see below)
+    coll_bytes: float             # loop-aware collective operand bytes
+    xla_flops: float              # cost_analysis (loops x1), reference
+    xla_bytes: float
+    model_flops_global: float     # 6*N_active*D for the step
+    arg_bytes: float              # per-device argument residency
+    temp_bytes: float             # per-device temp residency
+    coll_by_kind: dict
+    n_whiles: int = 0
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs."""
+        total = self.hlo_flops * self.n_chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs utilization at the modeled step time (MFU-like):
+        MODEL_FLOPS / (step_s * chips * peak)."""
+        denom = self.step_s * self.n_chips * PEAK_FLOPS_BF16
+        return self.model_flops_global / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "hlo_flops_per_dev": self.hlo_flops,
+            "hlo_bytes_per_dev": self.hlo_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "model_flops_global": self.model_flops_global,
+            "arg_gb_per_dev": self.arg_bytes / 1e9,
+            "temp_gb_per_dev": self.temp_bytes / 1e9,
+        }
+
+
+def model_flops_for_cell(arch_cfg, shape_cfg) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train: x3 fwd+bwd via the 6; decode:
+    2*N_active per token) + attention context FLOPs."""
+    dims = arch_cfg.to_model_dims()
+    n_active = dims.active_params_per_token()
+    b, s = shape_cfg.global_batch, shape_cfg.seq_len
+    # attention flops (per token ~ 2 * layers * kv_len * (q_dim + kv... ):
+    # use 4*dh*heads*kv_len per layer per token (scores + PV, causal /2)
+    if shape_cfg.kind == "train":
+        tokens = b * s
+        base = 6.0 * n_active * tokens
+        attn = (dims.n_layers * 4.0 * dims.n_heads * dims.head_dim
+                * tokens * (s / 2) * 3.0)   # x3 for fwd+bwd
+    elif shape_cfg.kind == "prefill":
+        tokens = b * s
+        base = 2.0 * n_active * tokens
+        attn = dims.n_layers * 4.0 * dims.n_heads * dims.head_dim \
+            * tokens * (s / 2)
+    else:  # decode: one token per sequence
+        tokens = b
+        kv = min(s, dims.attn_window) if dims.attn_window else s
+        if dims.family.name == "SSM":
+            kv = 0
+        base = 2.0 * n_active * tokens
+        attn = dims.n_layers * 4.0 * dims.n_heads * dims.head_dim \
+            * tokens * kv
+    return base + attn
+
+
+def format_table(rows: list) -> str:
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s",
+            "collective_s", "bottleneck", "useful_flop_ratio",
+            "roofline_fraction"]
+    out = [" | ".join(f"{c:>18s}" for c in cols)]
+    for r in rows:
+        vals = []
+        for c in cols:
+            v = r[c]
+            vals.append(f"{v:18.3e}" if isinstance(v, float)
+                        else f"{str(v):>18s}")
+        out.append(" | ".join(vals))
+    return "\n".join(out)

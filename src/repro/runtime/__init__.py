@@ -1,0 +1,11 @@
+"""Distributed runtime: steps, optimizer, data, checkpointing, fault
+tolerance, elastic rescale, gradient compression."""
+
+from .checkpoint import latest_step, restore, save
+from .data import DataConfig, batch_for_step, decode_tokens_for_step
+from .elastic import make_mesh_for, plan_mesh, rescale_from_checkpoint, reshard
+from .fault import (HeartbeatMonitor, RetryPolicy, StepFailure,
+                    StragglerDetector, TrainSupervisor)
+from .optim import AdamWConfig, adamw_update, global_norm, init_opt_state
+from .steps import (ModelFns, make_decode_step, make_prefill_step,
+                    make_train_step, model_fns)

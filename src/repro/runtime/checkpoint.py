@@ -1,0 +1,106 @@
+"""Checkpointing: deterministic msgpack+zstd pytree snapshots.
+
+Layout:  <dir>/step_<k>/
+            manifest.json       tree structure, shapes, dtypes, step
+            arrays.msgpack.zst  flat arrays by path key
+Writes are atomic (tmp dir + rename); `restore` validates shapes/dtypes
+against a template pytree, enabling elastic resharding: restored host
+arrays are device_put with whatever sharding the *new* mesh prescribes.
+Retention keeps the last N steps.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Optional
+
+import jax
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                       for e in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save(directory: str, step: int, tree, keep_last: int = 3) -> str:
+    """Atomic checkpoint write; returns the final path."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    manifest = {
+        "step": step,
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    packed = msgpack.packb(
+        {k: v.tobytes() for k, v in flat.items()}, use_bin_type=True)
+    with open(os.path.join(tmp, "arrays.msgpack.zst"), "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(packed))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _retain(directory, keep_last)
+    return final
+
+
+def _retain(directory: str, keep_last: int):
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, d))
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, template,
+            shardings=None):
+    """Restore into the structure of `template`; device_put with
+    `shardings` (a matching pytree) when given — this is the elastic-
+    rescale entry point (same checkpoint, different mesh)."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(path, "arrays.msgpack.zst"), "rb") as f:
+        packed = zstandard.ZstdDecompressor().decompress(f.read())
+    raw = msgpack.unpackb(packed, raw=False)
+
+    flat_template, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for tpath, leaf in flat_template:
+        key = "/".join(str(getattr(e, "key", getattr(e, "idx", e)))
+                       for e in tpath)
+        meta = manifest["arrays"].get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing array {key!r}")
+        arr = np.frombuffer(raw[key], dtype=np.dtype(meta["dtype"])) \
+            .reshape(meta["shape"])
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != template "
+                f"{want_shape}")
+        out.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        treedef.treedef if hasattr(treedef, "treedef") else treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree, manifest["step"]

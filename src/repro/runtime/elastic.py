@@ -1,0 +1,56 @@
+"""Elastic scaling: remesh a running job onto a different device count.
+
+Scale events (node loss, capacity change) follow checkpoint -> remesh ->
+resharded restore: `plan_mesh` factorizes the surviving device count
+into (data, model) (pods folded into data), `reshard` device_puts a host
+pytree under the new mesh's shardings.  Because the data pipeline is
+step-indexed and stateless (runtime/data.py), the resumed trajectory is
+deterministic.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding.partition import param_shardings
+
+
+def plan_mesh(n_devices: int, model_parallel: Optional[int] = None,
+              max_model: int = 16) -> tuple:
+    """Factorize n_devices -> (data, model); model <= max_model and
+    divides the device count (largest power-of-two fit by default)."""
+    if model_parallel is not None:
+        if n_devices % model_parallel:
+            raise ValueError(f"{model_parallel=} !| {n_devices=}")
+        return (n_devices // model_parallel, model_parallel)
+    model = 1
+    while (model * 2 <= max_model and n_devices % (model * 2) == 0):
+        model *= 2
+    return (n_devices // model, model)
+
+
+def make_mesh_for(n_devices: int,
+                  model_parallel: Optional[int] = None) -> Mesh:
+    data, model = plan_mesh(n_devices, model_parallel)
+    devs = np.array(jax.devices()[:n_devices]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))
+
+
+def reshard(tree, mesh: Mesh):
+    """Host/global pytree -> arrays sharded for `mesh` by the standard
+    parameter rules."""
+    shardings = param_shardings(tree, mesh)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+
+
+def rescale_from_checkpoint(directory: str, step: int, template,
+                            new_mesh: Mesh):
+    """checkpoint @ old mesh -> live pytree on new mesh."""
+    from .checkpoint import restore
+    shardings = param_shardings(template, new_mesh)
+    return restore(directory, step, template, shardings=shardings)

@@ -1,0 +1,134 @@
+"""Fault-tolerance primitives for the training/serving loops.
+
+At thousand-node scale the failure model is: (a) step-level transient
+errors (preempted host, flaky interconnect) -> retry with backoff and
+restore-from-checkpoint; (b) straggling workers -> detect via step-time
+statistics and quarantine; (c) hard node loss -> elastic rescale
+(elastic.py) from the last checkpoint.  This module provides the
+host-side machinery; it is exercised by unit tests with injected
+failures and wired into launch/train.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+
+class StepFailure(RuntimeError):
+    """A step failed in a retryable way."""
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_retries: int = 3
+    backoff_s: float = 0.5
+    backoff_factor: float = 2.0
+    sleep: Callable[[float], None] = time.sleep
+
+    def run(self, fn: Callable, *args, on_retry: Optional[Callable] = None):
+        """Run fn with retries; on_retry(attempt, exc) can restore state."""
+        delay = self.backoff_s
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn(*args)
+            except StepFailure as exc:
+                if attempt == self.max_retries:
+                    raise
+                if on_retry is not None:
+                    on_retry(attempt, exc)
+                self.sleep(delay)
+                delay *= self.backoff_factor
+        raise AssertionError("unreachable")
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """Flags steps (or workers) whose time exceeds k x rolling median."""
+
+    window: int = 32
+    threshold: float = 2.0
+
+    def __post_init__(self):
+        self.times = deque(maxlen=self.window)
+
+    def observe(self, seconds: float) -> bool:
+        """Record a step time; returns True if it straggles."""
+        is_straggler = False
+        if len(self.times) >= max(4, self.window // 4):
+            med = sorted(self.times)[len(self.times) // 2]
+            is_straggler = seconds > self.threshold * med
+        self.times.append(seconds)
+        return is_straggler
+
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        return sorted(self.times)[len(self.times) // 2]
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Tracks worker heartbeats; quarantines silent/flagged workers.
+
+    In a real deployment heartbeats arrive over RPC; tests and the
+    single-process trainer drive `beat()` directly.
+    """
+
+    timeout_s: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        self.last_beat: dict = {}
+        self.quarantined: set = set()
+
+    def beat(self, worker: str):
+        if worker not in self.quarantined:
+            self.last_beat[worker] = self.clock()
+
+    def check(self) -> list:
+        """Quarantine workers whose heartbeat lapsed; returns new ones."""
+        now = self.clock()
+        newly = [w for w, t in self.last_beat.items()
+                 if now - t > self.timeout_s and w not in self.quarantined]
+        self.quarantined.update(newly)
+        return newly
+
+    def quarantine(self, worker: str):
+        self.quarantined.add(worker)
+
+    def healthy(self) -> list:
+        return [w for w in self.last_beat if w not in self.quarantined]
+
+
+@dataclasses.dataclass
+class TrainSupervisor:
+    """Composes retry + straggler detection + periodic checkpointing around
+    a step function.  `checkpoint_fn(step)` persists; `restore_fn()` rolls
+    back state after a failed step."""
+
+    retry: RetryPolicy
+    straggler: StragglerDetector
+    checkpoint_every: int = 100
+    checkpoint_fn: Optional[Callable] = None
+    restore_fn: Optional[Callable] = None
+    clock: Callable[[], float] = time.monotonic
+
+    def run_step(self, step: int, fn: Callable, *args):
+        def attempt(*a):
+            t0 = self.clock()
+            out = fn(*a)
+            self.straggler.observe(self.clock() - t0)
+            return out
+
+        def on_retry(attempt_i, exc):
+            if self.restore_fn is not None:
+                self.restore_fn()
+
+        out = self.retry.run(attempt, *args, on_retry=on_retry)
+        if (self.checkpoint_fn is not None and self.checkpoint_every > 0
+                and (step + 1) % self.checkpoint_every == 0):
+            self.checkpoint_fn(step)
+        return out

@@ -1,0 +1,77 @@
+"""AdamW optimizer (hand-rolled: optax is not vendored here).
+
+Moments are fp32 regardless of parameter dtype; update math in fp32 with
+a cast back at the end.  Supports global-norm clipping and decoupled
+weight decay.  State pytree mirrors params so the parameter sharding
+rules apply verbatim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def init_opt_state(params) -> dict:
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    return cfg.lr * warm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state) -> tuple:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    lr = _schedule(cfg, state["step"])
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m2 / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v2 / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,165 @@
+"""Family-dispatched step functions: init / train / prefill / decode.
+
+One uniform interface over the four model families so the launcher,
+dry-run, serving loop and tests never branch on architecture:
+
+    mf = model_fns(cfg)
+    params = mf.init(key)
+    loss, params, opt = mf.train_step(params, opt, batch)   (via make_*)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hymba, transformer, xlstm
+from repro.models.config import ArchConfig
+from repro.models.transformer import ForwardOptions
+
+from .optim import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFns:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable          # (params, batch, opts) -> scalar
+    prefill: Callable       # (params, batch, s_max, opts) -> (logits, cache)
+    decode: Callable        # (params, cache, token, t, opts) -> (logits, cache)
+
+
+def _batch_inputs(cfg: ArchConfig, batch: dict):
+    """The model's prompt input: tokens, or stub embeddings for [audio]."""
+    if cfg.family == "encdec":
+        return batch["frames"], batch["tokens"]
+    return (batch["tokens"],)
+
+
+def model_fns(cfg: ArchConfig) -> ModelFns:
+    if cfg.family == "encdec":
+        return ModelFns(
+            cfg=cfg,
+            init=partial(encdec.init_params, cfg),
+            loss=lambda p, b, opts=ForwardOptions(): encdec.loss_fn(
+                cfg, p, b["frames"], b["tokens"], b["targets"], opts),
+            prefill=lambda p, b, s_max, opts=ForwardOptions():
+                encdec.prefill(cfg, p, b["frames"], b["tokens"], s_max, opts),
+            decode=lambda p, c, tok, t, opts=ForwardOptions():
+                encdec.decode_step(cfg, p, c, tok, t, opts),
+        )
+    if cfg.family == "hybrid":
+        return ModelFns(
+            cfg=cfg,
+            init=partial(hymba.init_params, cfg),
+            loss=lambda p, b, opts=ForwardOptions(): hymba.loss_fn(
+                cfg, p, b["tokens"], b["targets"], opts),
+            prefill=lambda p, b, s_max, opts=ForwardOptions(), window=None:
+                hymba.prefill(cfg, p, b["tokens"], s_max, window, opts),
+            decode=lambda p, c, tok, t, opts=ForwardOptions():
+                hymba.decode_step(cfg, p, c, tok, t, opts),
+        )
+    if cfg.family == "ssm":
+        return ModelFns(
+            cfg=cfg,
+            init=partial(xlstm.init_params, cfg),
+            loss=lambda p, b, opts=ForwardOptions(): xlstm.loss_fn(
+                cfg, p, b["tokens"], b["targets"], opts),
+            prefill=lambda p, b, s_max=None, opts=ForwardOptions():
+                xlstm.prefill(cfg, p, b["tokens"], opts),
+            decode=lambda p, c, tok, t, opts=ForwardOptions():
+                xlstm.decode_step(cfg, p, c, tok, t, opts),
+        )
+    # dense / moe / vlm share the decoder-only implementation
+    def _tf_loss(p, b, opts=ForwardOptions()):
+        ctx = b.get("patches") if cfg.family == "vlm" else None
+        return transformer.loss_fn(cfg, p, b["tokens"], b["targets"],
+                                   opts, context=ctx)
+
+    def _tf_prefill(p, b, s_max, opts=ForwardOptions()):
+        ctx = b.get("patches") if cfg.family == "vlm" else None
+        return transformer.prefill(cfg, p, b["tokens"], s_max,
+                                   context=ctx, opts=opts)
+
+    def _tf_decode(p, c, tok, t, opts=ForwardOptions(), ctx=None):
+        return transformer.decode_step(cfg, p, c, tok, t, context=ctx,
+                                       opts=opts)
+
+    return ModelFns(
+        cfg=cfg,
+        init=partial(transformer.init_params, cfg),
+        loss=_tf_loss,
+        prefill=_tf_prefill,
+        decode=_tf_decode,
+    )
+
+
+def make_train_step(cfg: ArchConfig, adamw: AdamWConfig = AdamWConfig(),
+                    opts: ForwardOptions = ForwardOptions(),
+                    microbatches: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (loss, params, opt_state, metrics).
+
+    microbatches > 1 accumulates gradients over batch slices under a scan
+    (memory relief for the train_4k shapes).
+    """
+    mf = model_fns(cfg)
+
+    def loss_fn(params, batch):
+        return mf.loss(params, batch, opts)
+
+    def step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, mbatch):
+                loss_i, g_i = jax.value_and_grad(loss_fn)(params, mbatch)
+                loss_a, g_a = carry
+                return (loss_a + loss_i,
+                        jax.tree.map(jnp.add, g_a, g_i)), ()
+
+            zero = (jnp.float32(0.0),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss_sum, grads), _ = jax.lax.scan(acc, zero, mb)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params2, opt2, metrics = adamw_update(adamw, params, grads,
+                                              opt_state)
+        return loss, params2, opt2, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, s_max: int,
+                      opts: ForwardOptions = ForwardOptions(),
+                      window: Optional[int] = None) -> Callable:
+    mf = model_fns(cfg)
+
+    def step(params, batch):
+        if cfg.family == "hybrid":
+            return mf.prefill(params, batch, s_max, opts, window=window)
+        if cfg.family == "ssm":
+            return mf.prefill(params, batch, None, opts)
+        return mf.prefill(params, batch, s_max, opts)
+
+    return step
+
+
+def make_decode_step(cfg: ArchConfig,
+                     opts: ForwardOptions = ForwardOptions()) -> Callable:
+    mf = model_fns(cfg)
+
+    def step(params, cache, token, t):
+        return mf.decode(params, cache, token, t, opts)
+
+    return step

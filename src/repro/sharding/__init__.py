@@ -1,0 +1,2 @@
+from .partition import (batch_axes, cache_shardings, cache_spec, input_spec,
+                        param_shardings, param_spec, replicated)

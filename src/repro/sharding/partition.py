@@ -1,0 +1,172 @@
+"""Sharding rules: parameter/cache/input PartitionSpecs by leaf name.
+
+Tensor parallelism shards the *merged* projection dims over `model`
+(robust to head counts not divisible by the axis, e.g. Hymba's 25
+heads); KV caches shard batch over ("pod", "data") and head_dim over
+`model` (head-dim TP: dh in {64,128,512} for every assigned arch, all
+divisible by 16).  Any dim not divisible by its axis size falls back to
+replication — the guard that keeps every (arch x shape x mesh) cell
+compiling.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# leaf name -> dim index (negative = from the end) that shards on "model"
+_MODEL_DIM_BY_NAME = {
+    "wq": -1, "wk": -1, "wv": -1, "wo": -2,
+    "bq": -1, "bk": -1, "bv": -1,
+    "w_up": -1, "w_gate": -1, "w_down": -2,
+    "w_in": -1, "w_out": -2, "w_bc": -2, "w_dt": -2,
+    "log_a": -2, "d_skip": -1,
+    "w_q": -1, "w_k": -1, "w_v": -1, "w_if": -1, "w_o": -2,
+    "r_in": -1,
+    "embed": 0, "lm_head": -1,
+    "router": None,
+    "q_norm": None, "k_norm": None,
+    "ln": None, "ln1": None, "ln2": None, "ln_x": None,
+    "final_norm": None, "enc_norm": None,
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def param_spec(path, leaf, mesh: Mesh) -> P:
+    name = _leaf_name(path)
+    ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    if ndim == 0:
+        return P()
+    # sLSTM blocks are strictly sequential over time: TP-sharding their
+    # (small) weights costs a reshard per timestep x seq_len x layers —
+    # replicate instead (perf iteration C, EXPERIMENTS.md section Perf)
+    path_str = "/".join(str(getattr(e, "key", "")) for e in path)
+    if "slstm" in path_str:
+        return P(*([None] * ndim))
+    dim = _MODEL_DIM_BY_NAME.get(name, "unknown")
+    if dim == "unknown":
+        # default: shard the last dim if it looks like a projection
+        dim = -1 if ndim >= 2 else None
+    if dim is None:
+        return P(*([None] * ndim))
+    axis = dim if dim >= 0 else ndim + dim
+    size = leaf.shape[axis]
+    model_size = mesh.shape.get("model", 1)
+    if size % model_size != 0:
+        return P(*([None] * ndim))     # divisibility guard -> replicate
+    spec = [None] * ndim
+    spec[axis] = "model"
+    return P(*spec)
+
+
+def param_shardings(params, mesh: Mesh):
+    """Pytree of NamedShardings matching `params` (works on shapes too)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_spec(path, leaf, mesh)),
+        params)
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Mesh axes carrying data parallelism."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def opt_spec(path, leaf, mesh: Mesh) -> P:
+    """ZeRO-1: optimizer moments take the parameter sharding PLUS the
+    first still-replicated, dp-divisible dim sharded over (pod, data) —
+    without this, large-model moments replicate across the whole DP
+    group (e.g. 50 GB/device for the 100B MoE)."""
+    base = param_spec(path, leaf, mesh)
+    axes = batch_axes(mesh)
+    if not axes:
+        return base
+    dp = int(np.prod([mesh.shape[a] for a in axes]))
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else np.ndim(leaf)
+    spec = list(base) + [None] * (ndim - len(base))
+    for d in range(ndim):
+        if spec[d] is None and leaf.shape[d] % dp == 0:
+            spec[d] = axes
+            break
+    return P(*spec)
+
+
+def opt_state_shardings(opt_state, mesh: Mesh):
+    """Shardings for the optimizer state: ZeRO-1 for the moment trees,
+    replicated step counter."""
+    def one(path, leaf):
+        ndim = leaf.ndim if hasattr(leaf, "ndim") else np.ndim(leaf)
+        if ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, opt_spec(path, leaf, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, opt_state)
+
+
+def input_spec(mesh: Mesh, batch: int, ndim: int) -> P:
+    """[B, ...] input: shard batch over (pod, data) when divisible."""
+    axes = batch_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch % dp == 0:
+        return P(axes, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def cache_spec(mesh: Mesh, shape: tuple, batch_axis: int,
+               dh_axis: int = -1, mode: str = "dh") -> P:
+    """KV-cache / SSM-state sharding: batch over (pod,data) plus one
+    model-sharded dim.
+
+    mode="dh": head_dim over model (baseline; works for every arch since
+        dh in {64,128,512}).
+    mode="seq": the sequence dim (axis batch_axis+1 for [L,B,S,H,Dh]
+        buffers) over model — flash-decode style; decode attention then
+        reduces partial softmax stats over model instead of resharding
+        q/cache per layer (perf iteration B).
+    Falls back to dh (then replication) when non-divisible.
+    """
+    axes = batch_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    model = mesh.shape.get("model", 1)
+    spec = [None] * len(shape)
+    if axes and shape[batch_axis] % dp == 0:
+        spec[batch_axis] = axes
+    if mode == "seq" and len(shape) >= batch_axis + 3:
+        sa = batch_axis + 1
+        if shape[sa] % model == 0:
+            spec[sa] = "model"
+            return P(*spec)
+    da = dh_axis if dh_axis >= 0 else len(shape) + dh_axis
+    if shape[da] % model == 0 and da != (batch_axis % len(shape)):
+        spec[da] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, batch_axis: int = 1,
+                    mode: str = "dh"):
+    """Shardings for a stacked cache pytree of ShapeDtypeStructs.
+
+    Leaves: [L, B, S, H, Dh] KV buffers, [L, B, ..., N] SSM states,
+    [L, B, S, H, 1] scale tensors.  Batch is axis `batch_axis`; head_dim
+    is the last axis (scales replicate on their singleton axis).
+    """
+    def one(leaf):
+        return NamedSharding(mesh, cache_spec(mesh, leaf.shape, batch_axis,
+                                              mode=mode))
+
+    return jax.tree.map(one, cache_shapes)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device (the dry-run's 512 placeholder
+# devices are set ONLY inside launch/dryrun.py / subprocesses).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

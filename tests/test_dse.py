@@ -1,0 +1,120 @@
+"""DSE machinery: pareto/HV, Sobol, GP, and the four optimizers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dse import (Objective, hypervolume_2d, pareto_front,
+                            pareto_mask, run_mobo, run_motpe, run_nsga2,
+                            run_random, shared_init, sobol)
+from repro.core.dse import space as sp
+from repro.core.dse.gp import GP
+from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
+from repro.configs.paper_models import QWEN3_32B
+
+
+def test_hypervolume_known():
+    ys = np.array([[1.0, 3.0], [2.0, 2.0], [3.0, 1.0]])
+    ref = np.array([0.0, 0.0])
+    # union of boxes: 3+2+1... exact = 3*1 + 2*1 + 1*1 + overlaps -> 6
+    hv = hypervolume_2d(ys, ref)
+    assert hv == pytest.approx(6.0)
+
+
+def test_pareto_mask():
+    ys = np.array([[1, 1], [2, 2], [0, 3], [2, 0]])
+    mask = pareto_mask(ys)
+    assert list(mask) == [False, True, True, False]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 10), st.floats(0, 10)),
+                min_size=1, max_size=12))
+def test_hv_monotone_under_points(pts):
+    ys = np.array(pts)
+    ref = ys.min(axis=0) - 1.0
+    hv_all = hypervolume_2d(ys, ref)
+    hv_front = hypervolume_2d(pareto_front(ys), ref)
+    assert hv_all == pytest.approx(hv_front, rel=1e-9)
+    # adding a point never decreases HV
+    extra = np.vstack([ys, ys.max(axis=0) + 1.0])
+    assert hypervolume_2d(extra, ref) >= hv_all - 1e-12
+
+
+def test_sobol_properties():
+    pts = sobol(64, 8)
+    assert pts.shape == (64, 8)
+    assert np.all(pts >= 0) and np.all(pts < 1)
+    # low discrepancy-ish: mean near 0.5 in every dim
+    assert np.allclose(pts.mean(axis=0), 0.5, atol=0.08)
+    # first point of the (unskipped) sequence is 0
+    assert np.allclose(sobol(1, 4)[0], 0.0)
+
+
+def test_space_roundtrip():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        x = sp.random_design(rng)
+        try:
+            npu = sp.decode(x)
+        except sp.InvalidDesign:
+            continue
+        assert npu.hierarchy.total_capacity_gb() > 0
+        u = sp.normalize(x)
+        assert len(u) == sp.N_DIMS and np.all((u > 0) & (u < 1))
+
+
+def test_space_contains_paper_configs():
+    """Base/P1/D1-class configurations are representable."""
+    # PE 2048x256, VLEN 2048, 3D-SRAM x3, HBM4 x2, HBF x1, Act/WS/Matrix
+    x = [sp.PE_CHOICES.index((2048, 256)), sp.VLEN_CHOICES.index(2048),
+         sp.SRAM3D_CHOICES.index(3), 0, sp.HBM_TYPES.index("HBM4"),
+         sp.STACK_CHOICES.index(2), 0, sp.STACK_CHOICES.index(0), 0,
+         sp.LPDDR_STACK_CHOICES.index(0), sp.STACK_CHOICES.index(1),
+         sp.ACT_FMTS.index("MXINT8"), sp.KV_FMTS.index("MXINT8"),
+         sp.W_FMTS.index("MXINT8"), 0, 0, 0]
+    npu = sp.decode(x)
+    assert "3D-SRAMx3" in npu.hierarchy.describe()
+    assert "HBFx1" in npu.hierarchy.describe()
+
+
+def test_gp_fit_predict():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(size=(24, 3))
+    y = np.sin(3 * x[:, 0]) + x[:, 1] ** 2
+    gp = GP.fit(x, y)
+    mu, sd = gp.predict(x)
+    # interpolates near the data
+    assert np.mean(np.abs(mu - y)) < 0.25
+    # predictive sd grows away from data
+    far = np.full((1, 3), 5.0)
+    _, sd_far = gp.predict(far)
+    assert sd_far[0] > np.mean(sd)
+
+
+@pytest.fixture(scope="module")
+def objective():
+    return Objective(QWEN3_32B, OSWORLD_LIBREOFFICE, Phase.DECODE,
+                     tdp_limit_w=700.0)
+
+
+def test_all_methods_run_and_respect_budget(objective):
+    init = shared_init(objective, 8, seed=1)
+    for runner in (run_mobo, run_random, run_nsga2, run_motpe):
+        res = runner(objective, n_total=16, seed=1, init=list(init))
+        assert len(res.observations) == 16
+        # shared init is the common prefix
+        assert [o.x for o in res.observations[:8]] == [o.x for o in init]
+        fs = res.feasible_f()
+        if len(fs):
+            ref = fs.min(axis=0) - 1.0
+            hv = res.hv_history(ref)
+            assert len(hv) == 16
+            assert np.all(np.diff(hv) >= -1e-9)   # HV is non-decreasing
+
+
+def test_objective_respects_tdp(objective):
+    for o in shared_init(objective, 12, seed=3):
+        if o.f is not None:
+            assert o.npu.tdp_w() <= 700.0 + 1e-6

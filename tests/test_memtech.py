@@ -1,0 +1,140 @@
+"""Table 1 catalog + Eq. 1 shoreline + Eqs. 2-5 transfer model."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import hierarchy as H
+from repro.core import memtech as M
+from repro.core.hierarchy import MemoryHierarchy, MemoryLevel, ShorelineError
+
+
+def test_catalog_complete():
+    assert set(M.CATALOG) == {"SRAM", "3D-SRAM", "HBM3E", "HBM4", "LPDDR5X",
+                              "LPDDR6", "GDDR6", "GDDR7", "HBF"}
+
+
+def test_table1_values():
+    assert M.HBM3E.capacity_gb == 24.0 and M.HBM3E.bandwidth_gbps == 1024.0
+    assert M.HBM4.capacity_gb == 36.0 and M.HBM4.bandwidth_gbps == 2048.0
+    assert M.HBF.capacity_gb == 384.0 and M.HBF.latency_s == 1e-6
+    assert M.SRAM_3D.bandwidth_gbps == 8192.0
+    assert M.LPDDR6.bandwidth_gbps == 172.8
+    # paper: HBF ~4x HBM background power, ~2x access energy
+    assert M.HBF.p_bg_mw_per_gb == pytest.approx(4 * M.HBM3E.p_bg_mw_per_gb)
+    assert M.HBF.e_read_pj_per_bit == pytest.approx(
+        2 * M.HBM3E.e_read_pj_per_bit)
+
+
+def test_power_units():
+    # 1 TB/s reads at 3 pJ/bit = 3e-12 * 8e12 = 24 W
+    assert M.HBM3E.read_power_w(1024.0) == pytest.approx(
+        3.0e-12 * 1024e9 * 8, rel=1e-6)
+    # background: 24 GB at 75 mW/GB = 1.8 W
+    assert M.HBM3E.background_power_w() == pytest.approx(1.8)
+
+
+def test_hbf_capacity_per_shoreline_dominates_dram():
+    assert (M.HBF.capacity_per_shoreline()
+            > 10 * M.HBM3E.capacity_per_shoreline())
+
+
+def test_shoreline_bound():
+    # 8 HBM4 stacks: 8 * 15.5 = 124mm > 118mm budget
+    with pytest.raises(ShorelineError):
+        MemoryHierarchy([MemoryLevel(M.SRAM_2D, 1),
+                         MemoryLevel(M.HBM4, 8)])
+    # 4 stacks fit
+    h = MemoryHierarchy([MemoryLevel(M.SRAM_2D, 1), MemoryLevel(M.HBM4, 4)])
+    assert h.shoreline_used_mm() == pytest.approx(4 * 15.5)
+
+
+def test_max_stacks_eq1():
+    assert H.max_stacks(M.HBM3E) == int(118.0 // 11.5)
+    assert H.max_stacks(M.SRAM_3D) > 1000
+
+
+def test_onchip_must_precede_offchip():
+    with pytest.raises(ValueError):
+        MemoryHierarchy([MemoryLevel(M.HBM3E, 1), MemoryLevel(M.SRAM_2D, 1)])
+
+
+def _h2():
+    return MemoryHierarchy([MemoryLevel(M.SRAM_2D, 1),
+                            MemoryLevel(M.HBM3E, 4)])
+
+
+def _h3():
+    return MemoryHierarchy([MemoryLevel(M.SRAM_3D, 3),
+                            MemoryLevel(M.HBM4, 2),
+                            MemoryLevel(M.HBF, 1)])
+
+
+def test_effective_bandwidth_eq2():
+    h = _h3()
+    effs = h.effective_bandwidths_gbps()
+    # outermost = peak; inner reduced by deeper stream, clamped >= 50%
+    assert effs[-1] == 1024.0
+    assert effs[1] == max(2 * 2048.0 - 1024.0, 0.5 * 2 * 2048.0)
+    assert effs[0] >= 0.5 * 3 * 8192.0
+
+
+def test_transfer_all_resident_onchip():
+    h = _h2()
+    br = h.transfer_time_s(1e9, resident_fractions=[1.0, 1.0])
+    # 1 GB over the on-chip boundary only
+    assert br.total_s == pytest.approx(
+        M.SRAM_2D.latency_s + 1e9 / (h.effective_bandwidths_gbps()[0] * 1e9),
+        rel=1e-3)
+
+
+def test_transfer_case2_bandwidth_limited():
+    h = _h2()
+    # nothing on-chip: every byte crosses both boundaries; the on-chip
+    # port (clamped to half peak by the Eq. 2 pass-through rule) is the
+    # slower stage here and sets the time
+    br = h.transfer_time_s(10e9, resident_fractions=[0.0, 1.0])
+    t0 = M.SRAM_2D.latency_s + 10e9 / (0.5 * 4096e9)
+    assert br.total_s == pytest.approx(t0, rel=1e-2)
+    # deeper-limited case: make the deep level the bottleneck via a
+    # 1-stack HBM (1 TB/s < clamped SRAM 2 TB/s)
+    h1 = MemoryHierarchy([MemoryLevel(M.SRAM_2D, 1),
+                          MemoryLevel(M.HBM3E, 1)])
+    br1 = h1.transfer_time_s(10e9, resident_fractions=[0.0, 1.0])
+    t_deep = M.HBM3E.latency_s + 10e9 / 1024e9
+    assert br1.total_s == pytest.approx(t_deep, rel=1e-2)
+    assert br1.case == "bandwidth_limited"
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=st.floats(1e6, 1e12),
+       a0=st.floats(0.0, 1.0),
+       share=st.floats(0.1, 1.0))
+def test_transfer_monotonicity(x, a0, share):
+    """More data -> more time; higher resident fraction -> no more time;
+    bandwidth share scales inversely."""
+    h = _h2()
+    t1 = h.transfer_time_s(x, [a0, 1.0], bw_share=share).total_s
+    t2 = h.transfer_time_s(2 * x, [a0, 1.0], bw_share=share).total_s
+    assert t2 >= t1
+    t3 = h.transfer_time_s(x, [min(1.0, a0 + 0.3), 1.0],
+                           bw_share=share).total_s
+    assert t3 <= t1 + 1e-12
+    t4 = h.transfer_time_s(x, [a0, 1.0], bw_share=share / 2).total_s
+    assert t4 >= t1 - 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(sizes=st.lists(st.floats(0.1, 50.0), min_size=3, max_size=3))
+def test_place_greedy_conserves(sizes):
+    h = _h3()
+    if sum(sizes) > h.total_capacity_gb():
+        with pytest.raises(ValueError):
+            h.place_greedy(sizes, [0, 1, 2])
+        return
+    placed = h.place_greedy(sizes, [2, 0, 1])
+    for c in range(3):
+        got = sum(placed[lvl][c] for lvl in range(len(h.levels)))
+        assert got == pytest.approx(sizes[c], rel=1e-9)
+    for lvl, level in enumerate(h.levels):
+        assert sum(placed[lvl]) <= level.capacity_gb + 1e-9

@@ -1,0 +1,142 @@
+"""Analytical performance model: compute, dataflow, workload, phases —
+including the paper's qualitative claims (Tables 4-6 directions)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ComputeConfig, Dataflow, QuantConfig,
+                        baseline_npu, d1_npu, d2_npu, p1_npu, p2_npu)
+from repro.core.compute import (dataflow_traffic_multipliers, gemm_cycles,
+                                vector_seconds)
+from repro.core.dataflow import (BandwidthPriority, SoftwareStrategy,
+                                 StoragePriority)
+from repro.core.perfmodel import (evaluate_decode, evaluate_prefill,
+                                  max_decode_batch, max_prefill_batch)
+from repro.core.workload import (OSWORLD_LIBREOFFICE, Family, ModelDims,
+                                 Phase, layer_traffic, weight_footprint_gb)
+from repro.configs.paper_models import LLAMA33_70B
+
+
+def test_gemm_cycles_ideal_utilization():
+    cfg = ComputeConfig(pe_rows=128, pe_cols=128)
+    t = gemm_cycles(cfg, 4096, 4096, 4096, Dataflow.WEIGHT_STATIONARY)
+    assert t.utilization > 0.9
+    assert t.macs == 4096.0 ** 3
+
+
+def test_gemm_packing_small_k():
+    """Batched small-k GEMMs pack along array rows."""
+    cfg = ComputeConfig(pe_rows=2048, pe_cols=128)
+    single = gemm_cycles(cfg, 1024, 128, 1024,
+                         Dataflow.WEIGHT_STATIONARY, count=1)
+    batched = gemm_cycles(cfg, 1024, 128, 1024,
+                          Dataflow.WEIGHT_STATIONARY, count=16)
+    assert batched.cycles == pytest.approx(single.cycles, rel=0.01)
+    assert batched.utilization > 10 * single.utilization
+
+
+def test_dataflow_multipliers():
+    cfg = ComputeConfig(pe_rows=128, pe_cols=128)
+    # WS with generous staging: no re-streams
+    a, b = dataflow_traffic_multipliers(cfg, 1024, 1024, 1024,
+                                        Dataflow.WEIGHT_STATIONARY,
+                                        1, 1, 1, 0.0, 1024 * 1024, 1e9)
+    assert (a, b) == (1.0, 1.0)
+    # WS with no staging: act re-streamed per array-tile chunk
+    a, b = dataflow_traffic_multipliers(cfg, 1024, 1024, 1024,
+                                        Dataflow.WEIGHT_STATIONARY,
+                                        1, 1, 1, 0.0, 0.0, 0.0)
+    assert b == 1.0 and a > 1.0
+    # IS mirrors on the weight side
+    a, b = dataflow_traffic_multipliers(cfg, 4096, 1024, 1024,
+                                        Dataflow.INPUT_STATIONARY,
+                                        1, 1, 1, 0.0, 0.0, 0.0)
+    assert a == 1.0 and b > 1.0
+
+
+def test_llama70b_params():
+    assert LLAMA33_70B.total_params() / 1e9 == pytest.approx(70.6, abs=1.0)
+    w = weight_footprint_gb(LLAMA33_70B, QuantConfig())
+    assert w == pytest.approx(72.8, abs=1.5)
+
+
+def test_paper_batch_columns():
+    """Table 6 'Batch' columns reproduce from the capacity model."""
+    trace = OSWORLD_LIBREOFFICE
+    assert max_prefill_batch(baseline_npu(), LLAMA33_70B, trace) == 1
+    assert max_prefill_batch(p1_npu(), LLAMA33_70B, trace) == 16
+    assert max_decode_batch(baseline_npu(), LLAMA33_70B, trace) == 1
+    assert max_decode_batch(d1_npu(), LLAMA33_70B, trace) == 16
+    assert max_decode_batch(d2_npu(), LLAMA33_70B, trace) == 32
+
+
+def test_prefill_decode_orderings():
+    """Qualitative Table 6: optimized devices beat Base in their phase."""
+    trace = OSWORLD_LIBREOFFICE
+    base_p = evaluate_prefill(baseline_npu(), LLAMA33_70B, trace)
+    p1 = evaluate_prefill(p1_npu(), LLAMA33_70B, trace)
+    p2 = evaluate_prefill(p2_npu(), LLAMA33_70B, trace)
+    assert p1.throughput_tps > base_p.throughput_tps
+    assert p2.throughput_tps > base_p.throughput_tps
+    assert p1.throughput_tps > p2.throughput_tps     # paper: P1 6.71 > P2 4.93
+
+    base_d = evaluate_decode(baseline_npu(), LLAMA33_70B, trace)
+    d1 = evaluate_decode(d1_npu(), LLAMA33_70B, trace)
+    d2 = evaluate_decode(d2_npu(), LLAMA33_70B, trace)
+    assert d1.throughput_tps > base_d.throughput_tps
+    assert d2.throughput_tps > d1.throughput_tps     # paper: D2 2.19 > D1 1.44
+    # D1 per-step latency lands near the paper's implied 469 ms (1.44x
+    # of their 675 ms Base step); our Base is less pessimistic about
+    # OS-dataflow GEMV so only the absolute D1 number is asserted
+    assert 0.2 < d1.latency_s < 0.8
+
+
+def test_decode_is_memory_bound_on_optimized_devices():
+    d1 = evaluate_decode(d1_npu(), LLAMA33_70B, OSWORLD_LIBREOFFICE)
+    assert d1.bottleneck == "matrix_mem"
+
+
+def test_ws_act_beats_is_for_prefill():
+    """Table 4 direction: WS + Act storage >> IS + Weight storage."""
+    import dataclasses
+    trace = OSWORLD_LIBREOFFICE
+    base = p1_npu()
+    s3 = dataclasses.replace(base, strategy=SoftwareStrategy(
+        Dataflow.WEIGHT_STATIONARY, StoragePriority.ACTIVATION,
+        BandwidthPriority.MATRIX))
+    s4 = dataclasses.replace(base, strategy=SoftwareStrategy(
+        Dataflow.INPUT_STATIONARY, StoragePriority.WEIGHT,
+        BandwidthPriority.VECTOR))
+    r3 = evaluate_prefill(s3, LLAMA33_70B, trace, batch=1)
+    r4 = evaluate_prefill(s4, LLAMA33_70B, trace, batch=1)
+    assert r3.tokens_per_joule > r4.tokens_per_joule
+
+
+def test_quantization_scales_throughput_and_storage():
+    """Table 3 direction: 8/8/8 halves storage vs 16/16/16 and speeds up."""
+    q16 = QuantConfig("MXINT16", "MXINT16", "MXINT16")
+    q8 = QuantConfig()
+    w16 = weight_footprint_gb(LLAMA33_70B, q16)
+    w8 = weight_footprint_gb(LLAMA33_70B, q8)
+    assert w8 == pytest.approx(w16 / 2, rel=0.05)
+    assert q8.matrix_rate_scale == pytest.approx(2.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.sampled_from([1, 2, 4, 8]),
+       ctx=st.integers(1000, 50000))
+def test_decode_step_monotone_in_context(b, ctx):
+    npu = d1_npu()
+    r1 = evaluate_decode(npu, LLAMA33_70B, OSWORLD_LIBREOFFICE, batch=b,
+                         context_override=ctx)
+    r2 = evaluate_decode(npu, LLAMA33_70B, OSWORLD_LIBREOFFICE, batch=b,
+                         context_override=2 * ctx)
+    assert r2.latency_s >= r1.latency_s - 1e-9
+
+
+def test_ssm_family_has_no_kv_growth():
+    xl = ModelDims(name="x", family=Family.SSM, n_layers=4, d_model=256,
+                   n_heads=4, n_kv_heads=4, head_dim=64, d_ff=0, vocab=1024)
+    assert xl.kv_bytes_per_token(QuantConfig()) == 0.0
+    assert xl.ssm_state_bytes(2, QuantConfig()) > 0

@@ -1,0 +1,185 @@
+"""End-to-end behaviour: quantization accuracy proxy (Table 3 direction),
+emulator vs analytic cross-validation (Table 9), disaggregation (Fig 8),
+MX format properties, and the HLO roofline analyzer."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_arch
+from repro.configs.paper_models import LLAMA33_70B, QWEN3_32B
+from repro.core import QuantConfig, baseline_npu, d1_npu, p1_npu
+from repro.core.disagg import (decode_phase_profile, evaluate_disaggregated,
+                               kv_transfer_seconds)
+from repro.core.emulator import analytic_layer_seconds, emulate_layer
+from repro.core.gpu import H100, evaluate_gpu
+from repro.core.quant.formats import (FORMATS, get, quantization_error,
+                                      quantize_dequantize)
+from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
+from repro.roofline import hlo as hlo_mod
+
+
+# --------------------------------------------------------------------------
+# MX formats
+# --------------------------------------------------------------------------
+
+def test_mx_bits_per_element():
+    assert get("MXINT8").bits_per_element == pytest.approx(8 + 8 / 32)
+    assert get("MXFP4").bits_per_element == pytest.approx(4 + 8 / 32)
+    assert get("FP16").bits_per_element == 16
+
+
+@pytest.mark.parametrize("fmt", sorted(FORMATS))
+def test_quantize_roundtrip_bounded(fmt):
+    x = jax.random.normal(jax.random.key(0), (64, 128)) * 2.0
+    err = quantization_error(x, fmt)
+    bits = get(fmt).element_bits
+    assert err < {4: 0.35, 8: 0.05, 16: 0.01}.get(bits, 0.5), (fmt, err)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-3, 1e3))
+def test_mxint8_scale_invariance(scale):
+    """Block scaling makes MXINT8 error scale-invariant."""
+    x = jax.random.normal(jax.random.key(1), (32, 64))
+    e1 = quantization_error(x, "MXINT8")
+    e2 = quantization_error(x * scale, "MXINT8")
+    assert abs(e1 - e2) < 0.01
+
+
+def test_idempotent_quantization():
+    x = jax.random.normal(jax.random.key(2), (16, 64))
+    q1 = quantize_dequantize(x, "MXINT8")
+    q2 = quantize_dequantize(q1, "MXINT8")
+    assert float(jnp.max(jnp.abs(q1 - q2))) < 1e-6
+
+
+def test_accuracy_proxy_ordering():
+    """Table 3 direction via logit KL proxy: 8/8/8 ~ fp >> 4/4/4."""
+    from repro.core.quant.accuracy import quantization_quality_proxy
+    cfg = get_arch("qwen3-4b").reduced(n_layers=2, d_model=128, vocab=256)
+    q8 = quantization_quality_proxy(cfg, QuantConfig())
+    q4 = quantization_quality_proxy(
+        cfg, QuantConfig("MXINT4", "MXINT4", "MXINT4"))
+    assert q8["top1_agreement"] > q4["top1_agreement"]
+    assert q8["logit_kl"] < q4["logit_kl"]
+    assert q8["top1_agreement"] > 0.85
+
+
+# --------------------------------------------------------------------------
+# Emulator cross-validation (Table 9)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mk,phase,batch,ctx", [
+    (baseline_npu, Phase.PREFILL, 1, 4096),
+    (p1_npu, Phase.PREFILL, 1, 4096),
+    (d1_npu, Phase.DECODE, 8, 32768),
+])
+def test_emulator_vs_analytic(mk, phase, batch, ctx):
+    npu = mk()
+    t_a = analytic_layer_seconds(npu, LLAMA33_70B, phase, batch, ctx)
+    t_e = emulate_layer(npu, LLAMA33_70B, phase, batch, ctx,
+                        n_chunks=8).total_s
+    # paper Table 9: analytic lands within ~10-20% of the emulator
+    assert t_e > 0 and t_a > 0
+    assert 0.6 < t_a / t_e < 1.7, (t_a, t_e)
+
+
+def test_emulator_chunking_converges():
+    npu = baseline_npu()
+    t8 = emulate_layer(npu, QWEN3_32B, Phase.PREFILL, 1, 4096, 8).total_s
+    t32 = emulate_layer(npu, QWEN3_32B, Phase.PREFILL, 1, 4096, 32).total_s
+    assert abs(t8 - t32) / t8 < 0.3
+
+
+# --------------------------------------------------------------------------
+# Disaggregation (Fig 8)
+# --------------------------------------------------------------------------
+
+def test_disaggregated_system():
+    r = evaluate_disaggregated(p1_npu(), d1_npu(), LLAMA33_70B,
+                               OSWORLD_LIBREOFFICE)
+    assert r.ttft_s > 0 and r.decode_tps_aggregate > 0
+    assert r.kv_transfer_s < r.ttft_s
+    base = evaluate_disaggregated(baseline_npu(), baseline_npu(),
+                                  LLAMA33_70B, OSWORLD_LIBREOFFICE)
+    # P1+D1 beats Base+Base on aggregate decode throughput (Fig 8)
+    assert r.decode_tps_aggregate > base.decode_tps_aggregate
+
+
+def test_kv_transfer_accounting():
+    t, e = kv_transfer_seconds(LLAMA33_70B, OSWORLD_LIBREOFFICE, 1,
+                               QuantConfig())
+    # 90k tokens x 80 layers x 2 x 1024 x ~1B -> ~15 GB over 450 GB/s
+    assert 0.01 < t < 0.2
+    assert e > 0
+
+
+def test_decode_phase_split():
+    prof = decode_phase_profile(d1_npu(), LLAMA33_70B, OSWORLD_LIBREOFFICE,
+                                batch=8)
+    assert prof.late_step_s >= prof.early_step_s
+
+
+def test_gpu_baseline_sane():
+    r = evaluate_gpu(H100, LLAMA33_70B, OSWORLD_LIBREOFFICE, Phase.DECODE,
+                     QuantConfig(), n_gpus=4)
+    assert r.batch >= 1
+    assert 0.001 < r.latency_s < 10.0
+    assert r.avg_power_w <= 4 * H100.tdp_w
+
+
+# --------------------------------------------------------------------------
+# HLO analyzer
+# --------------------------------------------------------------------------
+
+SAMPLE_HLO = """
+HloModule test, num_partitions=4
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%g1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), to_apply=%sum
+  %one = s32[] constant(1)
+  %n = s32[] add(%g0, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%n, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %lim = s32[] constant(10)
+  ROOT %lt = pred[] compare(%g0, %lim), direction=LT
+}
+
+ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,16]) tuple(%zero, %x)
+  %w = (s32[], f32[8,16]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_loop_aware_totals():
+    t = hlo_mod.analyze(SAMPLE_HLO)
+    # dot: 2*8*16*16 = 4096 flops, x10 trips
+    assert t.dot_flops == pytest.approx(40960)
+    assert t.dot_flops_x1 == pytest.approx(4096)
+    # all-reduce operand: 8*16*4 = 512 bytes, x10 trips
+    assert t.coll_bytes == pytest.approx(5120)
+    assert t.coll_bytes_x1 == pytest.approx(512)
+    assert t.coll_by_kind["all-reduce"] == pytest.approx(5120)
+    assert t.trip_counts == [10]
+
+
+def test_shape_bytes():
+    assert hlo_mod.shape_bytes("bf16[4,8]{1,0}") == 64
+    assert hlo_mod.shape_bytes("(f32[2,2], s8[16])") == 32
+    assert hlo_mod.shape_bytes("f32[]") == 4

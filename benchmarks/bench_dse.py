@@ -1,5 +1,14 @@
 """Fig 6: hypervolume convergence of GP+EHVI vs NSGA-II vs MO-TPE vs
-Random (shared 20-point Sobol init, multiple seeds)."""
+Random (shared 20-point Sobol init, multiple seeds).
+
+Also emits machine-readable per-method timings to ``BENCH_dse.json`` so
+future optimization PRs have a perf trajectory to regress against.  In
+``--smoke`` mode (see benchmarks/run.py) the budget shrinks to one seed
+and 30 evaluations for a fast end-to-end sanity pass.
+"""
+
+import json
+import os
 
 import numpy as np
 
@@ -13,18 +22,24 @@ N_TOTAL = 60
 N_INIT = 20
 SEEDS = (0, 1, 2)
 
+SMOKE_N_TOTAL = 30
+SMOKE_SEEDS = (0,)
 
-def run() -> list:
-    curves = {m: [] for m in METHODS}
+JSON_PATH = os.environ.get("BENCH_DSE_JSON", "BENCH_dse.json")
+
+
+def run(smoke: bool = False) -> list:
+    n_total = SMOKE_N_TOTAL if smoke else N_TOTAL
+    seeds = SMOKE_SEEDS if smoke else SEEDS
     us_total = {m: 0.0 for m in METHODS}
     all_f = []
     runs = {m: [] for m in METHODS}
-    for seed in SEEDS:
+    for seed in seeds:
         obj = Objective(QWEN3_32B, OSWORLD_LIBREOFFICE, Phase.PREFILL,
                         tdp_limit_w=700.0)
         init = shared_init(obj, N_INIT, seed=seed)
         for name, runner in METHODS.items():
-            res, us = timed(runner, obj, n_total=N_TOTAL, seed=seed,
+            res, us = timed(runner, obj, n_total=n_total, seed=seed,
                             init=list(init))
             us_total[name] += us
             runs[name].append(res)
@@ -34,16 +49,35 @@ def run() -> list:
     ref = (np.vstack(all_f).min(axis=0) - 1.0) if all_f else np.zeros(2)
     out = []
     finals = {}
+    timings = {}
     for name in METHODS:
         hvs = np.stack([r.hv_history(ref) for r in runs[name]])
         finals[name] = hvs[:, -1].mean()
-        mid = hvs[:, N_INIT + (N_TOTAL - N_INIT) // 2].mean()
+        mid = hvs[:, N_INIT + (n_total - N_INIT) // 2].mean()
+        timings[name] = {
+            "us_per_run": us_total[name] / len(seeds),
+            "hv_final": float(finals[name]),
+            "hv_mid": float(mid),
+        }
         out.append(row(
             f"fig6_{name.lower().replace('+','').replace('-','')}",
-            us_total[name] / len(SEEDS),
-            f"HV@{N_TOTAL}={finals[name]:.3e} "
-            f"HV@mid={mid:.3e} seeds={len(SEEDS)}"))
+            us_total[name] / len(seeds),
+            f"HV@{n_total}={finals[name]:.3e} "
+            f"HV@mid={mid:.3e} seeds={len(seeds)}"))
     best = max(finals, key=finals.get)
     out.append(row("fig6_winner", 0.0,
                    f"{best} (paper: GP+EHVI converges highest)"))
+    payload = {
+        "bench": "dse_convergence",
+        "settings": {"n_total": n_total, "n_init": N_INIT,
+                     "seeds": list(seeds), "smoke": smoke},
+        "methods": timings,
+        "winner": best,
+        "total_us": sum(us_total.values()),
+    }
+    try:
+        with open(JSON_PATH, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+    except OSError:
+        pass                        # read-only working dir: CSV rows suffice
     return out

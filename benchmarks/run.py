@@ -2,10 +2,26 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run [--only t4,t5]
+Running the benchmarks
+----------------------
+From the repo root::
+
+  PYTHONPATH=src python -m benchmarks.run                 # everything
+  PYTHONPATH=src python -m benchmarks.run --only t4,t5    # filter by name
+  PYTHONPATH=src python -m benchmarks.run --smoke         # fast sanity pass
+
+``--smoke`` asks each module that supports it (currently the DSE
+convergence bench) to shrink its budget — fewer seeds / evaluations — so
+the whole suite finishes quickly in CI.  Modules that take a ``smoke``
+keyword receive it; the rest run at full settings.
+
+The DSE bench additionally writes machine-readable timings to
+``BENCH_dse.json`` (override the path with the ``BENCH_DSE_JSON`` env
+var) so perf changes can be tracked across PRs.
 """
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -28,6 +44,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filters")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced budgets for a fast end-to-end pass")
     args = ap.parse_args()
     filters = args.only.split(",") if args.only else None
 
@@ -38,7 +56,11 @@ def main() -> None:
             continue
         try:
             mod = __import__(modname, fromlist=["run"])
-            for line in mod.run():
+            kwargs = {}
+            if args.smoke and "smoke" in inspect.signature(
+                    mod.run).parameters:
+                kwargs["smoke"] = True
+            for line in mod.run(**kwargs):
                 print(line)
         except Exception as e:  # noqa: BLE001
             failures += 1

@@ -1,15 +1,18 @@
 """Design-space exploration (paper Section 4.4).
 
-space   Table 2 encoding <-> NPUConfig
+space   Table 2 encoding <-> NPUConfig (+ vectorized validity/TDP tables)
 sobol   quasi-random initialization (N_init = 20)
-gp      GP surrogates (JAX, MLE-fit RBF-ARD)
-pareto  dominance / front / exact 2-D hypervolume (Eq. 7)
-runner  GP+EHVI MOBO (Eq. 8) + NSGA-II / MO-TPE / Random baselines
+gp      GP surrogates (JAX, MLE-fit RBF-ARD, bucketed jit cache)
+pareto  dominance / front / exact 2-D hypervolume (Eq. 7), sweep-based
+ehvi    exact closed-form 2-D EHVI (Eq. 8) + quasi-MC oracle
+runner  GP+EHVI MOBO + NSGA-II / MO-TPE / Random baselines (batched)
 """
 
 from . import space
-from .pareto import (dominates, hv_contributions_2d, hypervolume_2d,
-                     pareto_front, pareto_mask, reference_point)
+from .ehvi import ehvi_2d, mc_ehvi
+from .pareto import (IncrementalHV2D, dominates, hv_contributions_2d,
+                     hv_history, hypervolume_2d, pareto_front, pareto_mask,
+                     reference_point)
 from .runner import (METHODS, DSEResult, Objective, Observation,
                      run_mobo, run_motpe, run_nsga2, run_random, shared_init)
 from .sobol import sobol

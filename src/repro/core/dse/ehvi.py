@@ -1,0 +1,95 @@
+"""Exact 2-D Expected Hypervolume Improvement (Eq. 8), vectorized.
+
+For two maximized objectives with independent Gaussian predictive
+marginals Y = (Y1, Y2), EHVI has a closed form over the staircase cells
+of the incumbent front (box decomposition, Emmerich/Yang style).  With
+the front sorted ascending in f1 — points (x_1, v_1) .. (x_m, v_m), v
+strictly descending — and sentinels x_0 = r1, x_{m+1} = +inf,
+v_{m+1} = r2, the non-dominated region above the reference point r
+splits into vertical strips, and
+
+    EHVI = sum_{k=1}^{m+1} [psi1(x_{k-1}) - psi1(x_k)] * psi2(v_k)
+
+where psi_j(t) = E[(Y_j - t)+] = sd_j * phi(z) + (mu_j - t) * Phi(z),
+z = (mu_j - t) / sd_j, is the Gaussian partial expectation
+(integral of P(Y_j > a) da from t to inf).
+
+Everything is NumPy-vectorized over the candidate pool: one
+[n_cand, m+2] matrix of psi1 evaluations and one [n_cand, m+1] of psi2,
+so scoring a 256-candidate pool against a 60-point history is a handful
+of array ops instead of ~n_cand * n_mc staircase hypervolume rebuilds.
+
+`mc_ehvi` keeps the quasi-Monte-Carlo estimator (the seed
+implementation's semantics) as a test oracle for the closed form.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .pareto import _staircase, hypervolume_2d
+
+try:                                    # scipy ships with jax, but keep the
+    from scipy.special import ndtr      # dse package importable without it
+except ImportError:                     # pragma: no cover - minimal installs
+    _erf = np.vectorize(math.erf, otypes=[float])
+
+    def ndtr(z):
+        return 0.5 * (1.0 + _erf(np.asarray(z) / math.sqrt(2.0)))
+
+_SQRT_2PI = float(np.sqrt(2.0 * np.pi))
+
+
+def _psi(t: np.ndarray, mu: np.ndarray, sd: np.ndarray) -> np.ndarray:
+    """E[(Y - t)+] for Y ~ N(mu, sd^2), elementwise-broadcast."""
+    sd = np.maximum(sd, 1e-300)
+    z = (mu - t) / sd
+    return sd * np.exp(-0.5 * z * z) / _SQRT_2PI + (mu - t) * ndtr(z)
+
+
+def ehvi_2d(front: np.ndarray, ref: np.ndarray, mu: np.ndarray,
+            sd: np.ndarray) -> np.ndarray:
+    """Exact EHVI for a batch of candidates (maximization).
+
+    front: [m, 2] incumbent points (any set; reduced to its staircase
+    internally).  ref: [2].  mu, sd: [n_cand, 2] independent Gaussian
+    predictive marginals.  Returns [n_cand] exact EHVI values.
+    """
+    mu = np.atleast_2d(np.asarray(mu, dtype=float))
+    sd = np.atleast_2d(np.asarray(sd, dtype=float))
+    ref = np.asarray(ref, dtype=float)
+    front = np.asarray(front, dtype=float).reshape(-1, 2)
+    stair = _staircase(front, ref) if len(front) else front
+    # thresholds: x_0=r1, x_1..x_m ; v_1..v_m, v_{m+1}=r2
+    xs = np.concatenate(([ref[0]], stair[:, 0]))
+    vs = np.concatenate((stair[:, 1], [ref[1]]))
+    psi1 = _psi(xs[None, :], mu[:, 0:1], sd[:, 0:1])       # [n, m+1]
+    psi1 = np.concatenate([psi1, np.zeros((len(mu), 1))], axis=1)
+    psi2 = _psi(vs[None, :], mu[:, 1:2], sd[:, 1:2])       # [n, m+1]
+    out = np.sum((psi1[:, :-1] - psi1[:, 1:]) * psi2, axis=1)
+    return np.maximum(out, 0.0)
+
+
+def mc_ehvi(front: np.ndarray, ref: np.ndarray, mu: np.ndarray,
+            sd: np.ndarray, z: np.ndarray) -> np.ndarray:
+    """Quasi-MC EHVI estimate (test oracle for `ehvi_2d`).
+
+    mu, sd: [n_cand, 2]; z: [n_samples, 2] standard-normal draws
+    (antithetic).  Returns EHVI estimates [n_cand].
+    """
+    front = np.asarray(front, dtype=float).reshape(-1, 2)
+    base = hypervolume_2d(front, ref) if len(front) else 0.0
+    out = np.zeros(len(mu))
+    for i in range(len(mu)):
+        ys = mu[i] + sd[i] * z            # [s, 2]
+        hvs = 0.0
+        for y in ys:
+            if y[0] <= ref[0] or y[1] <= ref[1]:
+                continue
+            hvs += max(0.0, hypervolume_2d(
+                np.vstack([front, y[None, :]]) if len(front) else y[None, :],
+                ref) - base)
+        out[i] = hvs / len(ys)
+    return out

@@ -3,9 +3,19 @@
 Objectives are MAXIMIZED throughout the DSE (throughput, -power); the
 hypervolume indicator (Eq. 7) is computed against a reference point that
 every observed objective vector dominates.
+
+All kernels are sort-based sweeps: `pareto_mask` is O(n log n) for two
+objectives (with a vectorized O(n^2) fallback for d != 2),
+`hypervolume_2d` is a single staircase sweep over the sorted front,
+`hv_contributions_2d` reads every exclusive contribution off the sorted
+staircase in one pass, and `hv_history` maintains the front incrementally
+(bisect insert + contiguous eviction) instead of recomputing the
+hypervolume from scratch after every observation.
 """
 
 from __future__ import annotations
+
+import bisect
 
 import numpy as np
 
@@ -17,73 +27,190 @@ def dominates(a: np.ndarray, b: np.ndarray) -> bool:
     return bool(np.all(a >= b) and np.any(a > b))
 
 
-def pareto_mask(ys: np.ndarray) -> np.ndarray:
-    """Boolean mask of non-dominated rows (maximization)."""
-    ys = np.asarray(ys, dtype=float)
+def _pareto_mask_2d(ys: np.ndarray) -> np.ndarray:
+    """O(n log n) sweep: sort by f1 desc (f2 desc within ties); a point
+    survives iff it has the max f2 of its f1-group and beats the best f2
+    seen among strictly-larger f1."""
+    n = len(ys)
+    order = np.lexsort((-ys[:, 1], -ys[:, 0]))
+    f1 = ys[order, 0]
+    f2 = ys[order, 1]
+    new_grp = np.empty(n, dtype=bool)
+    new_grp[0] = True
+    new_grp[1:] = f1[1:] != f1[:-1]
+    grp_start = np.maximum.accumulate(np.where(new_grp, np.arange(n), 0))
+    cummax = np.maximum.accumulate(f2)
+    best_prev = np.where(grp_start > 0, cummax[np.maximum(grp_start - 1, 0)],
+                         -np.inf)
+    keep = (f2 == f2[grp_start]) & (f2 > best_prev)
+    mask = np.empty(n, dtype=bool)
+    mask[order] = keep
+    return mask
+
+
+def _pareto_mask_nd(ys: np.ndarray) -> np.ndarray:
+    """Vectorized dominance filter for d != 2 objectives."""
     n = len(ys)
     mask = np.ones(n, dtype=bool)
     for i in range(n):
         if not mask[i]:
             continue
-        for j in range(n):
-            if i == j:
-                continue
-            if dominates(ys[j], ys[i]):
-                mask[i] = False
-                break
+        cand = np.flatnonzero(mask)
+        dom = (np.all(ys[cand] >= ys[i], axis=1)
+               & np.any(ys[cand] > ys[i], axis=1))
+        if np.any(dom):
+            mask[i] = False
+        else:
+            # i survives; anything i dominates cannot be on the front
+            sub = (np.all(ys[i] >= ys[cand], axis=1)
+                   & np.any(ys[i] > ys[cand], axis=1))
+            mask[cand[sub]] = False
     return mask
+
+
+def pareto_mask(ys: np.ndarray) -> np.ndarray:
+    """Boolean mask of non-dominated rows (maximization)."""
+    ys = np.asarray(ys, dtype=float)
+    if ys.size == 0:
+        return np.zeros(len(ys), dtype=bool)
+    if ys.shape[1] == 2:
+        return _pareto_mask_2d(ys)
+    return _pareto_mask_nd(ys)
 
 
 def pareto_front(ys: np.ndarray) -> np.ndarray:
     return np.asarray(ys, dtype=float)[pareto_mask(ys)]
 
 
+def _staircase(ys: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    """Non-dominated points strictly dominating `ref`, sorted ascending in
+    f1 (f2 then strictly descending; duplicates collapsed)."""
+    pts = ys[(ys[:, 0] > ref[0]) & (ys[:, 1] > ref[1])]
+    if len(pts) == 0:
+        return pts
+    front = pts[_pareto_mask_2d(pts)]
+    order = np.lexsort((front[:, 1], front[:, 0]))
+    front = front[order]
+    keep = np.empty(len(front), dtype=bool)
+    keep[0] = True
+    keep[1:] = np.any(front[1:] != front[:-1], axis=1)
+    return front[keep]
+
+
 def hypervolume_2d(ys: np.ndarray, ref: np.ndarray) -> float:
     """Exact dominated hypervolume for 2 maximized objectives (Eq. 7).
 
-    Points not dominating `ref` contribute nothing.
+    Points not dominating `ref` contribute nothing.  Single staircase
+    sweep: with the front sorted ascending in f1 (descending f2), the
+    dominated region is a disjoint union of strips
+    (x_i - x_{i-1}) * (y_i - ref2).
     """
     ys = np.asarray(ys, dtype=float)
     ref = np.asarray(ref, dtype=float)
     if ys.size == 0:
         return 0.0
-    pts = ys[(ys[:, 0] > ref[0]) & (ys[:, 1] > ref[1])]
-    if len(pts) == 0:
+    front = _staircase(ys, ref)
+    if len(front) == 0:
         return 0.0
-    front = pareto_front(pts)
-    # sort by f1 ascending; f2 is then descending along the front
-    order = np.argsort(front[:, 0])
-    front = front[order]
-    hv = 0.0
-    prev_x = ref[0]
-    # iterate right-to-left is equivalent; accumulate strips left-to-right
-    # strip i spans [prev_x, x_i] with height (y_i - ref2) where y_i is the
-    # max f2 among points with f1 >= x_i -> since front sorted ascending f1
-    # and descending f2, point i's own y is the height from its x leftward
-    # until a higher-y point.  Simpler: sweep descending f2:
-    hv = 0.0
-    prev_x = ref[0]
-    for i in range(len(front)):
-        x, y = front[i]
-        width_x = x - prev_x
-        if width_x < 0:
-            width_x = 0.0
-        # height: this point's y (front is descending in y as x grows, so
-        # the region right of prev_x up to x is topped by ... ) — use the
-        # classic staircase: process points sorted by f1 ascending and sum
-        # (x_i - x_{i-1}) * (y_i - ref2) over the *suffix maxima* of y.
-        hv += width_x * max(0.0, max(front[i:, 1]) - ref[1])
-        prev_x = x
-    return float(hv)
+    x_prev = np.concatenate(([ref[0]], front[:-1, 0]))
+    return float(np.sum((front[:, 0] - x_prev) * (front[:, 1] - ref[1])))
 
 
 def hv_contributions_2d(front: np.ndarray, ref: np.ndarray) -> np.ndarray:
-    """Exclusive hypervolume contribution of each front point."""
-    base = hypervolume_2d(front, ref)
+    """Exclusive hypervolume contribution of each point.
+
+    Dominated points, duplicates, and points not dominating `ref`
+    contribute 0; staircase points contribute their private rectangle
+    (x_i - x_{i-1}) * (y_i - y_{i+1}), read off the sorted front in one
+    vectorized pass.
+    """
+    front = np.asarray(front, dtype=float)
+    ref = np.asarray(ref, dtype=float)
     out = np.zeros(len(front))
-    for i in range(len(front)):
-        rest = np.delete(front, i, axis=0)
-        out[i] = base - hypervolume_2d(rest, ref)
+    if front.size == 0:
+        return out
+    dom = (front[:, 0] > ref[0]) & (front[:, 1] > ref[1])
+    idx = np.flatnonzero(dom)
+    if len(idx) == 0:
+        return out
+    pts = front[idx]
+    on_front = _pareto_mask_2d(pts)
+    idx = idx[on_front]
+    p = front[idx]
+    order = np.lexsort((p[:, 1], p[:, 0]))
+    sp = p[order]
+    first = np.empty(len(sp), dtype=bool)
+    first[0] = True
+    first[1:] = np.any(sp[1:] != sp[:-1], axis=1)
+    starts = np.flatnonzero(first)
+    counts = np.diff(np.append(starts, len(sp)))
+    u = sp[first]                       # unique: asc f1, strictly desc f2
+    x_prev = np.concatenate(([ref[0]], u[:-1, 0]))
+    y_next = np.concatenate((u[1:, 1], [ref[1]]))
+    contrib = (u[:, 0] - x_prev) * (u[:, 1] - y_next)
+    contrib[counts > 1] = 0.0           # a duplicated point is never exclusive
+    grp = np.cumsum(first) - 1
+    out[idx[order]] = contrib[grp]
+    return out
+
+
+class IncrementalHV2D:
+    """Incremental exact 2-D hypervolume: add points one at a time.
+
+    Maintains the staircase front as parallel sorted lists; each `add` is
+    O(log n) search + O(evicted) removal, so a full history over n points
+    is O(n log n) total instead of n full recomputations.
+    """
+
+    def __init__(self, ref) -> None:
+        self.ref = (float(ref[0]), float(ref[1]))
+        self._xs: list = []             # ascending f1
+        self._ys: list = []             # strictly descending f2
+        self.hv = 0.0
+
+    def add(self, point) -> float:
+        """Insert one point; returns the updated hypervolume."""
+        x, y = float(point[0]), float(point[1])
+        r0, r1 = self.ref
+        if x <= r0 or y <= r1:
+            return self.hv
+        xs, ys = self._xs, self._ys
+        i = bisect.bisect_right(xs, x)
+        # lo: first index whose y <= y (ys descending) among x' <= x
+        lo = i
+        while lo > 0 and ys[lo - 1] <= y:
+            lo -= 1
+        # dominated iff some point has x' >= x and y' >= y:
+        # the nearest candidate with y' >= y is index lo-1 (x' <= x region)
+        # or index i (x' > x, but then y' < ys[lo-1]... check directly).
+        if lo > 0 and xs[lo - 1] >= x:
+            return self.hv              # duplicate-or-dominated
+        if i < len(xs) and ys[i] >= y:
+            return self.hv
+        x_left = xs[lo - 1] if lo > 0 else r0
+        y_right = ys[i] if i < len(xs) else r1
+        gained = (x - x_left) * (y - y_right)
+        x_prev = x_left
+        for k in range(lo, i):          # points newly dominated by (x, y)
+            gained -= (xs[k] - x_prev) * (ys[k] - y_right)
+            x_prev = xs[k]
+        xs[lo:i] = [x]
+        ys[lo:i] = [y]
+        self.hv += gained
+        return self.hv
+
+    def front(self) -> np.ndarray:
+        return np.column_stack((self._xs, self._ys)) if self._xs \
+            else np.empty((0, 2))
+
+
+def hv_history(ys: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    """Hypervolume of the first k points, for every k (incremental)."""
+    ys = np.asarray(ys, dtype=float)
+    out = np.empty(len(ys))
+    inc = IncrementalHV2D(ref)
+    for k, y in enumerate(ys):
+        out[k] = inc.add(y)
     return out
 
 

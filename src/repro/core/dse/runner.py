@@ -5,6 +5,19 @@ All methods maximize f(x) = (throughput_tps, -avg_power_w) subject to a
 TDP constraint, share the same Sobol/random initialization, and report
 their evaluation history so hypervolume-convergence curves can be drawn
 against a common reference point.
+
+Hot-path structure (vectorized engine):
+
+* Candidate selection stays sequential per method (so seeded RNG
+  trajectories are reproducible), but objective evaluation is batched:
+  `Objective.evaluate_batch` routes whole design lists through the
+  vectorized `space.valid_mask` / `space.tdp_w_batch` prefilters and
+  `perfmodel.evaluate_batch`'s memoized-traffic fast path.
+* MOBO scores its candidate pool with the exact closed-form 2-D EHVI
+  (`ehvi.ehvi_2d`) instead of a quasi-MC estimate, and filters the pool
+  with the per-gene TDP/validity tables instead of decoding every draw.
+* Hypervolume convergence curves come from the incremental staircase
+  (`pareto.IncrementalHV2D`), not a from-scratch recompute per step.
 """
 
 from __future__ import annotations
@@ -15,10 +28,11 @@ from typing import Callable, Optional
 import numpy as np
 
 from ..npu import NPUConfig
-from ..perfmodel import InfeasibleConfig, evaluate
+from ..perfmodel import InfeasibleConfig, evaluate, evaluate_batch
 from ..workload import ModelDims, Phase, Trace
 from . import space as sp
-from .pareto import hypervolume_2d, pareto_front, pareto_mask
+from .ehvi import ehvi_2d
+from .pareto import IncrementalHV2D, pareto_front, pareto_mask
 from .sobol import sobol
 
 
@@ -39,15 +53,15 @@ class DSEResult:
                         dtype=float)
 
     def hv_history(self, ref: np.ndarray) -> np.ndarray:
-        """HV of the feasible front after each evaluation."""
-        out = []
-        fs = []
-        for o in self.observations:
+        """HV of the feasible front after each evaluation (incremental)."""
+        inc = IncrementalHV2D(ref)
+        out = np.empty(len(self.observations))
+        hv = 0.0
+        for i, o in enumerate(self.observations):
             if o.f is not None:
-                fs.append(o.f)
-            out.append(hypervolume_2d(np.array(fs, dtype=float), ref)
-                       if fs else 0.0)
-        return np.array(out)
+                hv = inc.add(o.f)
+            out[i] = hv
+        return out
 
     def pareto(self) -> list:
         obs = [o for o in self.observations if o.f is not None]
@@ -58,7 +72,7 @@ class DSEResult:
 
 
 class Objective:
-    """Evaluate one design on one (model, trace, phase) under a TDP cap."""
+    """Evaluate designs on one (model, trace, phase) under a TDP cap."""
 
     def __init__(self, dims: ModelDims, trace: Trace, phase: Phase,
                  tdp_limit_w: float = 700.0, batch: Optional[int] = None):
@@ -86,28 +100,62 @@ class Objective:
         self.cache[key] = obs
         return obs
 
+    def evaluate_batch(self, xs) -> list:
+        """Evaluate a list of designs in bulk (same results as mapping
+        `self(x)`, same cache), using the vectorized validity prefilter
+        and the perfmodel batch fast path."""
+        keys = [tuple(int(v) for v in x) for x in xs]
+        todo = []
+        pending = set()
+        for k in keys:
+            if k not in self.cache and k not in pending:
+                pending.add(k)
+                todo.append(k)
+        if todo:
+            valid = sp.valid_mask(np.asarray(todo, dtype=np.int64))
+            run_keys, run_npus = [], []
+            for k, ok in zip(todo, valid):
+                self.n_evals += 1
+                obs = Observation(x=list(k), f=None, npu=None)
+                self.cache[k] = obs
+                if not ok:
+                    continue
+                try:
+                    obs.npu = sp.decode(k)
+                except sp.InvalidDesign:   # defensive: mask mirrors decode
+                    continue
+                if obs.npu.tdp_w() <= self.tdp_limit_w:
+                    run_keys.append(k)
+                    run_npus.append(obs.npu)
+            results = evaluate_batch(run_npus, self.dims, self.trace,
+                                     self.phase, batch=self.batch)
+            for k, r in zip(run_keys, results):
+                if r is not None:
+                    self.cache[k].f = (r.throughput_tps, -r.avg_power_w)
+        return [self.cache[k] for k in keys]
+
 
 def shared_init(objective: Objective, n_init: int, seed: int) -> list:
     """Sobol initialization (paper: N_init = 20), skipping duplicates."""
-    obs = []
+    xs: list = []
     seen = set()
     u = sobol(4 * n_init, sp.N_DIMS, skip=seed * 101)
     i = 0
-    while len(obs) < n_init and i < len(u):
+    while len(xs) < n_init and i < len(u):
         x = tuple(sp.from_unit(u[i]))
         i += 1
         if x in seen:
             continue
         seen.add(x)
-        obs.append(objective(x))
+        xs.append(x)
     rng = np.random.default_rng(seed)
-    while len(obs) < n_init:
+    while len(xs) < n_init:
         x = tuple(sp.random_design(rng))
         if x in seen:
             continue
         seen.add(x)
-        obs.append(objective(x))
-    return obs
+        xs.append(x)
+    return objective.evaluate_batch(xs)
 
 
 # ---------------------------------------------------------------------------
@@ -119,12 +167,14 @@ def run_random(objective: Objective, n_total: int = 100, seed: int = 0,
     rng = np.random.default_rng(seed + 7)
     obs = list(init) if init else []
     seen = {tuple(o.x) for o in obs}
-    while len(obs) < n_total:
+    xs = []
+    while len(obs) + len(xs) < n_total:
         x = tuple(sp.random_design(rng))
         if x in seen:
             continue
         seen.add(x)
-        obs.append(objective(x))
+        xs.append(x)
+    obs.extend(objective.evaluate_batch(xs))
     return DSEResult(method="Random", observations=obs)
 
 
@@ -132,37 +182,15 @@ def run_random(objective: Objective, n_total: int = 100, seed: int = 0,
 # GP + EHVI (ours)
 # ---------------------------------------------------------------------------
 
-def _mc_ehvi(front: np.ndarray, ref: np.ndarray, mu: np.ndarray,
-             sd: np.ndarray, z: np.ndarray) -> np.ndarray:
-    """Quasi-MC Expected Hypervolume Improvement for a candidate batch.
-
-    mu, sd: [n_cand, 2]; z: [n_samples, 2] standard-normal draws
-    (antithetic).  Returns EHVI estimates [n_cand].
-    """
-    base = hypervolume_2d(front, ref)
-    out = np.zeros(len(mu))
-    for i in range(len(mu)):
-        ys = mu[i] + sd[i] * z            # [s, 2]
-        hvs = 0.0
-        for y in ys:
-            if y[0] <= ref[0] or y[1] <= ref[1]:
-                continue
-            hvs += max(0.0, hypervolume_2d(
-                np.vstack([front, y[None, :]]) if len(front) else y[None, :],
-                ref) - base)
-        out[i] = hvs / len(ys)
-    return out
-
-
 def run_mobo(objective: Objective, n_total: int = 100, seed: int = 0,
              init: Optional[list] = None, n_init: int = 20,
-             pool_size: int = 256, n_mc: int = 32) -> DSEResult:
-    """Multi-Objective Bayesian Optimization with GP surrogates + EHVI."""
+             pool_size: int = 256) -> DSEResult:
+    """Multi-Objective Bayesian Optimization with GP surrogates + exact
+    closed-form 2-D EHVI (Eq. 8) over a table-filtered candidate pool."""
     from .gp import GP
     rng = np.random.default_rng(seed + 13)
     obs = list(init) if init else shared_init(objective, n_init, seed)
     seen = {tuple(o.x) for o in obs}
-    half = rng.standard_normal((1, 2))  # placeholder; re-drawn per iter
     while len(obs) < n_total:
         feas = [o for o in obs if o.f is not None]
         if len(feas) < 4:
@@ -172,35 +200,32 @@ def run_mobo(objective: Objective, n_total: int = 100, seed: int = 0,
             seen.add(x)
             obs.append(objective(x))
             continue
-        xs = np.array([sp.normalize(o.x) for o in feas])
+        xs = sp.normalize_batch([o.x for o in feas])
         fs = np.array([o.f for o in feas], dtype=float)
         gps = [GP.fit(xs, fs[:, m]) for m in range(2)]
         front = pareto_front(fs)
         ref = fs.min(axis=0) - 0.05 * (fs.max(axis=0) - fs.min(axis=0) + 1e-9)
-        # candidate pool: random unevaluated designs, cheap-filtered
+        # candidate pool: one vectorized draw, validity/TDP filtered via
+        # the per-gene tables (no NPUConfig construction per draw)
+        cand = sp.random_designs(rng, pool_size * 10)
+        ok = sp.valid_mask(cand) & (sp.tdp_w_batch(cand)
+                                    <= objective.tdp_limit_w)
         pool = []
-        tries = 0
-        while len(pool) < pool_size and tries < pool_size * 10:
-            tries += 1
-            x = tuple(sp.random_design(rng))
-            if x in seen:
+        pool_seen = set()
+        for x in map(tuple, cand[ok].tolist()):
+            if x in seen or x in pool_seen:
                 continue
-            try:
-                npu = sp.decode(x)
-                if npu.tdp_w() > objective.tdp_limit_w:
-                    continue
-            except sp.InvalidDesign:
-                continue
+            pool_seen.add(x)
             pool.append(x)
+            if len(pool) >= pool_size:
+                break
         if not pool:
             break
-        xq = np.array([sp.normalize(x) for x in pool])
+        xq = sp.normalize_batch(pool)
         mus, sds = zip(*(g.predict(xq) for g in gps))
         mu = np.stack(mus, axis=1)
         sd = np.stack(sds, axis=1)
-        h = rng.standard_normal((n_mc // 2, 2))
-        z = np.vstack([h, -h])
-        scores = _mc_ehvi(front, ref, mu, sd, z)
+        scores = ehvi_2d(front, ref, mu, sd)
         x_best = pool[int(np.argmax(scores))]
         seen.add(x_best)
         obs.append(objective(x_best))
@@ -315,7 +340,7 @@ def run_nsga2(objective: Objective, n_total: int = 100, seed: int = 0,
             seen.add(x)
             obs.append(objective(x))
             continue
-        child_obs = [objective(c) for c in children]
+        child_obs = objective.evaluate_batch(children)
         obs.extend(child_obs)
         # environmental selection on parents + children
         union = pop + child_obs
@@ -388,9 +413,16 @@ def run_motpe(objective: Objective, n_total: int = 100, seed: int = 0,
             if ratio > best_ratio:
                 best_ratio, best_x = ratio, x
         if best_x is None:
-            best_x = tuple(sp.random_design(rng))
-            if best_x in seen:
-                continue
+            # near-saturation: every sampled candidate was already seen.
+            # Bounded fallback to a random unseen design (the seed
+            # implementation's `continue` could spin forever here).
+            for _ in range(max(1, n_candidates) * 8):
+                x = tuple(sp.random_design(rng))
+                if x not in seen:
+                    best_x = x
+                    break
+            if best_x is None:
+                break                   # retry budget exhausted: stop early
         seen.add(best_x)
         obs.append(objective(best_x))
     return DSEResult(method="MO-TPE", observations=obs)

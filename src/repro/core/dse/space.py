@@ -114,6 +114,12 @@ def normalize(x) -> np.ndarray:
                     dtype=np.float64)
 
 
+def normalize_batch(xs) -> np.ndarray:
+    """Vectorized `normalize` for an [n, N_DIMS] design batch."""
+    return ((np.asarray(xs, dtype=np.float64) + 0.5)
+            / np.asarray(CARDINALITIES, dtype=np.float64))
+
+
 def from_unit(u) -> list[int]:
     """[0,1)^d -> integer vector (Sobol mapping)."""
     return [min(int(v * c), c - 1) for v, c in zip(u, CARDINALITIES)]
@@ -123,8 +129,111 @@ def random_design(rng: np.random.Generator) -> list[int]:
     return [int(rng.integers(c)) for c in CARDINALITIES]
 
 
+def random_designs(rng: np.random.Generator, n: int) -> np.ndarray:
+    """`n` random designs in one vectorized draw ([n, N_DIMS] int array)."""
+    return rng.integers(0, np.asarray(CARDINALITIES), size=(n, N_DIMS))
+
+
 def space_cardinality() -> int:
     out = 1
     for c in CARDINALITIES:
         out *= c
     return out
+
+
+# ---------------------------------------------------------------------------
+# Vectorized validity / TDP / capacity over encoded design batches.
+#
+# `decode` + `NPUConfig.tdp_w()` cost ~50 us per design, which dominates
+# candidate-pool filtering in the MOBO inner loop.  Both validity and TDP
+# decompose over the genes (each hierarchy level contributes independently
+# to shoreline / background+dynamic peak power / capacity), so we
+# precompute small per-gene lookup tables FROM the same constructors
+# `decode` uses and reduce a whole [n, N_DIMS] batch with NumPy gathers.
+# ---------------------------------------------------------------------------
+
+_GENE_TABLES: Optional[dict] = None
+
+
+def _level_stats(tech_name: str, stacks: int) -> tuple[float, float, float]:
+    """(tdp_w, shoreline_mm, capacity_gb) contribution of one level."""
+    if stacks <= 0:
+        return 0.0, 0.0, 0.0
+    level = MemoryLevel(get_tech(tech_name), stacks)
+    e = max(level.tech.e_read_pj_per_bit, level.tech.e_write_pj_per_bit)
+    tdp = level.background_power_w() + e * level.bandwidth_gbps * 8e9 * 1e-12
+    return tdp, level.shoreline_mm, level.capacity_gb
+
+
+def _gene_tables() -> dict:
+    """Per-gene (tdp, shoreline, capacity) lookup tables, built lazily."""
+    global _GENE_TABLES
+    if _GENE_TABLES is not None:
+        return _GENE_TABLES
+    from ..power import compute_tdp_w
+
+    def table(fn, *dims):
+        out = np.zeros(dims + (3,))
+        for idx in np.ndindex(*dims):
+            out[idx] = fn(*idx)
+        return out
+
+    t = {
+        "compute": table(
+            lambda p, v: (compute_tdp_w(ComputeConfig(
+                pe_rows=PE_CHOICES[p][0], pe_cols=PE_CHOICES[p][1],
+                vlen=VLEN_CHOICES[v])), 0.0, 0.0),
+            len(PE_CHOICES), len(VLEN_CHOICES)),
+        "sram3d": table(lambda i: _level_stats("3D-SRAM", SRAM3D_CHOICES[i]),
+                        len(SRAM3D_CHOICES)),
+        "sram2d": table(lambda i: _level_stats("SRAM", SRAM2D_CHOICES[i]),
+                        len(SRAM2D_CHOICES)),
+        "hbm": table(lambda ty, s: _level_stats(HBM_TYPES[ty],
+                                                STACK_CHOICES[s]),
+                     len(HBM_TYPES), len(STACK_CHOICES)),
+        "gddr": table(lambda ty, s: _level_stats(GDDR_TYPES[ty],
+                                                 STACK_CHOICES[s]),
+                      len(GDDR_TYPES), len(STACK_CHOICES)),
+        "lpddr": table(lambda ty, s: _level_stats(LPDDR_TYPES[ty],
+                                                  LPDDR_STACK_CHOICES[s]),
+                       len(LPDDR_TYPES), len(LPDDR_STACK_CHOICES)),
+        "hbf": table(lambda s: _level_stats("HBF", STACK_CHOICES[s]),
+                     len(STACK_CHOICES)),
+    }
+    _GENE_TABLES = t
+    return t
+
+
+def _batch_stats(xs: np.ndarray) -> np.ndarray:
+    """[n, 3] (tdp_w, shoreline_mm, capacity_gb) per encoded design."""
+    t = _gene_tables()
+    xs = np.asarray(xs, dtype=np.int64)
+    return (t["compute"][xs[:, 0], xs[:, 1]]
+            + t["sram3d"][xs[:, 2]] + t["sram2d"][xs[:, 3]]
+            + t["hbm"][xs[:, 4], xs[:, 5]]
+            + t["gddr"][xs[:, 6], xs[:, 7]]
+            + t["lpddr"][xs[:, 8], xs[:, 9]]
+            + t["hbf"][xs[:, 10]])
+
+
+def valid_mask(xs: np.ndarray) -> np.ndarray:
+    """Vectorized `decode`-validity: in-range genes, some on-chip memory,
+    and the Eq. 1 shoreline bound (same tolerance as MemoryHierarchy)."""
+    from ..hierarchy import L_MEM_MAX_MM
+    xs = np.asarray(xs, dtype=np.int64)
+    in_range = np.all((xs >= 0) & (xs < np.asarray(CARDINALITIES)), axis=1)
+    safe = np.where(in_range[:, None], xs, 0)
+    has_onchip = (np.asarray(SRAM3D_CHOICES)[safe[:, 2]] > 0) \
+        | (np.asarray(SRAM2D_CHOICES)[safe[:, 3]] > 0)
+    shoreline = _batch_stats(safe)[:, 1]
+    return in_range & has_onchip & (shoreline <= L_MEM_MAX_MM + 1e-9)
+
+
+def tdp_w_batch(xs: np.ndarray) -> np.ndarray:
+    """Vectorized `NPUConfig.tdp_w()` for encoded designs (valid genes)."""
+    return _batch_stats(xs)[:, 0]
+
+
+def capacity_gb_batch(xs: np.ndarray) -> np.ndarray:
+    """Vectorized `hierarchy.total_capacity_gb()` for encoded designs."""
+    return _batch_stats(xs)[:, 2]

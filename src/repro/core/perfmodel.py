@@ -35,7 +35,8 @@ from .power import E_MAC_PJ, E_VECTOR_OP_PJ, P_BASE_W, compute_power_w
 from .quant.formats import QuantConfig
 from .workload import (DataClass, Family, LayerTraffic, ModelDims, Phase,
                        Trace, activation_footprint_gb, kv_footprint_gb,
-                       layer_traffic, lm_head_traffic, weight_footprint_gb)
+                       layer_traffic_cached, lm_head_traffic_cached,
+                       weight_footprint_gb)
 
 _CLS_INDEX = {DataClass.WEIGHT: WEIGHTS, DataClass.ACT: ACTS, DataClass.KV: KV}
 
@@ -276,10 +277,10 @@ def evaluate_prefill(npu: NPUConfig, dims: ModelDims, trace: Trace,
     S = trace.prompt_tokens
     batch = batch if batch is not None else max_prefill_batch(npu, dims, trace)
     placement = _placement_for(npu, dims, batch, S, S)
-    traffic = layer_traffic(dims, Phase.PREFILL, batch, S, npu.quant)
+    traffic = layer_traffic_cached(dims, Phase.PREFILL, batch, S, npu.quant)
     t_layer, e_layer, bneck, bd = _layer_time_and_energy(npu, traffic, placement)
     n_layers = dims.n_layers + dims.n_encoder_layers
-    head = lm_head_traffic(dims, batch, 1, npu.quant)
+    head = lm_head_traffic_cached(dims, batch, 1, npu.quant)
     t_head, e_head, _, _ = _layer_time_and_energy(npu, head, placement)
     latency = t_layer * n_layers + t_head
     energy = e_layer * n_layers + e_head
@@ -328,10 +329,10 @@ def evaluate_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
         return _evaluate_dllm_decode(npu, dims, trace, b)
     placement = _placement_for(npu, dims, b,
                                trace.prompt_tokens + trace.gen_tokens, 1)
-    traffic = layer_traffic(dims, Phase.DECODE, b, ctx, npu.quant)
+    traffic = layer_traffic_cached(dims, Phase.DECODE, b, ctx, npu.quant)
     t_layer, e_layer, bneck, bd = _layer_time_and_energy(npu, traffic, placement)
     n_layers = dims.n_layers
-    head = lm_head_traffic(dims, b, 1, npu.quant)
+    head = lm_head_traffic_cached(dims, b, 1, npu.quant)
     t_head, e_head, _, _ = _layer_time_and_energy(npu, head, placement)
     step = t_layer * n_layers + t_head
     energy = e_layer * n_layers + e_head
@@ -354,7 +355,7 @@ def _evaluate_dllm_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
     full sequence; steps per generated token given by the model."""
     S = trace.prompt_tokens + trace.gen_tokens
     placement = _placement_for(npu, dims, batch, S, S)
-    traffic = layer_traffic(dims, Phase.PREFILL, batch, S, npu.quant)
+    traffic = layer_traffic_cached(dims, Phase.PREFILL, batch, S, npu.quant)
     t_layer, e_layer, bneck, bd = _layer_time_and_energy(npu, traffic, placement)
     steps = max(1.0, trace.gen_tokens * dims.diffusion_steps_per_token)
     t_step = t_layer * dims.n_layers
@@ -378,3 +379,24 @@ def evaluate(npu: NPUConfig, dims: ModelDims, trace: Trace, phase: Phase,
     if phase is Phase.PREFILL:
         return evaluate_prefill(npu, dims, trace, batch=batch)
     return evaluate_decode(npu, dims, trace, batch=batch)
+
+
+def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
+                   batch: Optional[int] = None) -> list:
+    """Evaluate many NPU configurations on one workload phase.
+
+    Structure-of-arrays fast path for DSE candidate pools and Sobol
+    initializations: all designs share the memoized per-(dims, phase,
+    batch, ctx, quant) `layer_traffic_cached` operator lists and the
+    cached footprint terms of the max-batch capacity search, so only the
+    per-design placement/timing arithmetic runs per config.  Returns one
+    PhaseResult per config, with None for infeasible entries instead of
+    raising (batch callers filter rather than unwind).
+    """
+    out = []
+    for npu in npus:
+        try:
+            out.append(evaluate(npu, dims, trace, phase, batch=batch))
+        except ValueError:          # InfeasibleConfig et al.
+            out.append(None)
+    return out

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 from typing import Optional
 
 from .quant.formats import QuantConfig
@@ -358,6 +359,20 @@ def layer_traffic(dims: ModelDims, phase: Phase, batch: int,
     return t
 
 
+@functools.lru_cache(maxsize=8192)
+def layer_traffic_cached(dims: ModelDims, phase: Phase, batch: int,
+                         context: int, quant: QuantConfig,
+                         q_len: Optional[int] = None) -> LayerTraffic:
+    """Memoized `layer_traffic` keyed on (dims, phase, batch, ctx, quant).
+
+    The DSE evaluates thousands of designs against the same workload;
+    designs sharing a quantization assignment and batch rebuild identical
+    operator lists.  Callers MUST treat the returned object as immutable
+    (use `layer_traffic` for a private copy).
+    """
+    return layer_traffic(dims, phase, batch, context, quant, q_len=q_len)
+
+
 def lm_head_traffic(dims: ModelDims, batch: int, tokens: int,
                     quant: QuantConfig) -> LayerTraffic:
     t = LayerTraffic()
@@ -368,14 +383,23 @@ def lm_head_traffic(dims: ModelDims, batch: int, tokens: int,
     return t
 
 
+@functools.lru_cache(maxsize=8192)
+def lm_head_traffic_cached(dims: ModelDims, batch: int, tokens: int,
+                           quant: QuantConfig) -> LayerTraffic:
+    """Memoized `lm_head_traffic`; treat the result as immutable."""
+    return lm_head_traffic(dims, batch, tokens, quant)
+
+
 # ---------------------------------------------------------------------------
 # Footprints (capacity planning; paper Section 4.3 decode max-batch rule)
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=8192)
 def weight_footprint_gb(dims: ModelDims, quant: QuantConfig) -> float:
     return dims.total_params() * quant.weight_bytes / 1e9
 
 
+@functools.lru_cache(maxsize=65536)
 def kv_footprint_gb(dims: ModelDims, batch: int, context: int,
                     quant: QuantConfig) -> float:
     ctx = min(context, dims.attn_window) if dims.attn_window else context
@@ -384,6 +408,7 @@ def kv_footprint_gb(dims: ModelDims, batch: int, context: int,
     return kv / 1e9
 
 
+@functools.lru_cache(maxsize=65536)
 def activation_footprint_gb(dims: ModelDims, batch: int, q_len: int,
                             quant: QuantConfig) -> float:
     """Resident activation state: every request's residual-stream panel

@@ -17,9 +17,34 @@ import shutil
 from typing import Optional
 
 import jax
-import msgpack
 import numpy as np
-import zstandard
+
+
+def _codecs():
+    """Lazy import of the optional serialization deps.
+
+    `zstandard` and `msgpack` are only needed when checkpoints are
+    actually written or read; importing them at module scope would make
+    `import repro.runtime` fail on minimal installs.
+    """
+    try:
+        import msgpack
+        import zstandard
+    except ImportError as e:
+        raise ImportError(
+            "checkpointing requires the optional 'msgpack' and 'zstandard' "
+            "packages; install them to save/restore checkpoints "
+            f"(missing: {e.name})") from e
+    return msgpack, zstandard
+
+
+def codecs_available() -> bool:
+    """True when the optional checkpoint codecs can be imported."""
+    try:
+        _codecs()
+        return True
+    except ImportError:
+        return False
 
 
 def _flatten(tree) -> dict:
@@ -33,6 +58,7 @@ def _flatten(tree) -> dict:
 
 def save(directory: str, step: int, tree, keep_last: int = 3) -> str:
     """Atomic checkpoint write; returns the final path."""
+    msgpack, zstandard = _codecs()
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
@@ -75,6 +101,7 @@ def restore(directory: str, step: int, template,
     """Restore into the structure of `template`; device_put with
     `shardings` (a matching pytree) when given — this is the elastic-
     rescale entry point (same checkpoint, different mesh)."""
+    msgpack, zstandard = _codecs()
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)

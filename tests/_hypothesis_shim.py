@@ -1,0 +1,112 @@
+"""Minimal stand-in for `hypothesis` when the real package is absent.
+
+The container this suite runs in does not ship `hypothesis`, and tier-1
+forbids installing it, so `conftest.py` installs this shim into
+`sys.modules` as a fallback.  It implements exactly the surface the test
+suite uses — `given`, `settings`, and the `floats` / `integers` /
+`sampled_from` / `lists` / `tuples` strategies — by running each property
+against a deterministic seeded sample (boundary values first, then
+uniform draws).  When the real hypothesis is installed it is used
+instead; this file is never imported.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw, boundary=()):
+        self._draw = draw
+        self.boundary = tuple(boundary)   # deterministic edge examples
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda r: r.uniform(min_value, max_value),
+                     boundary=(min_value, max_value))
+
+
+def integers(min_value=0, max_value=100, **_kw):
+    return _Strategy(lambda r: r.randint(min_value, max_value),
+                     boundary=(min_value, max_value))
+
+
+def sampled_from(elements):
+    seq = list(elements)
+    return _Strategy(lambda r: r.choice(seq), boundary=(seq[0], seq[-1]))
+
+
+def booleans():
+    return _Strategy(lambda r: bool(r.getrandbits(1)),
+                     boundary=(False, True))
+
+
+def lists(elements, min_size=0, max_size=10, **_kw):
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return [elements.draw(r) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*elements):
+    return _Strategy(lambda r: tuple(e.draw(r) for e in elements))
+
+
+class settings:
+    """Decorator: records max_examples on the wrapped property."""
+
+    def __init__(self, max_examples=25, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_max_examples = self.max_examples
+        return fn
+
+
+def given(*pos_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", 25)
+            # crc32, not hash(): PYTHONHASHSEED varies per process and
+            # would make "deterministic" draws differ between runs
+            rng = random.Random(0xC0FFEE ^ zlib.crc32(fn.__name__.encode()))
+            strategies = list(pos_strategies) + list(kw_strategies.values())
+            names = list(kw_strategies)
+            n_boundary = 0
+            if all(s.boundary for s in strategies) and strategies:
+                n_boundary = min(len(s.boundary) for s in strategies)
+            for i in range(n):
+                if i < n_boundary:
+                    vals = [s.boundary[i] for s in strategies]
+                else:
+                    vals = [s.draw(rng) for s in strategies]
+                pos = vals[:len(pos_strategies)]
+                kw = dict(zip(names, vals[len(pos_strategies):]))
+                fn(*pos, *args, **kw, **kwargs)
+
+        # pytest must not mistake the strategy-bound parameters for
+        # fixtures: expose only the unbound remainder of fn's signature.
+        import inspect
+        params = list(inspect.signature(fn).parameters.values())
+        remaining = [p for p in params[len(pos_strategies):]
+                     if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+    return deco
+
+
+class strategies:  # imported as `from hypothesis import strategies as st`
+    floats = staticmethod(floats)
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+    lists = staticmethod(lists)
+    tuples = staticmethod(tuples)

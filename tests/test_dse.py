@@ -5,9 +5,10 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.dse import (Objective, hypervolume_2d, pareto_front,
-                            pareto_mask, run_mobo, run_motpe, run_nsga2,
-                            run_random, shared_init, sobol)
+from repro.core.dse import (Objective, ehvi_2d, hv_contributions_2d,
+                            hv_history, hypervolume_2d, mc_ehvi,
+                            pareto_front, pareto_mask, run_mobo, run_motpe,
+                            run_nsga2, run_random, shared_init, sobol)
 from repro.core.dse import space as sp
 from repro.core.dse.gp import GP
 from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
@@ -118,3 +119,192 @@ def test_objective_respects_tdp(objective):
     for o in shared_init(objective, 12, seed=3):
         if o.f is not None:
             assert o.npu.tdp_w() <= 700.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Sweep-based Pareto/HV kernels vs brute-force references
+# ---------------------------------------------------------------------------
+
+def _brute_mask(ys):
+    """O(n^2) reference dominance filter."""
+    ys = np.asarray(ys, dtype=float)
+    ge = np.all(ys[:, None, :] >= ys[None, :, :], axis=-1)
+    gt = np.any(ys[:, None, :] > ys[None, :, :], axis=-1)
+    return ~np.any(ge & gt, axis=0)
+
+
+def _brute_hv(ys, ref):
+    """The seed repo's quadratic staircase hypervolume (reference)."""
+    ys = np.asarray(ys, dtype=float)
+    if ys.size == 0:
+        return 0.0
+    pts = ys[(ys[:, 0] > ref[0]) & (ys[:, 1] > ref[1])]
+    if len(pts) == 0:
+        return 0.0
+    front = pts[_brute_mask(pts)]
+    front = front[np.argsort(front[:, 0])]
+    hv, prev = 0.0, ref[0]
+    for i in range(len(front)):
+        hv += max(0.0, front[i, 0] - prev) \
+            * max(0.0, np.max(front[i:, 1]) - ref[1])
+        prev = front[i, 0]
+    return hv
+
+
+def _random_fronts(rng, n_trials, max_n):
+    for trial in range(n_trials):
+        n = int(rng.integers(1, max_n))
+        if trial % 2:
+            ys = rng.integers(0, 8, size=(n, 2)).astype(float)  # many ties
+        else:
+            ys = rng.normal(size=(n, 2)) * 3.0
+        ref = ys.min(axis=0) - float(rng.uniform(0.1, 2.0))
+        yield ys, ref
+
+
+def test_pareto_mask_matches_bruteforce_property():
+    rng = np.random.default_rng(11)
+    for ys, _ in _random_fronts(rng, 120, 50):
+        assert np.array_equal(pareto_mask(ys), _brute_mask(ys)), ys
+    # d != 2 fallback path
+    for _ in range(40):
+        ys = rng.integers(0, 5, size=(int(rng.integers(1, 25)), 3)) \
+            .astype(float)
+        assert np.array_equal(pareto_mask(ys), _brute_mask(ys)), ys
+
+
+def test_hypervolume_matches_bruteforce_property():
+    rng = np.random.default_rng(12)
+    for ys, ref in _random_fronts(rng, 120, 50):
+        got, want = hypervolume_2d(ys, ref), _brute_hv(ys, ref)
+        assert got == pytest.approx(want, rel=1e-9, abs=1e-12), (ys, ref)
+
+
+def test_hv_contributions_match_leave_one_out():
+    rng = np.random.default_rng(13)
+    for ys, ref in _random_fronts(rng, 80, 40):
+        front = ys[_brute_mask(ys)]
+        got = hv_contributions_2d(front, ref)
+        want = np.array([
+            _brute_hv(front, ref) - _brute_hv(np.delete(front, i, axis=0),
+                                              ref)
+            for i in range(len(front))])
+        assert np.allclose(got, want, atol=1e-9), (front, ref)
+
+
+def test_hv_history_matches_prefix_recompute():
+    rng = np.random.default_rng(14)
+    for ys, ref in _random_fronts(rng, 60, 40):
+        got = hv_history(ys, ref)
+        want = np.array([_brute_hv(ys[:k + 1], ref) for k in range(len(ys))])
+        assert np.allclose(got, want, atol=1e-9), (ys, ref)
+        assert np.all(np.diff(got) >= -1e-12)     # HV is non-decreasing
+
+
+def test_pareto_kernels_fast_at_4096():
+    """Acceptance bound: sweep kernels run in < 50 ms at n = 4096."""
+    import time
+    rng = np.random.default_rng(15)
+    ys = rng.normal(size=(4096, 2))
+    ref = ys.min(axis=0) - 1.0
+    t0 = time.perf_counter()
+    mask = pareto_mask(ys)
+    t_mask = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    hv = hypervolume_2d(ys, ref)
+    t_hv = time.perf_counter() - t0
+    assert t_mask < 0.05 and t_hv < 0.05, (t_mask, t_hv)
+    # spot-check against the reference on the same data
+    assert np.array_equal(mask, _brute_mask(ys))
+    assert hv == pytest.approx(_brute_hv(ys, ref), rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Exact EHVI vs the quasi-MC oracle
+# ---------------------------------------------------------------------------
+
+def test_exact_ehvi_matches_qmc_oracle():
+    rng = np.random.default_rng(21)
+    for trial in range(6):
+        m = int(rng.integers(0, 9))
+        front = rng.normal(size=(m, 2)) * 2.0
+        ref = (front.min(axis=0) - 1.0) if m else np.array([-2.0, -2.0])
+        mu = rng.normal(size=(4, 2)) * 2.0
+        sd = rng.uniform(0.3, 1.5, size=(4, 2))
+        exact = ehvi_2d(front, ref, mu, sd)
+        h = rng.standard_normal((4000, 2))
+        est = mc_ehvi(front, ref, mu, sd, np.vstack([h, -h]))
+        assert np.allclose(exact, est, rtol=0.15, atol=0.02), \
+            (trial, exact, est)
+        assert np.all(exact >= 0.0)
+
+
+def test_exact_ehvi_deterministic_limit():
+    """sd -> 0 collapses EHVI to the plain hypervolume improvement."""
+    front = np.array([[1.0, 3.0], [3.0, 1.0]])
+    ref = np.array([0.0, 0.0])
+    base = hypervolume_2d(front, ref)
+    mu = np.array([[2.0, 2.0], [0.5, 0.5], [4.0, 4.0]])
+    sd = np.full_like(mu, 1e-12)
+    want = [hypervolume_2d(np.vstack([front, m[None]]), ref) - base
+            for m in mu]
+    got = ehvi_2d(front, ref, mu, sd)
+    assert np.allclose(got, want, atol=1e-6), (got, want)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized space tables + batched objective evaluation
+# ---------------------------------------------------------------------------
+
+def test_space_batch_tables_match_decode():
+    rng = np.random.default_rng(31)
+    xs = sp.random_designs(rng, 400)
+    vm = sp.valid_mask(xs)
+    tdp = sp.tdp_w_batch(xs)
+    cap = sp.capacity_gb_batch(xs)
+    for i, x in enumerate(xs):
+        try:
+            npu = sp.decode(x)
+        except sp.InvalidDesign:
+            assert not vm[i], x
+            continue
+        assert vm[i], x
+        assert tdp[i] == pytest.approx(npu.tdp_w(), rel=1e-9)
+        assert cap[i] == pytest.approx(npu.hierarchy.total_capacity_gb(),
+                                       rel=1e-12)
+
+
+def test_objective_evaluate_batch_matches_scalar(objective):
+    rng = np.random.default_rng(32)
+    xs = [tuple(sp.random_design(rng)) for _ in range(24)]
+    xs += xs[:3]                     # duplicates exercise the cache path
+    scalar = Objective(objective.dims, objective.trace, objective.phase,
+                       tdp_limit_w=objective.tdp_limit_w)
+    batch = Objective(objective.dims, objective.trace, objective.phase,
+                      tdp_limit_w=objective.tdp_limit_w)
+    want = [scalar(x) for x in xs]
+    got = batch.evaluate_batch(xs)
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        assert tuple(a.x) == tuple(b.x)
+        if b.f is None:
+            assert a.f is None
+        else:
+            assert a.f == pytest.approx(b.f, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Seeded determinism of the four searchers
+# ---------------------------------------------------------------------------
+
+def test_searchers_seeded_deterministic(objective):
+    """Same seed -> identical evaluation sequence and Pareto front."""
+    init = shared_init(objective, 6, seed=2)
+    for runner in (run_mobo, run_random, run_nsga2, run_motpe):
+        r1 = runner(objective, n_total=14, seed=2, init=list(init))
+        r2 = runner(objective, n_total=14, seed=2, init=list(init))
+        assert [o.x for o in r1.observations] == \
+            [o.x for o in r2.observations], runner.__name__
+        f1 = [o.f for o in r1.pareto()]
+        f2 = [o.f for o in r2.pareto()]
+        assert f1 == f2, runner.__name__

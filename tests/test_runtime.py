@@ -58,6 +58,23 @@ def test_training_loss_decreases():
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
 
 
+needs_codecs = pytest.mark.skipif(
+    not ckpt.codecs_available(),
+    reason="optional checkpoint codecs (msgpack/zstandard) not installed")
+
+
+def test_checkpoint_codecs_are_lazy(tmp_path):
+    """`import repro.runtime` works without msgpack/zstandard; the clear
+    ImportError surfaces only when checkpointing is actually used."""
+    if ckpt.codecs_available():
+        pytest.skip("optional codecs installed; error path unreachable")
+    with pytest.raises(ImportError, match="msgpack"):
+        ckpt.save(str(tmp_path), 0, {"x": jnp.zeros(2)})
+    with pytest.raises(ImportError, match="zstandard|msgpack"):
+        ckpt.restore(str(tmp_path), 0, {"x": jnp.zeros(2)})
+
+
+@needs_codecs
 def test_checkpoint_roundtrip(tmp_path):
     cfg = get_arch("qwen3-4b").reduced()
     mf = model_fns(cfg)
@@ -73,6 +90,7 @@ def test_checkpoint_roundtrip(tmp_path):
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
+@needs_codecs
 def test_checkpoint_retention(tmp_path):
     tree = {"x": jnp.arange(4)}
     for s in range(5):
@@ -153,6 +171,7 @@ def test_plan_mesh_factorizations():
         plan_mesh(100, model_parallel=16)
 
 
+@needs_codecs
 def test_elastic_rescale_roundtrip(tmp_path):
     """checkpoint -> restore under a (trivially) different mesh keeps
     values identical and training resumable."""

@@ -9,20 +9,35 @@ From the repo root::
   PYTHONPATH=src python -m benchmarks.run                 # everything
   PYTHONPATH=src python -m benchmarks.run --only t4,t5    # filter by name
   PYTHONPATH=src python -m benchmarks.run --smoke         # fast sanity pass
+  PYTHONPATH=src python -m benchmarks.run --check         # perf regression
 
 ``--smoke`` asks each module that supports it (currently the DSE
-convergence bench) to shrink its budget — fewer seeds / evaluations — so
-the whole suite finishes quickly in CI.  Modules that take a ``smoke``
-keyword receive it; the rest run at full settings.
+convergence and disaggregation benches) to shrink its budget — fewer
+seeds / evaluations — so the whole suite finishes quickly in CI.
+Modules that take a ``smoke`` keyword receive it; the rest run at full
+settings.
 
 The DSE bench additionally writes machine-readable timings to
 ``BENCH_dse.json`` (override the path with the ``BENCH_DSE_JSON`` env
 var) so perf changes can be tracked across PRs.
+
+``--check`` is the perf-regression gate: it reruns the DSE bench in
+smoke mode and compares the fresh per-method timings against the
+committed baseline (``benchmarks/BENCH_dse.json``), failing (exit 1)
+when any method is slower than ``--tolerance`` times its baseline — so
+future PRs can't silently re-quadratize the DSE hot path.  Refresh the
+baseline after an intentional perf change with::
+
+  BENCH_DSE_JSON=benchmarks/BENCH_dse.json \\
+      PYTHONPATH=src python -m benchmarks.run --only fig6 --smoke
 """
 
 import argparse
 import inspect
+import json
+import os
 import sys
+import tempfile
 import traceback
 
 MODULES = [
@@ -39,6 +54,86 @@ MODULES = [
     ("roofline", "benchmarks.bench_roofline"),
 ]
 
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_dse.json")
+
+
+def compare_timings(base: dict, fresh: dict, tolerance: float) -> list:
+    """Per-method regression verdicts: (method, fresh_us, limit_us, ok).
+
+    A method regresses when its fresh ``us_per_run`` exceeds
+    ``tolerance x`` its baseline; methods missing from the fresh run
+    count as regressed (limit < 0 marks them)."""
+    out = []
+    for method, b in base.get("methods", {}).items():
+        g = fresh.get("methods", {}).get(method)
+        limit = b["us_per_run"] * tolerance
+        if g is None:
+            out.append((method, float("nan"), -1.0, False))
+        else:
+            out.append((method, g["us_per_run"], limit,
+                        g["us_per_run"] <= limit))
+    return out
+
+
+def check_perf(baseline_path: str, tolerance: float) -> int:
+    """Fresh --smoke DSE timings vs the committed baseline.
+
+    Returns the process exit code: 0 when every method is within
+    ``tolerance x`` of its baseline ``us_per_run``, 1 on regression,
+    2 when the baseline is missing/unreadable.
+    """
+    try:
+        with open(baseline_path) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"cannot read baseline {baseline_path}: {e}", file=sys.stderr)
+        return 2
+    methods = base.get("methods")
+    if not methods or any(not isinstance(b.get("us_per_run"), (int, float))
+                          for b in methods.values()):
+        # schema-drifted / truncated baselines must not pass vacuously
+        # (and must fail before the expensive fresh bench run)
+        print(f"baseline {baseline_path} has no usable 'methods' timings",
+              file=sys.stderr)
+        return 2
+    fd, fresh_path = tempfile.mkstemp(suffix="_bench_dse.json")
+    os.close(fd)
+    prev_json_path = os.environ.get("BENCH_DSE_JSON")
+    os.environ["BENCH_DSE_JSON"] = fresh_path
+    try:
+        from benchmarks import bench_dse
+        for line in bench_dse.run(smoke=True):
+            print(line)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+    finally:
+        if prev_json_path is None:
+            os.environ.pop("BENCH_DSE_JSON", None)
+        else:
+            os.environ["BENCH_DSE_JSON"] = prev_json_path
+        try:
+            os.unlink(fresh_path)
+        except OSError:
+            pass
+    failures = []
+    for method, got_us, limit_us, ok in compare_timings(base, fresh,
+                                                        tolerance):
+        if limit_us < 0:
+            failures.append(f"{method}: missing from fresh run")
+            continue
+        print(f"check_{method},{got_us:.1f},"
+              f"limit={limit_us:.1f} {'ok' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"{method}: {got_us/1e6:.2f}s/run > {tolerance:g}x "
+                f"baseline {limit_us/tolerance/1e6:.2f}s/run")
+    if failures:
+        print("PERF REGRESSION:\n  " + "\n  ".join(failures), file=sys.stderr)
+        return 1
+    print(f"perf check passed ({len(base.get('methods', {}))} methods "
+          f"within {tolerance:g}x of baseline)")
+    return 0
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -46,7 +141,21 @@ def main() -> None:
                     help="comma-separated substring filters")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced budgets for a fast end-to-end pass")
+    ap.add_argument("--check", action="store_true",
+                    help="compare fresh --smoke DSE timings against the "
+                         "committed baseline; exit 1 on regression")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline JSON for --check "
+                         "(default: benchmarks/BENCH_dse.json)")
+    ap.add_argument("--tolerance", type=float, default=5.0,
+                    help="--check failure threshold, as a factor over the "
+                         "baseline us_per_run (default 5.0: catches "
+                         "order-of-magnitude regressions, tolerates "
+                         "machine noise)")
     args = ap.parse_args()
+    if args.check:
+        print("name,us_per_call,derived")
+        raise SystemExit(check_perf(args.baseline, args.tolerance))
     filters = args.only.split(",") if args.only else None
 
     print("name,us_per_call,derived")

@@ -1,5 +1,7 @@
 """Full MemExplorer exploration: the four DSE methods on one workload
 with a shared Sobol init — the paper's Fig. 6 experiment, interactive.
+(For the disaggregated prefill/decode *pair* search on `PairedSpace`,
+see examples/explore_disagg.py.)
 
     PYTHONPATH=src python examples/explore_memory.py [--evals 60]
 """

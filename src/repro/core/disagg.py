@@ -9,6 +9,12 @@ LLMCompass).  End-to-end metrics:
   TPS   = decode tokens/s (per request and aggregate)
   token/J across both devices + transfer energy
 
+`evaluate_disaggregated` scores one hand-picked pair;
+`evaluate_disagg_batch` scores whole DSE candidate batches by
+deduplicating the prefill/decode halves and routing them through
+`perfmodel.evaluate_batch` — the paired-search hot path behind
+`dse.runner.DisaggObjective`.
+
 Extreme heterogeneity (Section 5.5) further splits the pipeline:
   * prefill by layer group — attention-heavy vs FFN-heavy layers may use
     different configurations (Fig. 9 left), evaluated per-group;
@@ -22,7 +28,8 @@ import dataclasses
 from typing import Optional
 
 from .npu import NPUConfig
-from .perfmodel import (PhaseResult, evaluate_decode, evaluate_prefill)
+from .perfmodel import (InfeasibleConfig, PhaseResult, evaluate_batch,
+                        evaluate_decode, evaluate_prefill)
 from .workload import ModelDims, Phase, Trace, layer_traffic
 
 # NVLink-class chip-to-chip interconnect (LLMCompass-style constants)
@@ -51,12 +58,16 @@ def kv_transfer_seconds(dims: ModelDims, trace: Trace, batch: int,
     return t, e
 
 
-def evaluate_disaggregated(prefill_npu: NPUConfig, decode_npu: NPUConfig,
-                           dims: ModelDims, trace: Trace) -> DisaggResult:
-    """End-to-end PD-disaggregated evaluation (paper Fig. 8)."""
-    pre = evaluate_prefill(prefill_npu, dims, trace)
-    dec = evaluate_decode(decode_npu, dims, trace)
-    t_kv, e_kv = kv_transfer_seconds(dims, trace, 1, prefill_npu.quant)
+def _combine_phase_results(pre: PhaseResult, dec: PhaseResult,
+                           dims: ModelDims, trace: Trace,
+                           prefill_quant) -> DisaggResult:
+    """Fold one prefill + one decode PhaseResult into end-to-end metrics.
+
+    Shared by the scalar and batched evaluators so their numbers agree
+    exactly.  The KV transfer is quantified at the prefill device's KV
+    format (the pair constraint in dse.space.PairedSpace guarantees the
+    decode device consumes the same format)."""
+    t_kv, e_kv = kv_transfer_seconds(dims, trace, 1, prefill_quant)
     ttft = pre.latency_s / pre.batch + t_kv   # per-request TTFT
     # steady state: both devices busy; energy per generated token counts the
     # amortized prefill energy per request's gen_tokens plus decode energy.
@@ -73,6 +84,51 @@ def evaluate_disaggregated(prefill_npu: NPUConfig, decode_npu: NPUConfig,
         total_power_w=power,
         tokens_per_joule=1.0 / e_per_gen_token if e_per_gen_token else 0.0,
         prefill=pre, decode=dec)
+
+
+def evaluate_disaggregated(prefill_npu: NPUConfig, decode_npu: NPUConfig,
+                           dims: ModelDims, trace: Trace) -> DisaggResult:
+    """End-to-end PD-disaggregated evaluation (paper Fig. 8)."""
+    pre = evaluate_prefill(prefill_npu, dims, trace)
+    dec = evaluate_decode(decode_npu, dims, trace)
+    return _combine_phase_results(pre, dec, dims, trace, prefill_npu.quant)
+
+
+def evaluate_disagg_batch(pairs: list, dims: ModelDims, trace: Trace,
+                          pre_cache: Optional[dict] = None,
+                          dec_cache: Optional[dict] = None) -> list:
+    """Batched `evaluate_disaggregated` over (prefill, decode) NPU pairs.
+
+    Built on `perfmodel.evaluate_batch`: each side's unique
+    configurations are evaluated once per call, then the per-pair
+    combination is pure arithmetic — the DSE's paired candidate pools
+    share halves heavily (crossover children, TPE proposals), so the
+    per-phase evaluation count is the number of distinct halves, not
+    the number of pairs.  Returns one DisaggResult per pair, with None
+    for pairs infeasible in either phase instead of raising.
+
+    Configs are deduplicated by `NPUConfig.name`; DSE-decoded designs
+    embed their genes in the name so this is exact for search batches
+    (hand-built configs must use distinct names, as the Table 6 ones
+    do).  Passing `pre_cache` / `dec_cache` dicts memoizes per-phase
+    results across calls — `dse.runner.DisaggObjective` threads its
+    half caches through every generation.
+    """
+    pre_cache = {} if pre_cache is None else pre_cache
+    dec_cache = {} if dec_cache is None else dec_cache
+    pre_miss = {p.name: p for p, _ in pairs if p.name not in pre_cache}
+    evaluate_batch(list(pre_miss.values()), dims, trace, Phase.PREFILL,
+                   keys=list(pre_miss), cache=pre_cache)
+    dec_miss = {d.name: d for _, d in pairs if d.name not in dec_cache}
+    evaluate_batch(list(dec_miss.values()), dims, trace, Phase.DECODE,
+                   keys=list(dec_miss), cache=dec_cache)
+    out = []
+    for p, d in pairs:
+        pre, dec = pre_cache[p.name], dec_cache[d.name]
+        out.append(None if pre is None or dec is None
+                   else _combine_phase_results(pre, dec, dims, trace,
+                                               p.quant))
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -145,7 +201,10 @@ def best_per_phase(npus: list[NPUConfig], dims: ModelDims, trace: Trace,
             r = (evaluate_prefill(npu, dims, trace)
                  if phase is Phase.PREFILL
                  else evaluate_decode(npu, dims, trace))
-        except Exception:
+        except (InfeasibleConfig, ValueError):
+            # infeasible device for this phase; non-ValueError bugs
+            # (AttributeError, TypeError, ...) propagate instead of
+            # being silently read as "device skipped"
             continue
         if best is None or r.tokens_per_joule > best[1].tokens_per_joule:
             best = (npu, r)

@@ -1,11 +1,15 @@
 """Design-space exploration (paper Section 4.4).
 
 space   Table 2 encoding <-> NPUConfig (+ vectorized validity/TDP tables)
+        and the DesignSpace protocol: SingleDeviceSpace (17 genes) and
+        PairedSpace (prefill/decode pair, 34 genes, KV-quant constraint)
 sobol   quasi-random initialization (N_init = 20)
 gp      GP surrogates (JAX, MLE-fit RBF-ARD, bucketed jit cache)
 pareto  dominance / front / exact 2-D hypervolume (Eq. 7), sweep-based
 ehvi    exact closed-form 2-D EHVI (Eq. 8) + quasi-MC oracle
-runner  GP+EHVI MOBO + NSGA-II / MO-TPE / Random baselines (batched)
+runner  GP+EHVI MOBO + NSGA-II / MO-TPE / Random baselines (batched),
+        generic over any DesignSpace; Objective (single device) and
+        DisaggObjective (disaggregated pairs, Sections 5.3/5.5)
 """
 
 from . import space
@@ -13,6 +17,8 @@ from .ehvi import ehvi_2d, mc_ehvi
 from .pareto import (IncrementalHV2D, dominates, hv_contributions_2d,
                      hv_history, hypervolume_2d, pareto_front, pareto_mask,
                      reference_point)
-from .runner import (METHODS, DSEResult, Objective, Observation,
-                     run_mobo, run_motpe, run_nsga2, run_random, shared_init)
+from .runner import (METHODS, DisaggObjective, DSEResult, Objective,
+                     Observation, run_mobo, run_motpe, run_nsga2, run_random,
+                     shared_init)
 from .sobol import sobol
+from .space import DesignSpace, PairedSpace, SingleDeviceSpace

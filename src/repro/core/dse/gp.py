@@ -111,6 +111,20 @@ class GP:
     alpha: np.ndarray
 
     @classmethod
+    def fit_design(cls, space, designs, y: np.ndarray) -> "GP":
+        """Fit on integer design vectors, normalized via their
+        `DesignSpace` (each gene mapped to bin centers in [0,1]).
+
+        The searcher never normalizes by hand, so the GP works for any
+        space dimensionality — 17 genes for the single-device space, 34
+        for the paired prefill/decode space (the jit bucket cache keys
+        on (padded n, d), so each space compiles its own small set of
+        programs).  Query points still go through
+        `space.normalize_batch` before `predict`.
+        """
+        return cls.fit(space.normalize_batch(designs), y)
+
+    @classmethod
     def fit(cls, x: np.ndarray, y: np.ndarray) -> "GP":
         x = np.asarray(x, dtype=np.float64)
         y = np.asarray(y, dtype=np.float64)

@@ -1,18 +1,33 @@
-"""DSE orchestration: shared objective wrapper + the four search methods
-(GP+EHVI MOBO, NSGA-II, MO-TPE, Random), paper Section 4.4 / Figure 6.
+"""DSE orchestration: objective wrappers + the four search methods
+(GP+EHVI MOBO, NSGA-II, MO-TPE, Random), paper Section 4.4 / Figure 6,
+generic over a `space.DesignSpace`.
 
-All methods maximize f(x) = (throughput_tps, -avg_power_w) subject to a
-TDP constraint, share the same Sobol/random initialization, and report
-their evaluation history so hypervolume-convergence curves can be drawn
-against a common reference point.
+Two objective wrappers share one informal protocol (`.space`,
+`.tdp_limit_w`, `__call__`, `.evaluate_batch`):
+
+* `Objective` — single-device search on `SingleDeviceSpace`:
+  f(x) = (throughput_tps, -avg_power_w) under a device TDP cap
+  (the paper's Fig. 6 experiment).
+* `DisaggObjective` — prefill/decode pair search on `PairedSpace`:
+  f(x) = (aggregate tokens/joule, -total system power) under a combined
+  pair TDP cap and a TTFT feasibility cap that includes the KV-transfer
+  time between the devices (the paper's Fig. 8 co-design, Section 5.3).
+
+All methods maximize a 2-objective f, share the same Sobol/random
+initialization, and report their evaluation history so hypervolume-
+convergence curves can be drawn against a common reference point.  The
+searchers read every space-specific operation (sampling, Sobol mapping,
+GP normalization, validity/TDP prefilters, constraint repair) off
+`objective.space`, so they run unchanged on any `DesignSpace`.
 
 Hot-path structure (vectorized engine):
 
 * Candidate selection stays sequential per method (so seeded RNG
   trajectories are reproducible), but objective evaluation is batched:
-  `Objective.evaluate_batch` routes whole design lists through the
-  vectorized `space.valid_mask` / `space.tdp_w_batch` prefilters and
-  `perfmodel.evaluate_batch`'s memoized-traffic fast path.
+  `evaluate_batch` routes whole design lists through the vectorized
+  `space.valid_mask` / `space.tdp_w_batch` prefilters and the perfmodel
+  batch fast path (`perfmodel.evaluate_batch` for single devices,
+  `disagg.evaluate_disagg_batch` with per-half memoization for pairs).
 * MOBO scores its candidate pool with the exact closed-form 2-D EHVI
   (`ehvi.ehvi_2d`) instead of a quasi-MC estimate, and filters the pool
   with the per-gene TDP/validity tables instead of decoding every draw.
@@ -27,7 +42,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from ..npu import NPUConfig
+from ..disagg import evaluate_disagg_batch
 from ..perfmodel import InfeasibleConfig, evaluate, evaluate_batch
 from ..workload import ModelDims, Phase, Trace
 from . import space as sp
@@ -39,8 +54,9 @@ from .sobol import sobol
 @dataclasses.dataclass
 class Observation:
     x: list
-    f: Optional[tuple]          # (tps, -power) or None if infeasible
-    npu: Optional[NPUConfig]
+    f: Optional[tuple]          # objective tuple or None if infeasible
+    npu: Optional[object]       # NPUConfig, or (prefill, decode) pair
+    result: Optional[object] = None   # full evaluation record (DisaggResult)
 
 
 @dataclasses.dataclass
@@ -71,11 +87,25 @@ class DSEResult:
         return [o for o, m in zip(obs, mask) if m]
 
 
+def _dedup_pending(cache: dict, keys: list) -> list:
+    """Keys not yet cached, first occurrence wins (shared by both
+    objective wrappers' batch paths so their dedup cannot diverge)."""
+    todo = []
+    pending = set()
+    for k in keys:
+        if k not in cache and k not in pending:
+            pending.add(k)
+            todo.append(k)
+    return todo
+
+
 class Objective:
     """Evaluate designs on one (model, trace, phase) under a TDP cap."""
 
     def __init__(self, dims: ModelDims, trace: Trace, phase: Phase,
-                 tdp_limit_w: float = 700.0, batch: Optional[int] = None):
+                 tdp_limit_w: float = 700.0, batch: Optional[int] = None,
+                 space: Optional[sp.DesignSpace] = None):
+        self.space = space if space is not None else sp.SingleDeviceSpace()
         self.dims, self.trace, self.phase = dims, trace, phase
         self.tdp_limit_w = tdp_limit_w
         self.batch = batch
@@ -89,11 +119,12 @@ class Objective:
         self.n_evals += 1
         obs = Observation(x=list(key), f=None, npu=None)
         try:
-            npu = sp.decode(key)
+            npu = self.space.decode(key)
             obs.npu = npu
             if npu.tdp_w() <= self.tdp_limit_w:
                 r = evaluate(npu, self.dims, self.trace, self.phase,
                              batch=self.batch)
+                obs.result = r
                 obs.f = (r.throughput_tps, -r.avg_power_w)
         except (sp.InvalidDesign, InfeasibleConfig, ValueError):
             pass
@@ -105,14 +136,9 @@ class Objective:
         `self(x)`, same cache), using the vectorized validity prefilter
         and the perfmodel batch fast path."""
         keys = [tuple(int(v) for v in x) for x in xs]
-        todo = []
-        pending = set()
-        for k in keys:
-            if k not in self.cache and k not in pending:
-                pending.add(k)
-                todo.append(k)
+        todo = _dedup_pending(self.cache, keys)
         if todo:
-            valid = sp.valid_mask(np.asarray(todo, dtype=np.int64))
+            valid = self.space.valid_mask(np.asarray(todo, dtype=np.int64))
             run_keys, run_npus = [], []
             for k, ok in zip(todo, valid):
                 self.n_evals += 1
@@ -121,7 +147,7 @@ class Objective:
                 if not ok:
                     continue
                 try:
-                    obs.npu = sp.decode(k)
+                    obs.npu = self.space.decode(k)
                 except sp.InvalidDesign:   # defensive: mask mirrors decode
                     continue
                 if obs.npu.tdp_w() <= self.tdp_limit_w:
@@ -131,18 +157,105 @@ class Objective:
                                      self.phase, batch=self.batch)
             for k, r in zip(run_keys, results):
                 if r is not None:
+                    self.cache[k].result = r
                     self.cache[k].f = (r.throughput_tps, -r.avg_power_w)
         return [self.cache[k] for k in keys]
 
 
-def shared_init(objective: Objective, n_init: int, seed: int) -> list:
-    """Sobol initialization (paper: N_init = 20), skipping duplicates."""
+class DisaggObjective:
+    """Evaluate prefill/decode pairs end-to-end (paper Fig. 8) for the
+    paired DSE on `PairedSpace`.
+
+    f(x) = (aggregate tokens/joule across both devices incl. KV-transfer
+    energy, -total system power), subject to
+
+      * a combined pair TDP cap (`tdp_limit_w`, default two 700 W
+        sockets), enforced pre-evaluation via `space.tdp_w_batch`, and
+      * a TTFT feasibility cap (`ttft_cap_s`): per-request TTFT =
+        prefill latency + `disagg.kv_transfer_seconds` over the NVLink-
+        class interconnect; pairs whose hand-off pushes TTFT past the
+        cap are infeasible regardless of their steady-state efficiency.
+        The 90 s default is an agentic-trace SLO roughly 4x the hand-
+        designed Table 6 pairs' TTFT on OSWorld — loose enough that the
+        searchers see a feasible gradient early, tight enough to reject
+        the capacity-starved region (TTFT in the 175-1000 s range).
+
+    Batched evaluation dedups the two 17-gene halves across pairs and
+    memoizes their per-phase results across generations (NSGA-II
+    children and TPE proposals reuse halves constantly), so the hot
+    path stays `perfmodel.evaluate_batch` on the unique-half miss set.
+    """
+
+    def __init__(self, dims: ModelDims, trace: Trace,
+                 tdp_limit_w: float = 1400.0,
+                 ttft_cap_s: Optional[float] = 90.0,
+                 space: Optional[sp.PairedSpace] = None):
+        self.space = space if space is not None else sp.PairedSpace()
+        self.dims, self.trace = dims, trace
+        self.tdp_limit_w = tdp_limit_w
+        self.ttft_cap_s = ttft_cap_s
+        self.cache: dict = {}
+        self.n_evals = 0
+        self._pre_results: dict = {}    # prefill-half name -> PhaseResult|None
+        self._dec_results: dict = {}    # decode-half name -> PhaseResult|None
+
+    def __call__(self, x) -> Observation:
+        key = tuple(int(v) for v in x)
+        if key in self.cache:
+            return self.cache[key]
+        return self.evaluate_batch([key])[0]
+
+    def evaluate_batch(self, xs) -> list:
+        keys = [tuple(int(v) for v in x) for x in xs]
+        todo = _dedup_pending(self.cache, keys)
+        if todo:
+            valid = self.space.valid_mask(np.asarray(todo, dtype=np.int64))
+            run_keys, run_pairs = [], []
+            for k, ok in zip(todo, valid):
+                self.n_evals += 1
+                obs = Observation(x=list(k), f=None, npu=None)
+                self.cache[k] = obs
+                if not ok:
+                    continue
+                try:
+                    pair = self.space.decode(k)
+                except sp.InvalidDesign:   # defensive: mask mirrors decode
+                    continue
+                obs.npu = pair
+                if sum(n.tdp_w() for n in pair) <= self.tdp_limit_w:
+                    run_keys.append(k)
+                    run_pairs.append(pair)
+            results = evaluate_disagg_batch(
+                run_pairs, self.dims, self.trace,
+                pre_cache=self._pre_results, dec_cache=self._dec_results)
+            for k, r in zip(run_keys, results):
+                if r is None:
+                    continue
+                obs = self.cache[k]
+                obs.result = r
+                if self.ttft_cap_s is None or r.ttft_s <= self.ttft_cap_s:
+                    obs.f = (r.tokens_per_joule, -r.total_power_w)
+        return [self.cache[k] for k in keys]
+
+
+def shared_init(objective, n_init: int, seed: int) -> list:
+    """Sobol initialization (paper: N_init = 20), skipping duplicates.
+
+    Spaces with `init_filter_valid` (the paired space, whose raw-uniform
+    validity is ~10-20%) additionally drop Sobol points that fail
+    `valid_mask`, so the init budget is spent on decodable designs; the
+    shortfall is topped up by the space's (rejection-) sampler."""
+    space = objective.space
     xs: list = []
     seen = set()
-    u = sobol(4 * n_init, sp.N_DIMS, skip=seed * 101)
+    u = sobol(4 * n_init, space.n_dims, skip=seed * 101)
+    cand = [tuple(space.from_unit(ui)) for ui in u]
+    if space.init_filter_valid and cand:
+        keep = space.valid_mask(np.asarray(cand, dtype=np.int64))
+        cand = [x for x, k in zip(cand, keep) if k]
     i = 0
-    while len(xs) < n_init and i < len(u):
-        x = tuple(sp.from_unit(u[i]))
+    while len(xs) < n_init and i < len(cand):
+        x = cand[i]
         i += 1
         if x in seen:
             continue
@@ -150,7 +263,7 @@ def shared_init(objective: Objective, n_init: int, seed: int) -> list:
         xs.append(x)
     rng = np.random.default_rng(seed)
     while len(xs) < n_init:
-        x = tuple(sp.random_design(rng))
+        x = tuple(space.random_design(rng))
         if x in seen:
             continue
         seen.add(x)
@@ -162,14 +275,15 @@ def shared_init(objective: Objective, n_init: int, seed: int) -> list:
 # Random search baseline
 # ---------------------------------------------------------------------------
 
-def run_random(objective: Objective, n_total: int = 100, seed: int = 0,
+def run_random(objective, n_total: int = 100, seed: int = 0,
                init: Optional[list] = None) -> DSEResult:
+    space = objective.space
     rng = np.random.default_rng(seed + 7)
     obs = list(init) if init else []
     seen = {tuple(o.x) for o in obs}
     xs = []
     while len(obs) + len(xs) < n_total:
-        x = tuple(sp.random_design(rng))
+        x = tuple(space.random_design(rng))
         if x in seen:
             continue
         seen.add(x)
@@ -182,34 +296,36 @@ def run_random(objective: Objective, n_total: int = 100, seed: int = 0,
 # GP + EHVI (ours)
 # ---------------------------------------------------------------------------
 
-def run_mobo(objective: Objective, n_total: int = 100, seed: int = 0,
+def run_mobo(objective, n_total: int = 100, seed: int = 0,
              init: Optional[list] = None, n_init: int = 20,
              pool_size: int = 256) -> DSEResult:
     """Multi-Objective Bayesian Optimization with GP surrogates + exact
     closed-form 2-D EHVI (Eq. 8) over a table-filtered candidate pool."""
     from .gp import GP
+    space = objective.space
     rng = np.random.default_rng(seed + 13)
     obs = list(init) if init else shared_init(objective, n_init, seed)
     seen = {tuple(o.x) for o in obs}
     while len(obs) < n_total:
         feas = [o for o in obs if o.f is not None]
         if len(feas) < 4:
-            x = tuple(sp.random_design(rng))
+            x = tuple(space.random_design(rng))
             if x in seen:
                 continue
             seen.add(x)
             obs.append(objective(x))
             continue
-        xs = sp.normalize_batch([o.x for o in feas])
         fs = np.array([o.f for o in feas], dtype=float)
-        gps = [GP.fit(xs, fs[:, m]) for m in range(2)]
+        gps = [GP.fit_design(space, [o.x for o in feas], fs[:, m])
+               for m in range(2)]
         front = pareto_front(fs)
         ref = fs.min(axis=0) - 0.05 * (fs.max(axis=0) - fs.min(axis=0) + 1e-9)
         # candidate pool: one vectorized draw, validity/TDP filtered via
         # the per-gene tables (no NPUConfig construction per draw)
-        cand = sp.random_designs(rng, pool_size * 10)
-        ok = sp.valid_mask(cand) & (sp.tdp_w_batch(cand)
-                                    <= objective.tdp_limit_w)
+        cand = space.random_designs(rng, pool_size * 10)
+        ok = space.tdp_w_batch(cand) <= objective.tdp_limit_w
+        if not space.samples_valid:     # rejection samplers pre-validate
+            ok &= space.valid_mask(cand)
         pool = []
         pool_seen = set()
         for x in map(tuple, cand[ok].tolist()):
@@ -221,7 +337,7 @@ def run_mobo(objective: Objective, n_total: int = 100, seed: int = 0,
                 break
         if not pool:
             break
-        xq = sp.normalize_batch(pool)
+        xq = space.normalize_batch(pool)
         mus, sds = zip(*(g.predict(xq) for g in gps))
         mu = np.stack(mus, axis=1)
         sd = np.stack(sds, axis=1)
@@ -277,9 +393,10 @@ def _crowding(fs: np.ndarray, front: list) -> dict:
     return d
 
 
-def run_nsga2(objective: Objective, n_total: int = 100, seed: int = 0,
+def run_nsga2(objective, n_total: int = 100, seed: int = 0,
               init: Optional[list] = None, pop_size: int = 20,
               p_cross: float = 0.9) -> DSEResult:
+    space = objective.space
     rng = np.random.default_rng(seed + 29)
     obs = list(init) if init else []
     seen = {tuple(o.x) for o in obs}
@@ -291,7 +408,7 @@ def run_nsga2(objective: Objective, n_total: int = 100, seed: int = 0,
 
     pop = list(obs[-pop_size:])
     while len(pop) < pop_size and len(obs) < n_total:
-        x = tuple(sp.random_design(rng))
+        x = tuple(space.random_design(rng))
         if x in seen:
             continue
         seen.add(x)
@@ -317,26 +434,37 @@ def run_nsga2(objective: Objective, n_total: int = 100, seed: int = 0,
             return list(pop[b].x)
 
         children = []
+        tries = 0
         while len(children) < pop_size and len(obs) + len(children) < n_total:
+            tries += 1
+            if tries > 64 * pop_size:
+                break               # near-saturation: stop breeding
             p1, p2 = tournament(), tournament()
             child = list(p1)
             if rng.random() < p_cross:
-                for d in range(sp.N_DIMS):
+                for d in range(space.n_dims):
                     if rng.random() < 0.5:
                         child[d] = p2[d]
-            for d in range(sp.N_DIMS):  # mutation
-                if rng.random() < 1.0 / sp.N_DIMS:
-                    child[d] = int(rng.integers(sp.CARDINALITIES[d]))
-            t = tuple(child)
+            for d in range(space.n_dims):  # mutation
+                if rng.random() < 1.0 / space.n_dims:
+                    child[d] = int(rng.integers(space.cardinalities[d]))
+            t = tuple(space.repair(child))
             if t in seen:
                 continue
             seen.add(t)
             children.append(t)
         if not children:
-            # saturated: random restarts
-            x = tuple(sp.random_design(rng))
-            if x in seen:
-                continue
+            # saturated: bounded random-restart fallback (mirrors
+            # run_motpe; the seed implementation's `continue` could spin
+            # forever once every restart draw was already in `seen`).
+            x = None
+            for _ in range(64 * pop_size):
+                c = tuple(space.random_design(rng))
+                if c not in seen:
+                    x = c
+                    break
+            if x is None:
+                break               # retry budget exhausted: stop early
             seen.add(x)
             obs.append(objective(x))
             continue
@@ -363,19 +491,20 @@ def run_nsga2(objective: Objective, n_total: int = 100, seed: int = 0,
 # MO-TPE baseline
 # ---------------------------------------------------------------------------
 
-def run_motpe(objective: Objective, n_total: int = 100, seed: int = 0,
+def run_motpe(objective, n_total: int = 100, seed: int = 0,
               init: Optional[list] = None, gamma: float = 0.3,
               n_candidates: int = 24) -> DSEResult:
     """Multi-objective TPE: split observations into good (near-Pareto) /
     bad by hypervolume-contribution ranking; per-dimension categorical
     densities l(x), g(x); propose argmax l/g."""
+    space = objective.space
     rng = np.random.default_rng(seed + 43)
     obs = list(init) if init else []
     seen = {tuple(o.x) for o in obs}
     while len(obs) < n_total:
         feas = [o for o in obs if o.f is not None]
         if len(feas) < 6:
-            x = tuple(sp.random_design(rng))
+            x = tuple(space.random_design(rng))
             if x in seen:
                 continue
             seen.add(x)
@@ -393,8 +522,8 @@ def run_motpe(objective: Objective, n_total: int = 100, seed: int = 0,
 
         def density(group: list) -> list:
             ps = []
-            for d in range(sp.N_DIMS):
-                card = sp.CARDINALITIES[d]
+            for d in range(space.n_dims):
+                card = space.cardinalities[d]
                 cnt = np.ones(card)
                 for o in group:
                     cnt[o.x[d]] += 1.0
@@ -404,12 +533,13 @@ def run_motpe(objective: Objective, n_total: int = 100, seed: int = 0,
         l_ps, g_ps = density(good), density(bad)
         best_x, best_ratio = None, -np.inf
         for _ in range(n_candidates):
-            x = tuple(int(rng.choice(sp.CARDINALITIES[d], p=l_ps[d]))
-                      for d in range(sp.N_DIMS))
+            x = tuple(space.repair(
+                [int(rng.choice(space.cardinalities[d], p=l_ps[d]))
+                 for d in range(space.n_dims)]))
             if x in seen:
                 continue
             ratio = sum(np.log(l_ps[d][x[d]]) - np.log(g_ps[d][x[d]])
-                        for d in range(sp.N_DIMS))
+                        for d in range(space.n_dims))
             if ratio > best_ratio:
                 best_ratio, best_x = ratio, x
         if best_x is None:
@@ -417,7 +547,7 @@ def run_motpe(objective: Objective, n_total: int = 100, seed: int = 0,
             # Bounded fallback to a random unseen design (the seed
             # implementation's `continue` could spin forever here).
             for _ in range(max(1, n_candidates) * 8):
-                x = tuple(sp.random_design(rng))
+                x = tuple(space.random_design(rng))
                 if x not in seen:
                     best_x = x
                     break

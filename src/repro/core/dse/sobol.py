@@ -37,6 +37,20 @@ _JOE_KUO = [
     (7, 8, [1, 3, 7, 3, 15, 63, 81]),
     (7, 14, [1, 1, 7, 5, 47, 11, 55]),
     (7, 19, [1, 3, 5, 5, 41, 43, 69]),
+    # Rows 25-34 (distinct degree-7 primitive polynomials, odd m_i < 2^i)
+    # so the 34-dim paired prefill/decode space gets 34 *distinct*
+    # dimensions — recycling rows would make decode-half init coordinates
+    # exact copies of prefill-half ones.
+    (7, 21, [1, 3, 1, 7, 21, 51, 67]),
+    (7, 22, [1, 1, 3, 9, 29, 21, 113]),
+    (7, 25, [1, 3, 5, 15, 17, 41, 89]),
+    (7, 26, [1, 1, 7, 13, 3, 59, 25]),
+    (7, 28, [1, 3, 3, 5, 23, 37, 103]),
+    (7, 31, [1, 1, 1, 11, 19, 61, 47]),
+    (7, 32, [1, 3, 7, 9, 31, 29, 99]),
+    (7, 37, [1, 1, 5, 3, 9, 49, 61]),
+    (7, 41, [1, 3, 3, 13, 11, 17, 119]),
+    (7, 42, [1, 1, 7, 7, 13, 55, 21]),
 ]
 
 _BITS = 30

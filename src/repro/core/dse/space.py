@@ -7,8 +7,20 @@ technology bandwidth class: HBM -> HBF -> GDDR -> LPDDR (matching the
 paper's Table 6 configurations).
 
 The encoded space (~7 x 10^8 raw combinations; ~10^6 after validity
-filtering) is searched by the optimizers in mobo.py / nsga2.py /
-motpe.py / random_search.py.
+filtering) is searched by the optimizers in runner.py, which are generic
+over a `DesignSpace`:
+
+  SingleDeviceSpace   the 17-gene Table 2 space (wraps this module's
+                      functions; the paper's Fig. 6 experiment)
+  PairedSpace         two concatenated 17-gene halves — a prefill device
+                      and a decode device co-searched as one 34-gene
+                      point (paper Sections 5.3/5.5, Fig. 8), with the
+                      KV-cache-quant compatibility constraint between
+                      the halves (transferred KV must decode on the
+                      other device)
+
+The module-level functions remain the single-device fast path; the
+classes delegate to them so existing seeded trajectories are unchanged.
 """
 
 from __future__ import annotations
@@ -237,3 +249,216 @@ def tdp_w_batch(xs: np.ndarray) -> np.ndarray:
 def capacity_gb_batch(xs: np.ndarray) -> np.ndarray:
     """Vectorized `hierarchy.total_capacity_gb()` for encoded designs."""
     return _batch_stats(xs)[:, 2]
+
+
+# ---------------------------------------------------------------------------
+# DesignSpace protocol: what the searchers in runner.py require of a space.
+# ---------------------------------------------------------------------------
+
+class DesignSpace:
+    """Integer-encoded design space searched by the runner.py optimizers.
+
+    A concrete space provides `cardinalities` (one categorical range per
+    gene) plus vectorized validity / TDP tables; everything the four
+    searchers touch (sampling, Sobol mapping, GP normalization, repair)
+    has a generic default implemented on top of `cardinalities`, so the
+    optimizers never hard-code a particular encoding.
+
+    `repair` projects an arbitrary in-range gene vector onto the space's
+    constraint manifold (identity by default); searchers call it on every
+    proposal so crossover/mutation cannot silently leave the feasible
+    encoding set.  It must not consume RNG state (seeded trajectories
+    depend on the draw sequence alone).
+    """
+
+    name: str = "design-space"
+    cardinalities: list
+    # When True, shared_init keeps only valid_mask-passing Sobol points
+    # (topping up with random_design); spaces whose raw-uniform validity
+    # is low opt in so the init budget is spent on decodable designs.
+    init_filter_valid: bool = False
+    # When True, random_designs returns only valid_mask-passing rows
+    # (rejection sampling), so callers may skip re-filtering its output.
+    samples_valid: bool = False
+
+    @property
+    def n_dims(self) -> int:
+        return len(self.cardinalities)
+
+    def decode(self, x):
+        """Integer vector -> evaluatable design (space-specific type).
+        Raises InvalidDesign for impossible combinations."""
+        raise NotImplementedError
+
+    def repair(self, x) -> list:
+        """Project an in-range gene vector onto the constraint manifold."""
+        return list(x)
+
+    def random_design(self, rng: np.random.Generator) -> list:
+        return self.repair([int(rng.integers(c))
+                            for c in self.cardinalities])
+
+    def random_designs(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        xs = rng.integers(0, np.asarray(self.cardinalities),
+                          size=(n, self.n_dims))
+        return self.repair_batch(xs)
+
+    def repair_batch(self, xs: np.ndarray) -> np.ndarray:
+        return xs
+
+    def from_unit(self, u) -> list:
+        """[0,1)^d -> integer vector (Sobol mapping)."""
+        return self.repair([min(int(v * c), c - 1)
+                            for v, c in zip(u, self.cardinalities)])
+
+    def normalize(self, x) -> np.ndarray:
+        """Integer vector -> [0,1]^d (GP input)."""
+        return np.array([(v + 0.5) / c
+                         for v, c in zip(x, self.cardinalities)],
+                        dtype=np.float64)
+
+    def normalize_batch(self, xs) -> np.ndarray:
+        return ((np.asarray(xs, dtype=np.float64) + 0.5)
+                / np.asarray(self.cardinalities, dtype=np.float64))
+
+    def valid_mask(self, xs: np.ndarray) -> np.ndarray:
+        """Vectorized decode-validity over an [n, n_dims] batch."""
+        raise NotImplementedError
+
+    def tdp_w_batch(self, xs: np.ndarray) -> np.ndarray:
+        """Vectorized peak-power (W) over an [n, n_dims] batch."""
+        raise NotImplementedError
+
+    def space_cardinality(self) -> int:
+        out = 1
+        for c in self.cardinalities:
+            out *= c
+        return out
+
+
+class SingleDeviceSpace(DesignSpace):
+    """The 17-gene Table 2 single-device space (module functions wrapped).
+
+    Sampling, normalization and Sobol mapping inherit the generic
+    `DesignSpace` implementations, which are line-for-line the module
+    functions above — the RNG call sequence (one `rng.integers` per gene
+    for `random_design`, one vectorized draw for `random_designs`) is
+    identical, keeping pre-refactor seeded trajectories byte-identical.
+    """
+
+    name = "single-device"
+
+    def __init__(self):
+        self.cardinalities = list(CARDINALITIES)
+
+    def decode(self, x) -> "NPUConfig":
+        return decode(x)
+
+    def valid_mask(self, xs: np.ndarray) -> np.ndarray:
+        return valid_mask(xs)
+
+    def tdp_w_batch(self, xs: np.ndarray) -> np.ndarray:
+        return tdp_w_batch(xs)
+
+    def capacity_gb_batch(self, xs: np.ndarray) -> np.ndarray:
+        return capacity_gb_batch(xs)
+
+
+# Gene index of the KV-cache quantization format within one 17-gene half.
+KV_GENE = 12
+
+
+class PairedSpace(DesignSpace):
+    """Prefill/decode disaggregated pair space (paper Sections 5.3/5.5).
+
+    A point is two concatenated 17-gene halves: genes [0, 17) encode the
+    prefill-optimized device, genes [17, 34) the decode-optimized one.
+    One cross-half constraint applies: both halves must use the same
+    KV-cache quantization format (gene `KV_GENE` of each half), because
+    the KV cache produced during prefill is shipped over the interconnect
+    and consumed verbatim by the decode device — a format mismatch would
+    require a re-quantization pass the system model does not provide.
+
+    `repair` (and therefore every sampling primitive) enforces the
+    constraint by copying the prefill half's KV gene onto the decode
+    half; `valid_mask`/`decode` reject vectors that still violate it
+    (e.g. raw crossover output that bypassed repair).
+    """
+
+    name = "paired-prefill-decode"
+    init_filter_valid = True
+    samples_valid = True
+
+    # Bound on validity rejection-sampling rounds (raw validity of a
+    # random pair is ~10-20%, so a handful of rounds nearly always
+    # suffices; the bound keeps sampling total even if tables change).
+    _MAX_RESAMPLE = 64
+
+    def __init__(self):
+        self.cardinalities = list(CARDINALITIES) * 2
+
+    def random_design(self, rng: np.random.Generator) -> list:
+        """One random *valid* pair (rejection sampling over valid_mask).
+
+        Both halves of a raw uniform draw must independently pass the
+        single-device validity tables, which squares the rejection rate
+        — uniform sampling would waste ~85% of every search budget on
+        undecodable pairs, so the paired space samples the validity-
+        filtered set directly (the single-device space keeps raw draws
+        for seeded-trajectory compatibility)."""
+        x = super().random_design(rng)
+        for _ in range(self._MAX_RESAMPLE):
+            if bool(self.valid_mask(np.asarray([x], dtype=np.int64))[0]):
+                break
+            x = super().random_design(rng)
+        return x
+
+    def random_designs(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        """`n` random pairs, validity-rejection-sampled like
+        `random_design` (vectorized: oversample, filter, top up)."""
+        out = np.empty((0, self.n_dims), dtype=np.int64)
+        for _ in range(self._MAX_RESAMPLE):
+            if len(out) >= n:
+                break
+            draw = super().random_designs(rng, max(n, 2 * (n - len(out))))
+            out = np.concatenate([out, draw[self.valid_mask(draw)]])
+        if len(out) < n:            # fall back to raw draws (tables degenerate)
+            out = np.concatenate([out, super().random_designs(
+                rng, n - len(out))])
+        return out[:n]
+
+    def split(self, x) -> tuple:
+        """34-gene pair -> (prefill 17-gene half, decode 17-gene half)."""
+        x = list(x)
+        return x[:N_DIMS], x[N_DIMS:]
+
+    def repair(self, x) -> list:
+        x = list(x)
+        x[N_DIMS + KV_GENE] = x[KV_GENE]
+        return x
+
+    def repair_batch(self, xs: np.ndarray) -> np.ndarray:
+        xs = np.array(xs)           # copy: never mutate the caller's batch
+        xs[:, N_DIMS + KV_GENE] = xs[:, KV_GENE]
+        return xs
+
+    def decode(self, x) -> tuple:
+        """34-gene pair -> (prefill NPUConfig, decode NPUConfig)."""
+        x = [int(v) for v in x]
+        if len(x) != 2 * N_DIMS:
+            raise InvalidDesign(f"need {2 * N_DIMS} genes, got {len(x)}")
+        if x[KV_GENE] != x[N_DIMS + KV_GENE]:
+            raise InvalidDesign(
+                "KV-cache quant mismatch between prefill and decode halves: "
+                f"{KV_FMTS[x[KV_GENE]]} vs {KV_FMTS[x[N_DIMS + KV_GENE]]}")
+        return decode(x[:N_DIMS]), decode(x[N_DIMS:])
+
+    def valid_mask(self, xs: np.ndarray) -> np.ndarray:
+        xs = np.asarray(xs, dtype=np.int64)
+        return (valid_mask(xs[:, :N_DIMS]) & valid_mask(xs[:, N_DIMS:])
+                & (xs[:, KV_GENE] == xs[:, N_DIMS + KV_GENE]))
+
+    def tdp_w_batch(self, xs: np.ndarray) -> np.ndarray:
+        """Combined pair TDP: the two devices draw from one power budget."""
+        xs = np.asarray(xs, dtype=np.int64)
+        return tdp_w_batch(xs[:, :N_DIMS]) + tdp_w_batch(xs[:, N_DIMS:])

@@ -382,7 +382,9 @@ def evaluate(npu: NPUConfig, dims: ModelDims, trace: Trace, phase: Phase,
 
 
 def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
-                   batch: Optional[int] = None) -> list:
+                   batch: Optional[int] = None,
+                   keys: Optional[list] = None,
+                   cache: Optional[dict] = None) -> list:
     """Evaluate many NPU configurations on one workload phase.
 
     Structure-of-arrays fast path for DSE candidate pools and Sobol
@@ -392,11 +394,26 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
     per-design placement/timing arithmetic runs per config.  Returns one
     PhaseResult per config, with None for infeasible entries instead of
     raising (batch callers filter rather than unwind).
+
+    With `keys` (one hashable per config) and `cache` (a caller-owned
+    dict), results memoize across calls: cached keys are returned
+    without re-evaluation and misses are written back.  The paired
+    disaggregated search threads its per-half caches through here so
+    repeated prefill/decode halves cost one evaluation each per sweep.
     """
+    if keys is not None and len(keys) != len(npus):
+        raise ValueError(f"{len(keys)} keys for {len(npus)} configs")
     out = []
-    for npu in npus:
+    for i, npu in enumerate(npus):
+        k = keys[i] if keys is not None else None
+        if cache is not None and k is not None and k in cache:
+            out.append(cache[k])
+            continue
         try:
-            out.append(evaluate(npu, dims, trace, phase, batch=batch))
+            r = evaluate(npu, dims, trace, phase, batch=batch)
         except ValueError:          # InfeasibleConfig et al.
-            out.append(None)
+            r = None
+        if cache is not None and k is not None:
+            cache[k] = r
+        out.append(r)
     return out

@@ -1,14 +1,25 @@
 """Fig 6: hypervolume convergence of GP+EHVI vs NSGA-II vs MO-TPE vs
-Random (shared 20-point Sobol init, multiple seeds).
+Random (shared 20-point Sobol init, multiple seeds), plus the jitted
+candidate-pool scoring row (``pool100000``): a 100k-design pool scored
+end-to-end (gene batch -> `space.decode_batch` -> one jitted
+`perfmodel_jit.evaluate_batch_arrays` call) against the scalar oracle
+loop's per-design cost.
 
 Also emits machine-readable per-method timings to ``BENCH_dse.json`` so
-future optimization PRs have a perf trajectory to regress against.  In
-``--smoke`` mode (see benchmarks/run.py) the budget shrinks to one seed
-and 30 evaluations for a fast end-to-end sanity pass.
+future optimization PRs have a perf trajectory to regress against — the
+``jit_pool`` entry carries the jitted-vs-scalar speedup that
+``benchmarks/run.py --check`` gates on.  In ``--smoke`` mode (see
+benchmarks/run.py) the budget shrinks to one seed / 30 evaluations and
+a 10k pool for a fast end-to-end sanity pass.
+
+Standalone pool sizing::
+
+  PYTHONPATH=src python -m benchmarks.bench_dse --pool 100000
 """
 
 import json
 import os
+import time
 
 import numpy as np
 
@@ -21,11 +32,83 @@ from .common import row, timed
 N_TOTAL = 60
 N_INIT = 20
 SEEDS = (0, 1, 2)
+POOL_SIZE = 100_000
+SCALAR_SAMPLE = 300          # scalar-oracle subsample, extrapolated
 
 SMOKE_N_TOTAL = 30
 SMOKE_SEEDS = (0,)
+SMOKE_POOL_SIZE = 10_000
 
 DEFAULT_JSON_PATH = "BENCH_dse.json"
+
+
+def pool_rows(pool_size: int = POOL_SIZE) -> tuple:
+    """([csv rows], jit_pool payload): score a `pool_size` candidate
+    pool with the jitted SoA path and compare against the scalar
+    oracle's per-design cost (measured on a subsample, extrapolated).
+
+    The jitted timing is steady-state (one warm-up call pays the
+    per-shape XLA compile, reported separately) and includes
+    `decode_batch` — the full genes-to-scores path the searchers use.
+    """
+    from repro.core import perfmodel_jit as pj
+    from repro.core.dse import space as sp
+    from repro.core.perfmodel import evaluate_batch
+
+    rng = np.random.default_rng(0)
+    xs = sp.random_designs(rng, 2 * pool_size)
+    xs = xs[sp.valid_mask(xs)]
+    while len(xs) < pool_size:          # top up (raw validity ~60-70%)
+        draw = sp.random_designs(rng, pool_size)
+        xs = np.concatenate([xs, draw[sp.valid_mask(draw)]])
+    xs = xs[:pool_size]
+
+    t0 = time.perf_counter()
+    table = sp.decode_batch(xs)
+    t_decode = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    arrs = pj.evaluate_batch_arrays(table, QWEN3_32B, OSWORLD_LIBREOFFICE,
+                                    Phase.PREFILL)
+    t_compile = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    arrs = pj.evaluate_batch_arrays(table, QWEN3_32B, OSWORLD_LIBREOFFICE,
+                                    Phase.PREFILL)
+    t_jit = time.perf_counter() - t0
+
+    sample = [sp.decode(x) for x in xs[:SCALAR_SAMPLE]]
+    t0 = time.perf_counter()
+    ref = evaluate_batch(sample, QWEN3_32B, OSWORLD_LIBREOFFICE,
+                         Phase.PREFILL, use_jit=False)
+    scalar_per_design = (time.perf_counter() - t0) / len(sample)
+
+    # sanity: identical feasibility + matching throughput on the sample
+    n_bad = sum(
+        (r is None) != (not arrs["feasible"][i])
+        or (r is not None
+            and abs(r.throughput_tps - arrs["throughput_tps"][i])
+            > 1e-5 * abs(r.throughput_tps))
+        for i, r in enumerate(ref))
+    jit_total = t_decode + t_jit
+    scalar_total = scalar_per_design * pool_size
+    speedup = scalar_total / jit_total
+    payload = {
+        "pool_size": pool_size,
+        "feasible": int(arrs["feasible"].sum()),
+        "decode_batch_s": t_decode,
+        "jit_eval_s": t_jit,
+        "jit_compile_s": t_compile,
+        "scalar_us_per_design": scalar_per_design * 1e6,
+        "scalar_extrapolated_s": scalar_total,
+        "speedup": speedup,
+        "parity_mismatches": int(n_bad),
+    }
+    rows = [row(f"pool{pool_size}_jit", jit_total * 1e6,
+                f"feasible={payload['feasible']} "
+                f"compile={t_compile:.1f}s "
+                f"scalar~{scalar_total:.1f}s speedup={speedup:.0f}x "
+                f"parity_bad={n_bad}")]
+    return rows, payload
 
 
 def run(smoke: bool = False) -> list:
@@ -70,11 +153,14 @@ def run(smoke: bool = False) -> list:
     best = max(finals, key=finals.get)
     out.append(row("fig6_winner", 0.0,
                    f"{best} (paper: GP+EHVI converges highest)"))
+    pool_out, jit_pool = pool_rows(SMOKE_POOL_SIZE if smoke else POOL_SIZE)
+    out.extend(pool_out)
     payload = {
         "bench": "dse_convergence",
         "settings": {"n_total": n_total, "n_init": N_INIT,
                      "seeds": list(seeds), "smoke": smoke},
         "methods": timings,
+        "jit_pool": jit_pool,
         "winner": best,
         "total_us": sum(us_total.values()),
     }
@@ -84,3 +170,26 @@ def run(smoke: bool = False) -> list:
     except OSError:
         pass                        # read-only working dir: CSV rows suffice
     return out
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--pool", type=int, default=POOL_SIZE,
+                    help="candidate-pool size for the jitted scoring row")
+    ap.add_argument("--full", action="store_true",
+                    help="also run the full fig6 convergence sweep")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.full:
+        for line in run():
+            print(line)
+    else:
+        rows, payload = pool_rows(args.pool)
+        for line in rows:
+            print(line)
+        print(json.dumps(payload, indent=1, sort_keys=True))
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,12 @@ var) so perf changes can be tracked across PRs.
 smoke mode and compares the fresh per-method timings against the
 committed baseline (``benchmarks/BENCH_dse.json``), failing (exit 1)
 when any method is slower than ``--tolerance`` times its baseline — so
-future PRs can't silently re-quadratize the DSE hot path.  Refresh the
+future PRs can't silently re-quadratize the DSE hot path.  It also
+gates the jitted perfmodel: the fresh ``jit_pool`` entry
+(jitted-vs-scalar candidate-pool speedup, see bench_dse.pool_rows)
+must stay above both the hard 10x floor and ``1/tolerance`` of the
+baseline speedup, and must report zero jit/scalar parity mismatches —
+a silent regression of the jitted path fails loudly here.  Refresh the
 baseline after an intentional perf change with::
 
   BENCH_DSE_JSON=benchmarks/BENCH_dse.json \\
@@ -56,6 +61,11 @@ MODULES = [
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_dse.json")
 
+# Acceptance floor for the jitted perfmodel: scoring a candidate pool
+# through decode_batch + the jitted evaluator must beat the scalar
+# oracle loop by at least this factor, regardless of the baseline.
+JIT_SPEEDUP_FLOOR = 10.0
+
 
 def compare_timings(base: dict, fresh: dict, tolerance: float) -> list:
     """Per-method regression verdicts: (method, fresh_us, limit_us, ok).
@@ -73,6 +83,26 @@ def compare_timings(base: dict, fresh: dict, tolerance: float) -> list:
             out.append((method, g["us_per_run"], limit,
                         g["us_per_run"] <= limit))
     return out
+
+
+def compare_jit_pool(base: dict, fresh: dict, tolerance: float):
+    """Jitted-perfmodel regression verdict, or None when the baseline
+    predates the jit_pool entry.
+
+    Returns (fresh_speedup, floor, parity_mismatches, ok): the fresh
+    jitted-vs-scalar pool-scoring speedup must reach both the hard
+    `JIT_SPEEDUP_FLOOR` and `1/tolerance` of the baseline speedup, with
+    zero parity mismatches against the scalar oracle.  A missing fresh
+    entry counts as a regression (floor < 0 marks it)."""
+    b = base.get("jit_pool")
+    if not b or not isinstance(b.get("speedup"), (int, float)):
+        return None
+    g = fresh.get("jit_pool")
+    if not g or not isinstance(g.get("speedup"), (int, float)):
+        return (float("nan"), -1.0, 0, False)
+    floor = max(JIT_SPEEDUP_FLOOR, b["speedup"] / tolerance)
+    bad = int(g.get("parity_mismatches", 0))
+    return (g["speedup"], floor, bad, g["speedup"] >= floor and bad == 0)
 
 
 def check_perf(baseline_path: str, tolerance: float) -> int:
@@ -127,11 +157,29 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
             failures.append(
                 f"{method}: {got_us/1e6:.2f}s/run > {tolerance:g}x "
                 f"baseline {limit_us/tolerance/1e6:.2f}s/run")
+    jit = compare_jit_pool(base, fresh, tolerance)
+    if jit is not None:
+        speedup, floor, bad, ok = jit
+        if floor < 0:
+            failures.append("jit_pool: missing from fresh run")
+        else:
+            print(f"check_jit_pool,{speedup:.1f},"
+                  f"floor={floor:.1f}x parity_bad={bad} "
+                  f"{'ok' if ok else 'FAIL'}")
+            if bad:
+                failures.append(
+                    f"jit_pool: {bad} jit-vs-scalar parity mismatches "
+                    f"(speedup {speedup:.1f}x)")
+            if speedup < floor:
+                failures.append(
+                    f"jit_pool: jitted-vs-scalar speedup {speedup:.1f}x "
+                    f"below floor {floor:.1f}x")
     if failures:
         print("PERF REGRESSION:\n  " + "\n  ".join(failures), file=sys.stderr)
         return 1
     print(f"perf check passed ({len(base.get('methods', {}))} methods "
-          f"within {tolerance:g}x of baseline)")
+          f"within {tolerance:g}x of baseline"
+          + (", jit_pool above floor)" if jit is not None else ")"))
     return 0
 
 

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Repo CI gate: tier-1 tests + the benchmark smoke/perf-regression check.
+#
+#   scripts/ci.sh
+#
+# 1. tier-1: the full pytest suite (ROADMAP "Tier-1 verify").
+# 2. perf gate: benchmarks/run.py --smoke --check reruns the smoke DSE
+#    bench and fails when any search method exceeds --tolerance x its
+#    committed baseline (benchmarks/BENCH_dse.json), when the jitted
+#    perfmodel's pool-scoring speedup over the scalar oracle drops
+#    below the 10x floor (or 1/tolerance of the baseline speedup), or
+#    when the jitted path diverges from the oracle on the bench sample.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== benchmark smoke + perf-regression check =="
+python -m benchmarks.run --smoke --check
+
+echo "CI OK"

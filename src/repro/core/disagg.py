@@ -99,13 +99,15 @@ def evaluate_disagg_batch(pairs: list, dims: ModelDims, trace: Trace,
                           dec_cache: Optional[dict] = None) -> list:
     """Batched `evaluate_disaggregated` over (prefill, decode) NPU pairs.
 
-    Built on `perfmodel.evaluate_batch`: each side's unique
-    configurations are evaluated once per call, then the per-pair
-    combination is pure arithmetic — the DSE's paired candidate pools
-    share halves heavily (crossover children, TPE proposals), so the
-    per-phase evaluation count is the number of distinct halves, not
-    the number of pairs.  Returns one DisaggResult per pair, with None
-    for pairs infeasible in either phase instead of raising.
+    Built on `perfmodel.evaluate_batch` (since PR 3 the jitted
+    structure-of-arrays path: each side's unique-half miss set is
+    scored by one `jax.jit` call): each side's unique configurations
+    are evaluated once per call, then the per-pair combination is pure
+    arithmetic — the DSE's paired candidate pools share halves heavily
+    (crossover children, TPE proposals), so the per-phase evaluation
+    count is the number of distinct halves, not the number of pairs.
+    Returns one DisaggResult per pair, with None for pairs infeasible
+    in either phase instead of raising.
 
     Configs are deduplicated by `NPUConfig.name`; DSE-decoded designs
     embed their genes in the name so this is exact for search batches

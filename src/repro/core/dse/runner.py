@@ -28,6 +28,11 @@ Hot-path structure (vectorized engine):
   `space.valid_mask` / `space.tdp_w_batch` prefilters and the perfmodel
   batch fast path (`perfmodel.evaluate_batch` for single devices,
   `disagg.evaluate_disagg_batch` with per-half memoization for pairs).
+  Since PR 3 that fast path is the jitted structure-of-arrays program
+  in `perfmodel_jit` — every surviving candidate of a batch is scored
+  by one `jax.jit` call (scalar `perfmodel.evaluate` remains the
+  reference oracle); 100k-design pools score in ~1 s
+  (`benchmarks/bench_dse.py --pool 100000`).
 * MOBO scores its candidate pool with the exact closed-form 2-D EHVI
   (`ehvi.ehvi_2d`) instead of a quasi-MC estimate, and filters the pool
   with the per-gene TDP/validity tables instead of decoding every draw.

@@ -252,6 +252,94 @@ def capacity_gb_batch(xs: np.ndarray) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Structure-of-arrays decoding: gene batch -> perfmodel_jit.NPUTable.
+#
+# The jitted batch evaluator wants parallel parameter arrays, not
+# NPUConfig objects (`decode` costs ~50 us per design, which at 100k
+# candidates would dwarf the evaluation itself).  Like the TDP/validity
+# tables above, the slot tables are built FROM the same MemoryLevel /
+# QuantConfig constructors `decode` uses (via memtech.level_params), so
+# the SoA parameters are bit-identical to the object path's.
+# ---------------------------------------------------------------------------
+
+# Canonical hierarchy slots of a decoded design, innermost first
+# (matches the level order `decode` constructs).
+_SLOT_NAMES = ("3D-SRAM", "SRAM", "HBM", "HBF", "GDDR", "LPDDR")
+_N_SLOTS = len(_SLOT_NAMES)
+
+_SOA_TABLES: Optional[dict] = None
+
+
+def _soa_tables() -> dict:
+    """Per-gene numeric lookup tables for `decode_batch`, built lazily."""
+    global _SOA_TABLES
+    if _SOA_TABLES is not None:
+        return _SOA_TABLES
+    from ..memtech import level_params
+
+    def lv_table(names, stack_choices):
+        out = np.zeros((len(names), len(stack_choices), 6))
+        for ti, name in enumerate(names):
+            for si, s in enumerate(stack_choices):
+                out[ti, si] = level_params(get_tech(name), s)
+        return out
+
+    bw_rows = np.array([SoftwareStrategy(bw_priority=ch).bw_split()
+                        for ch in BW_CHOICES])
+    t = {
+        "pe_rows": np.array([p[0] for p in PE_CHOICES], dtype=np.float64),
+        "pe_cols": np.array([p[1] for p in PE_CHOICES], dtype=np.float64),
+        "vlen": np.array(VLEN_CHOICES, dtype=np.float64),
+        "sram3d": lv_table(["3D-SRAM"], SRAM3D_CHOICES)[0],
+        "sram2d": lv_table(["SRAM"], SRAM2D_CHOICES)[0],
+        "hbm": lv_table(HBM_TYPES, STACK_CHOICES),
+        "hbf": lv_table(["HBF"], STACK_CHOICES)[0],
+        "gddr": lv_table(GDDR_TYPES, STACK_CHOICES),
+        "lpddr": lv_table(LPDDR_TYPES, LPDDR_STACK_CHOICES),
+        # DATAFLOW_CHOICES gene order -> canonical WS/IS/OS code
+        "df_code": np.array([{Dataflow.WEIGHT_STATIONARY: 0,
+                              Dataflow.INPUT_STATIONARY: 1,
+                              Dataflow.OUTPUT_STATIONARY: 2}[df]
+                             for df in DATAFLOW_CHOICES], dtype=np.int32),
+        "bw_mx": bw_rows[:, 0], "bw_vec": bw_rows[:, 1],
+    }
+    _SOA_TABLES = t
+    return t
+
+
+def decode_batch(xs: np.ndarray):
+    """Vectorized `decode`: [n, N_DIMS] int batch -> perfmodel_jit
+    .NPUTable (structure-of-arrays NPU parameters, no NPUConfig
+    construction).  Rows must be decode-valid (`valid_mask`); invalid
+    rows yield undefined table entries, not exceptions."""
+    from ..perfmodel_jit import NPUTable
+    t = _soa_tables()
+    xs = np.asarray(xs, dtype=np.int64)
+    n = xs.shape[0]
+    lvl_rows = np.zeros((n, _N_SLOTS, 6))
+    lvl_rows[:, 0] = t["sram3d"][xs[:, 2]]
+    lvl_rows[:, 1] = t["sram2d"][xs[:, 3]]
+    lvl_rows[:, 2] = t["hbm"][xs[:, 4], xs[:, 5]]
+    lvl_rows[:, 3] = t["hbf"][xs[:, 10]]
+    lvl_rows[:, 4] = t["gddr"][xs[:, 6], xs[:, 7]]
+    lvl_rows[:, 5] = t["lpddr"][xs[:, 8], xs[:, 9]]
+    onchip = np.zeros((n, _N_SLOTS), dtype=bool)
+    onchip[:, :2] = True
+    # distinct QuantConfigs present in the batch (usually few dozen max)
+    fmt_genes = xs[:, [13, 11, 12]]          # (weight, act, kv) gene cols
+    uniq, quant_idx = np.unique(fmt_genes, axis=0, return_inverse=True)
+    quants = tuple(QuantConfig(weight=W_FMTS[w], activation=ACT_FMTS[a],
+                               kv_cache=KV_FMTS[k]) for w, a, k in uniq)
+    return NPUTable.from_parts(
+        pe_rows=t["pe_rows"][xs[:, 0]], pe_cols=t["pe_cols"][xs[:, 0]],
+        vlen=t["vlen"][xs[:, 1]], clock_ghz=np.ones(n),
+        lvl_rows=lvl_rows, lvl_onchip=onchip,
+        quants=quants, quant_idx=quant_idx,
+        df_idx=t["df_code"][xs[:, 15]], storage_idx=xs[:, 14],
+        bw_mx=t["bw_mx"][xs[:, 16]], bw_vec=t["bw_vec"][xs[:, 16]])
+
+
+# ---------------------------------------------------------------------------
 # DesignSpace protocol: what the searchers in runner.py require of a space.
 # ---------------------------------------------------------------------------
 
@@ -329,6 +417,12 @@ class DesignSpace:
         """Vectorized peak-power (W) over an [n, n_dims] batch."""
         raise NotImplementedError
 
+    def decode_batch(self, xs: np.ndarray):
+        """Vectorized `decode` into structure-of-arrays NPU parameters
+        for the jitted batch perfmodel (no per-design object
+        construction).  Spaces without an SoA decoding raise."""
+        raise NotImplementedError
+
     def space_cardinality(self) -> int:
         out = 1
         for c in self.cardinalities:
@@ -362,6 +456,9 @@ class SingleDeviceSpace(DesignSpace):
 
     def capacity_gb_batch(self, xs: np.ndarray) -> np.ndarray:
         return capacity_gb_batch(xs)
+
+    def decode_batch(self, xs: np.ndarray):
+        return decode_batch(xs)
 
 
 # Gene index of the KV-cache quantization format within one 17-gene half.
@@ -462,3 +559,8 @@ class PairedSpace(DesignSpace):
         """Combined pair TDP: the two devices draw from one power budget."""
         xs = np.asarray(xs, dtype=np.int64)
         return tdp_w_batch(xs[:, :N_DIMS]) + tdp_w_batch(xs[:, N_DIMS:])
+
+    def decode_batch(self, xs: np.ndarray) -> tuple:
+        """(prefill NPUTable, decode NPUTable) — SoA decoding per half."""
+        xs = np.asarray(xs, dtype=np.int64)
+        return decode_batch(xs[:, :N_DIMS]), decode_batch(xs[:, N_DIMS:])

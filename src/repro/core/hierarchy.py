@@ -241,6 +241,20 @@ class MemoryHierarchy:
     def fits(self, total_gb: float) -> bool:
         return total_gb <= self.total_capacity_gb() + 1e-12
 
+    # ---- structure-of-arrays export (perfmodel_jit) -------------------------
+
+    def level_param_rows(self) -> list[tuple[tuple, bool]]:
+        """[(level_params row, is_on_chip)] per level, innermost first.
+
+        Numeric export for the jitted batch evaluator: each level becomes
+        one `memtech.LEVEL_PARAM_FIELDS` row computed with the exact same
+        float64 expressions as the MemoryLevel properties, so SoA
+        hierarchies built from this table evaluate bit-identically to the
+        object path."""
+        from .memtech import level_params
+        return [(level_params(l.tech, l.stacks),
+                 l.tech.kind is MemKind.ON_CHIP) for l in self.levels]
+
 
 def max_stacks(tech: MemoryTechnology, l_mem_mm: float = L_MEM_MAX_MM) -> int:
     """Eq. 1: shoreline bound on the number of attachable stacks."""

@@ -208,3 +208,32 @@ def get(name: str) -> MemoryTechnology:
         raise KeyError(
             f"unknown memory technology {name!r}; known: {sorted(CATALOG)}"
         ) from None
+
+
+# ---------------------------------------------------------------------------
+# Structure-of-arrays export (perfmodel_jit).
+#
+# The jitted batch evaluator represents a hierarchy level as one numeric
+# row instead of a MemoryLevel object.  The arithmetic here mirrors the
+# MemoryLevel properties exactly (same expressions, same float64 ops) so
+# the SoA path is bit-identical to the object path.
+# ---------------------------------------------------------------------------
+
+LEVEL_PARAM_FIELDS = ("capacity_gb", "bandwidth_gbps", "latency_s",
+                      "e_read_pj_per_bit", "e_write_pj_per_bit",
+                      "background_power_w")
+
+
+def level_params(tech: MemoryTechnology, stacks: int) -> tuple:
+    """One hierarchy level as a `LEVEL_PARAM_FIELDS` numeric row.
+
+    Matches MemoryLevel: capacity/bandwidth scale with `stacks`, access
+    energies are per-bit constants, background power is leakage for the
+    scaled capacity.  `stacks == 0` yields an all-zero row (absent slot
+    in a fixed-slot SoA hierarchy)."""
+    if stacks <= 0:
+        return (0.0,) * len(LEVEL_PARAM_FIELDS)
+    cap = tech.capacity_gb * stacks
+    return (cap, tech.bandwidth_gbps * stacks, tech.latency_s,
+            tech.e_read_pj_per_bit, tech.e_write_pj_per_bit,
+            tech.background_power_w(cap))

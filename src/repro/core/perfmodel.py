@@ -18,11 +18,25 @@ Phase evaluation (paper Section 4.3):
   * DECODE: batch maximized under the capacity constraint (weights + KV at
     full context + activations must fit); per-step time at the average
     context length; TPS and token/J.
+
+Scalar-as-oracle convention: the per-config functions in this module
+(`evaluate`, `evaluate_prefill`, `evaluate_decode`, `max_*_batch`,
+`class_traffic_bytes`, `_layer_time_and_energy`) are the REFERENCE
+implementation — plain float64 Python, one design at a time, raising
+`InfeasibleConfig`.  The DSE hot path (`evaluate_batch`) routes through
+the structure-of-arrays jax.jit program in perfmodel_jit.py, which
+replicates this arithmetic op-for-op and encodes infeasibility as a
+mask; tests/test_perfmodel_jit.py property-tests the two against each
+other (rtol 1e-5, identical feasibility).  Behavioral changes MUST land
+in the scalar oracle first and be mirrored in perfmodel_jit, never the
+other way around.  Set REPRO_PERFMODEL_SCALAR=1 (or pass
+`use_jit=False`) to force batch evaluation through the oracle.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional
 
 from .compute import (Dataflow, dataflow_traffic_multipliers, gemm_cycles,
@@ -381,19 +395,39 @@ def evaluate(npu: NPUConfig, dims: ModelDims, trace: Trace, phase: Phase,
     return evaluate_decode(npu, dims, trace, batch=batch)
 
 
+def _evaluate_batch_scalar(npus, dims: ModelDims, trace: Trace,
+                           phase: Phase,
+                           batch: Optional[int] = None) -> list:
+    """Reference oracle: map the scalar `evaluate` over the configs."""
+    out = []
+    for npu in npus:
+        try:
+            out.append(evaluate(npu, dims, trace, phase, batch=batch))
+        except ValueError:          # InfeasibleConfig et al.
+            out.append(None)
+    return out
+
+
 def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
                    batch: Optional[int] = None,
                    keys: Optional[list] = None,
-                   cache: Optional[dict] = None) -> list:
+                   cache: Optional[dict] = None,
+                   use_jit: Optional[bool] = None) -> list:
     """Evaluate many NPU configurations on one workload phase.
 
     Structure-of-arrays fast path for DSE candidate pools and Sobol
-    initializations: all designs share the memoized per-(dims, phase,
-    batch, ctx, quant) `layer_traffic_cached` operator lists and the
-    cached footprint terms of the max-batch capacity search, so only the
-    per-design placement/timing arithmetic runs per config.  Returns one
-    PhaseResult per config, with None for infeasible entries instead of
-    raising (batch callers filter rather than unwind).
+    initializations: the configs are packed into a perfmodel_jit
+    .NPUTable and scored by one jax.jit call per (model, trace, phase)
+    — max-batch capacity search, placement, traffic, transfer and
+    energy all vectorized over designs, with infeasibility as a mask.
+    Returns one PhaseResult per config, with None for infeasible
+    entries instead of raising (batch callers filter rather than
+    unwind).
+
+    The scalar path (`evaluate`) remains the reference oracle:
+    `use_jit=False` or REPRO_PERFMODEL_SCALAR=1 forces it, and the
+    diffusion-LM decode phase always uses it (no batch-choice table for
+    the steps-per-token aggregation).
 
     With `keys` (one hashable per config) and `cache` (a caller-owned
     dict), results memoize across calls: cached keys are returned
@@ -403,17 +437,34 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
     """
     if keys is not None and len(keys) != len(npus):
         raise ValueError(f"{len(keys)} keys for {len(npus)} configs")
+    miss_idx = list(range(len(npus)))
+    if cache is not None and keys is not None:
+        # a None key means "do not cache this config": always a miss
+        miss_idx = [i for i in miss_idx
+                    if keys[i] is None or keys[i] not in cache]
+    miss = [npus[i] for i in miss_idx]
+    if use_jit is None:
+        use_jit = os.environ.get("REPRO_PERFMODEL_SCALAR", "") != "1"
+    if miss:
+        from . import perfmodel_jit
+        if use_jit and perfmodel_jit.supports(dims, phase):
+            results = perfmodel_jit.evaluate_batch_table(
+                perfmodel_jit.NPUTable.from_configs(miss), dims, trace,
+                phase, batch=batch)
+        else:
+            results = _evaluate_batch_scalar(miss, dims, trace, phase,
+                                             batch=batch)
+    else:
+        results = []
+    by_idx = dict(zip(miss_idx, results))
     out = []
-    for i, npu in enumerate(npus):
-        k = keys[i] if keys is not None else None
-        if cache is not None and k is not None and k in cache:
-            out.append(cache[k])
-            continue
-        try:
-            r = evaluate(npu, dims, trace, phase, batch=batch)
-        except ValueError:          # InfeasibleConfig et al.
-            r = None
-        if cache is not None and k is not None:
-            cache[k] = r
+    for i in range(len(npus)):
+        if i in by_idx:
+            r = by_idx[i]
+            if cache is not None and keys is not None \
+                    and keys[i] is not None:
+                cache[keys[i]] = r
+        else:
+            r = cache[keys[i]]
         out.append(r)
     return out

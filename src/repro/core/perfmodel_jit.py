@@ -1,0 +1,753 @@
+"""Structure-of-arrays, jit-compiled batch evaluator for the analytical
+performance model (the DSE hot path).
+
+`perfmodel.evaluate` walks one NPUConfig through placement, traffic,
+transfer and energy arithmetic in pure Python — ~1 ms per design.  The
+DSE scores 1e4-1e5 candidates per phase, so PR 1/2's vectorized search
+engine is now bottlenecked on evaluation.  This module re-expresses the
+whole model as parallel jnp arrays:
+
+  * `NPUTable` — n designs as a structure of arrays: compute dims, a
+    fixed-slot memory hierarchy (per-level capacity / bandwidth /
+    latency / access energy, with `present` masks for absent slots),
+    quantization byte widths and software-strategy codes.  Built either
+    from gene batches (`dse.space.SingleDeviceSpace.decode_batch`, no
+    NPUConfig construction) or from NPUConfig lists (`from_configs`).
+  * `_phase_tables` — the workload side: per-batch-choice GEMM geometry
+    (`LayerTraffic.gemm_geometry`), footprint/capacity-need tables per
+    distinct QuantConfig, vector-op counts, lm-head traffic.  Computed
+    once per (model, trace, phase) with the exact scalar footprint
+    functions so the jitted feasibility masks match `InfeasibleConfig`
+    raises bit-for-bit.
+  * `evaluate_batch_arrays` — one `jax.jit` call scoring every design:
+    max-batch capacity search, greedy/proportional placement,
+    dataflow-aware traffic inflation, the recursive double-buffered
+    transfer model, and the energy model, all vmapped over designs.
+    Infeasibility is a mask, not an exception.
+
+Fidelity contract: the scalar path (`perfmodel.evaluate`) is the
+reference oracle.  The jitted program replicates its float64 arithmetic
+op-for-op (same association order, same `ceil`/`floor` boundaries, same
+1e-9/1e-12 tolerances), runs under `jax.experimental.enable_x64`, and is
+property-tested against the oracle at rtol 1e-5 with identical
+feasibility masks (tests/test_perfmodel_jit.py).  Absent hierarchy slots
+are transparent: zero capacity/energy, pass-through bandwidth, zero
+resident fraction.
+
+Known oracle deviations (documented, sub-1e-12 relative):
+  * residues below the scalar's 1e-12 placement cutoffs may route
+    through an absent slot's forced alpha instead of the next level;
+  * jnp may fuse/reassociate a handful of scalar adds.
+Neither affects feasibility (capacity comparisons use inputs computed
+by the scalar footprint functions themselves).
+
+The diffusion-LM decode path (`_evaluate_dllm_decode`) keeps steps-per-
+token aggregation that has no batch-choice table; `evaluate_batch`
+falls back to the scalar oracle for that family/phase combination.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from .dataflow import StoragePriority
+from .hierarchy import MemoryHierarchy
+from .npu import NPUConfig
+from .power import (E_MAC_PJ, E_VECTOR_OP_PJ, P_BASE_W, P_PE_STATIC_MW,
+                    P_VECTOR_STATIC_MW)
+from .quant.formats import QuantConfig
+from .workload import (Family, ModelDims, Phase, Trace,
+                       activation_footprint_gb, kv_footprint_gb,
+                       layer_traffic_cached, lm_head_traffic_cached,
+                       weight_footprint_gb)
+
+# Default batch choice ladders (max_prefill_batch / max_decode_batch).
+PREFILL_BATCH_CHOICES = (1, 2, 4, 8, 16, 32, 64, 128)
+DECODE_BATCH_CHOICES = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+
+# Greedy placement order per StoragePriority, as class indices into the
+# (weights, acts, kv) sizes vector — mirrors SoftwareStrategy
+# .placement_order().  Row order matches dse.space.STORAGE_CHOICES.
+_STORAGE_LIST = (StoragePriority.ACTIVATION, StoragePriority.KV_CACHE,
+                 StoragePriority.WEIGHT, StoragePriority.EQUAL)
+_PLACEMENT_ORDERS = np.array([[1, 2, 0],    # ACTIVATION: acts, kv, weights
+                              [2, 1, 0],    # KV_CACHE:   kv, acts, weights
+                              [0, 1, 2],    # WEIGHT:     weights, acts, kv
+                              [1, 0, 2]],   # EQUAL:      (greedy unused)
+                             dtype=np.int32)
+_EQUAL_IDX = 3
+
+# Canonical dataflow codes (order of perfmodel._ALL_DATAFLOWS, which
+# sets the tie-break of the attention-GEMM argmin): WS=0, IS=1, OS=2.
+WS, IS, OS = 0, 1, 2
+
+_BNECK_NAMES = ("compute", "matrix_mem", "vector_mem")
+
+
+@dataclasses.dataclass(frozen=True)
+class NPUTable:
+    """n NPU configurations as a structure of numpy float64 arrays.
+
+    The hierarchy is a fixed grid of `L` slots per design, innermost
+    first; absent slots have `present=False` and all-zero parameters.
+    Derived per-design quantities that the scalar model computes with
+    plain Python floats (total capacity, background power, effective
+    bandwidths, on-chip bandwidth) are precomputed here with the same
+    sequential association order, so comparisons against scalar-derived
+    thresholds are exact.
+    """
+
+    n: int
+    # compute
+    pe_rows: np.ndarray           # [n]
+    pe_cols: np.ndarray
+    vlen: np.ndarray
+    clock_ghz: np.ndarray
+    # hierarchy slots [n, L]
+    lvl_cap_gb: np.ndarray
+    lvl_bw_gbps: np.ndarray
+    lvl_lat_s: np.ndarray
+    lvl_er_pj: np.ndarray
+    lvl_ew_pj: np.ndarray
+    lvl_present: np.ndarray       # bool
+    lvl_onchip: np.ndarray        # bool
+    # derived (exact sequential order)
+    total_cap_gb: np.ndarray      # [n]
+    eff_bw_gbps: np.ndarray       # [n, L] clamped Eq. 2, inf at absent slots
+    onchip_bw: np.ndarray         # [n] bytes/s denominator for scratch
+    static_w: np.ndarray          # [n] background + idle compute power
+    last_present: np.ndarray      # [n] index of outermost present slot
+    er0_pj: np.ndarray            # [n] innermost PRESENT level's access
+    ew0_pj: np.ndarray            # [n]   energies (scratch is charged here)
+    # quantization
+    w_bytes: np.ndarray
+    a_bytes: np.ndarray
+    kv_bytes: np.ndarray
+    mx_rate: np.ndarray
+    vec_rate: np.ndarray
+    quant_idx: np.ndarray         # [n] index into `quants`
+    quants: tuple                 # distinct QuantConfig objects
+    # software strategy
+    df_idx: np.ndarray            # [n] canonical WS/IS/OS code
+    order: np.ndarray             # [n, 3] greedy placement class order
+    is_equal: np.ndarray          # [n] bool, proportional placement
+    bw_mx: np.ndarray             # [n] matrix-stream bandwidth share
+    bw_vec: np.ndarray
+
+    @property
+    def n_slots(self) -> int:
+        return self.lvl_cap_gb.shape[1]
+
+    @classmethod
+    def from_parts(cls, pe_rows, pe_cols, vlen, clock_ghz, lvl_rows,
+                   lvl_onchip, quants, quant_idx, df_idx, storage_idx,
+                   bw_mx, bw_vec) -> "NPUTable":
+        """Assemble a table from raw per-design pieces.
+
+        lvl_rows: [n, L, 6] `memtech.LEVEL_PARAM_FIELDS` rows (absent
+        slots all-zero); lvl_onchip: [n, L] bool; quant_idx: index into
+        `quants`; storage_idx: index into the STORAGE_CHOICES order.
+        """
+        lvl_rows = np.asarray(lvl_rows, dtype=np.float64)
+        n, L = lvl_rows.shape[0], lvl_rows.shape[1]
+        cap, bw, lat, er, ew, pbg = (lvl_rows[:, :, j] for j in range(6))
+        present = bw > 0.0
+        onchip = np.asarray(lvl_onchip, dtype=bool) & present
+        # exact sequential sums, matching Python's left-to-right `sum`
+        total_cap = np.zeros(n)
+        bg = np.zeros(n)
+        onchip_sum = np.zeros(n)
+        for j in range(L):
+            total_cap = total_cap + cap[:, j]
+            bg = bg + pbg[:, j]
+            onchip_sum = onchip_sum + np.where(onchip[:, j], bw[:, j], 0.0)
+        # Eq. 2 effective bandwidths with the double-buffer clamp;
+        # absent slots are transparent (inf time-wise, pass-through).
+        eff = np.full((n, L), np.inf)
+        deeper = np.zeros(n)
+        for j in reversed(range(L)):
+            raw = np.maximum(bw[:, j] - deeper, 0.5 * bw[:, j])
+            eff[:, j] = np.where(present[:, j], raw, np.inf)
+            deeper = np.where(present[:, j], raw, deeper)
+        pe_rows = np.asarray(pe_rows, dtype=np.float64)
+        pe_cols = np.asarray(pe_cols, dtype=np.float64)
+        vlen = np.asarray(vlen, dtype=np.float64)
+        n_pe = pe_rows * pe_cols
+        static_w = bg + (P_BASE_W
+                         + (P_PE_STATIC_MW * n_pe
+                            + P_VECTOR_STATIC_MW * vlen) * 1e-3 + 0.0)
+        idxs = np.arange(L)
+        last_present = np.where(present, idxs, -1).max(axis=1)
+        first_present = np.argmax(present, axis=1)
+        rows_n = np.arange(n)
+        w_b = np.array([q.weight_bytes for q in quants])
+        a_b = np.array([q.activation_bytes for q in quants])
+        kv_b = np.array([q.kv_bytes for q in quants])
+        mxr = np.array([q.matrix_rate_scale for q in quants])
+        vcr = np.array([q.vector_rate_scale for q in quants])
+        quant_idx = np.asarray(quant_idx, dtype=np.int32)
+        storage_idx = np.asarray(storage_idx, dtype=np.int64)
+        return cls(
+            n=n, pe_rows=pe_rows, pe_cols=pe_cols, vlen=vlen,
+            clock_ghz=np.asarray(clock_ghz, dtype=np.float64),
+            lvl_cap_gb=cap, lvl_bw_gbps=bw, lvl_lat_s=lat,
+            lvl_er_pj=er, lvl_ew_pj=ew,
+            lvl_present=present, lvl_onchip=onchip,
+            total_cap_gb=total_cap, eff_bw_gbps=eff,
+            onchip_bw=np.maximum(onchip_sum * 1e9, bw[:, 0] * 1e9),
+            static_w=static_w,
+            last_present=last_present.astype(np.int32),
+            er0_pj=er[rows_n, first_present],
+            ew0_pj=ew[rows_n, first_present],
+            w_bytes=w_b[quant_idx], a_bytes=a_b[quant_idx],
+            kv_bytes=kv_b[quant_idx], mx_rate=mxr[quant_idx],
+            vec_rate=vcr[quant_idx],
+            quant_idx=quant_idx, quants=tuple(quants),
+            df_idx=np.asarray(df_idx, dtype=np.int32),
+            order=_PLACEMENT_ORDERS[storage_idx],
+            is_equal=(storage_idx == _EQUAL_IDX),
+            bw_mx=np.asarray(bw_mx, dtype=np.float64),
+            bw_vec=np.asarray(bw_vec, dtype=np.float64),
+        )
+
+    @classmethod
+    def from_configs(cls, npus: Sequence[NPUConfig]) -> "NPUTable":
+        """SoA view of arbitrary NPUConfig objects (hand-built designs,
+        Table 6 configurations, decoded DSE points).
+
+        The slot count is padded to the canonical 6 (absent slots are
+        transparent) so every typical batch shares one jitted program
+        shape — taller hand-built hierarchies widen it."""
+        from .compute import Dataflow
+        n = len(npus)
+        L = max([6] + [len(c.hierarchy.levels) for c in npus])
+        lvl_rows = np.zeros((n, L, 6))
+        onchip = np.zeros((n, L), dtype=bool)
+        quants: list = []
+        qkey: dict = {}
+        quant_idx = np.zeros(n, dtype=np.int32)
+        df_map = {Dataflow.WEIGHT_STATIONARY: WS,
+                  Dataflow.INPUT_STATIONARY: IS,
+                  Dataflow.OUTPUT_STATIONARY: OS}
+        df_idx = np.zeros(n, dtype=np.int32)
+        st_idx = np.zeros(n, dtype=np.int64)
+        bw_mx = np.zeros(n)
+        bw_vec = np.zeros(n)
+        pe_r = np.zeros(n)
+        pe_c = np.zeros(n)
+        vlen = np.zeros(n)
+        clock = np.zeros(n)
+        for i, c in enumerate(npus):
+            for j, (row, is_on) in enumerate(
+                    c.hierarchy.level_param_rows()):
+                lvl_rows[i, j] = row
+                onchip[i, j] = is_on
+            q = c.quant
+            k = (q.weight, q.activation, q.kv_cache)
+            if k not in qkey:
+                qkey[k] = len(quants)
+                quants.append(q)
+            quant_idx[i] = qkey[k]
+            df_idx[i] = df_map[c.strategy.dataflow]
+            st_idx[i] = _STORAGE_LIST.index(c.strategy.storage_priority)
+            bw_mx[i], bw_vec[i] = c.strategy.bw_split()
+            pe_r[i], pe_c[i] = c.compute.pe_rows, c.compute.pe_cols
+            vlen[i] = c.compute.vlen
+            clock[i] = c.compute.clock_ghz
+        return cls.from_parts(pe_r, pe_c, vlen, clock, lvl_rows, onchip,
+                              quants, quant_idx, df_idx, st_idx,
+                              bw_mx, bw_vec)
+
+
+# ---------------------------------------------------------------------------
+# Workload tables: per-(model, trace, phase) constants shared by all
+# designs, expanded over the batch-choice ladder and the distinct
+# QuantConfigs present in the batch.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=512)
+def _phase_tables(dims: ModelDims, trace: Trace, phase: Phase,
+                  batch: Optional[int], quants: tuple) -> dict:
+    """Numpy tables: capacity-need / placement-size per (quant, batch
+    choice), GEMM geometry per batch choice, byte terms per quant.
+
+    All footprint entries come from the scalar model's own lru-cached
+    functions, so the jitted feasibility comparison `need <= capacity`
+    reproduces `max_*_batch` / `place_data` decisions exactly.
+    """
+    if phase is Phase.PREFILL:
+        choices = (batch,) if batch is not None else PREFILL_BATCH_CHOICES
+        ctx_cap = trace.prompt_tokens          # capacity at prompt KV
+        q_cap = trace.prompt_tokens            # activations at full prompt
+        ctx_traffic = trace.prompt_tokens
+        n_layers_mult = dims.n_layers + dims.n_encoder_layers
+    else:
+        choices = (batch,) if batch is not None else DECODE_BATCH_CHOICES
+        ctx_cap = trace.prompt_tokens + trace.gen_tokens   # full-context KV
+        q_cap = 1
+        ctx_traffic = trace.prompt_tokens + trace.gen_tokens // 2
+        n_layers_mult = dims.n_layers
+    U, NB = len(quants), len(choices)
+    need = np.zeros((U, NB))
+    sizes = np.zeros((U, NB, 3))
+    kvw = np.zeros((U, NB))
+    actx = np.zeros((U, NB))
+    actx_h = np.zeros((U, NB))
+    gm_num = gm_cls = vec_el = None
+    hd_num = hd_cls = vec_h = None
+    for ui, q in enumerate(quants):
+        w = weight_footprint_gb(dims, q)
+        for bi, b in enumerate(choices):
+            kv = kv_footprint_gb(dims, b, ctx_cap, q)
+            act = activation_footprint_gb(dims, b, q_cap, q)
+            if batch is None:
+                need[ui, bi] = w + kv + act    # max_*_batch order
+            else:
+                # explicit batch: only place_data's sum([w, act, kv])
+                # + 1e-9 slack gate applies
+                need[ui, bi] = (0.0 + w + act) + kv
+            sizes[ui, bi] = (w, act, kv)
+            tr = layer_traffic_cached(dims, phase, b, ctx_traffic, q)
+            kvw[ui, bi] = tr.kv_write_bytes
+            actx[ui, bi] = tr.act_extra_bytes
+            hd = lm_head_traffic_cached(dims, b, 1, q)
+            actx_h[ui, bi] = hd.act_extra_bytes
+            if ui == 0:
+                num, cls_ = tr.gemm_geometry()
+                hnum, hcls = hd.gemm_geometry()
+                if bi == 0:
+                    G, GH = num.shape[0], hnum.shape[0]
+                    gm_num = np.zeros((NB, G, 5))
+                    hd_num = np.zeros((NB, GH, 5))
+                    gm_cls, hd_cls = cls_, hcls
+                    vec_el = np.zeros(NB)
+                    vec_h = np.zeros(NB)
+                gm_num[bi], hd_num[bi] = num, hnum
+                vec_el[bi] = tr.vector_elems
+                vec_h[bi] = hd.vector_elems
+            else:                   # geometry must be quant-independent
+                num, cls_ = tr.gemm_geometry()
+                assert np.array_equal(num, gm_num[bi]) \
+                    and np.array_equal(cls_, gm_cls), \
+                    "GEMM geometry unexpectedly depends on quantization"
+    return {
+        "choices": np.asarray(choices, dtype=np.float64),
+        "need": need, "sizes": sizes, "kvw": kvw, "actx": actx,
+        "gm_num": gm_num, "gm_cls": gm_cls, "vec_el": vec_el,
+        "hd_num": hd_num, "hd_cls": hd_cls, "vec_h": vec_h,
+        "actx_h": actx_h,
+        "n_layers_mult": float(n_layers_mult),
+        "token_mult": float(trace.prompt_tokens)
+        if phase is Phase.PREFILL else 1.0,
+        "tol": 1e-9 if batch is not None else 0.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# The jitted program.  Built once per array-shape signature
+# (slots, batch choices, gemm counts) and cached; model/trace constants
+# enter as dynamic scalars so switching workloads does not recompile.
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _build_program(L: int, NB: int, G: int, GH: int):
+
+    def one(d, t, tol, token_mult, n_mult):
+        # quant-dependent workload rows arrive pre-gathered per design
+        # (numpy-side), so the distinct-quant count never enters the
+        # traced shapes — one program per (L, NB, G, GH) signature.
+        cap_total = d["total_cap"]
+        ok = d["need"] <= cap_total + tol                  # [NB]
+        feasible = jnp.any(ok)
+        b_idx = jnp.maximum(jnp.max(jnp.where(ok, jnp.arange(NB), -1)), 0)
+        sizes3 = d["sizes"][b_idx]                         # (w, act, kv) GB
+        cap = d["cap"]                                     # [L]
+
+        # ---- placement (dataflow.place_data) ----------------------------
+        def greedy():
+            placed = jnp.zeros((L, 3))
+            free = cap
+            for j in range(3):
+                cls_oh = jax.nn.one_hot(d["order"][j], 3,
+                                        dtype=jnp.float64)
+                rem = jnp.sum(sizes3 * cls_oh)
+                active = jnp.asarray(True)
+                for lv in range(L):
+                    take = jnp.where(active,
+                                     jnp.minimum(rem, free[lv]), 0.0)
+                    placed = placed.at[lv].add(cls_oh * take)
+                    free = free.at[lv].add(-take)
+                    rem = rem - take
+                    active = active & (rem > 1e-12)
+            return placed
+
+        def equal():
+            placed = jnp.zeros((L, 3))
+            remaining = sizes3
+            for lv in range(L):
+                rem_total = (remaining[0] + remaining[1]) + remaining[2]
+                go = rem_total > 1e-12
+                share = jnp.minimum(
+                    1.0, cap[lv] / jnp.where(go, rem_total, 1.0))
+                take = jnp.where(go, remaining * share, 0.0)
+                placed = placed.at[lv].set(take)
+                remaining = remaining - take
+            return placed
+
+        placed = jnp.where(d["is_equal"], equal(), greedy())
+        pos = sizes3 > 0
+        frac = jnp.where(pos[None, :],
+                         placed / jnp.where(pos, sizes3, 1.0)[None, :], 0.0)
+
+        # ---- on-chip staging bytes (Placement.on_chip_bytes) ------------
+        stage3 = jnp.zeros(3)
+        for lv in range(L):
+            stage3 = stage3 + jnp.where(
+                d["onchip"][lv], frac[lv] * sizes3 * 1e9, 0.0)
+        n_pe = d["pe_r"] * d["pe_c"]
+        min_stage = n_pe * d["a_bytes"]
+        # class order: WEIGHT, ACT, KV, SCRATCH
+        stage4 = jnp.stack([stage3[0], stage3[1], stage3[2],
+                            jnp.maximum(stage3[1], min_stage)])
+        bytes4 = jnp.stack([d["w_bytes"], d["a_bytes"], d["kv_bytes"],
+                            d["a_bytes"]])
+
+        # ---- resident-fraction chains (alpha_i per class) ---------------
+        def alpha_chain(fr):
+            alphas = []
+            remaining = 1.0
+            for lv in range(L):
+                a = jnp.where(
+                    remaining <= 1e-12, 1.0,
+                    jnp.minimum(1.0, fr[lv] / jnp.where(
+                        remaining <= 1e-12, 1.0, remaining)))
+                a = jnp.where(d["present"][lv], a, 0.0)
+                alphas.append(a)
+                remaining = remaining - fr[lv]
+            arr = jnp.stack(alphas)
+            return jnp.where(jnp.arange(L) == d["last_present"], 1.0, arr)
+
+        alphas3 = [alpha_chain(frac[:, c]) for c in range(3)]
+
+        # ---- recursive double-buffered transfer (hierarchy Eqs. 3-5) ----
+        def transfer(nbytes, alphas, share):
+            xs = []
+            x = nbytes
+            for lv in range(L):
+                xs.append(x)
+                x = (1.0 - alphas[lv]) * x
+            T = jnp.float64(-jnp.inf)
+            for lv in reversed(range(L)):
+                eff = d["eff"][lv] * share
+                t_here = d["lat"][lv] + jnp.where(
+                    xs[lv] > 0, xs[lv] / (eff * 1e9), 0.0)
+                Ti = jnp.where(xs[lv] <= 0, d["lat"][lv],
+                               jnp.maximum(t_here, T))
+                T = jnp.where(d["present"][lv], Ti, T)
+            return T
+
+        # ---- one layer pass (perfmodel._layer_time_and_energy) ----------
+        fill = d["pe_r"] + d["pe_c"]
+        r, c = d["pe_r"], d["pe_c"]
+
+        def gemm_terms(m, k, n_, count):
+            """Per-dataflow (cycles, a_mult, b_mult) triples, stacked
+            WS/IS/OS (the perfmodel._ALL_DATAFLOWS order)."""
+            zero = (jnp.minimum(jnp.minimum(m, k), n_) <= 0) | (count <= 0)
+            cycles = []
+            for dfk in (WS, IS, OS):
+                rows = k if dfk == WS else m
+                pack = jnp.maximum(1.0, jnp.minimum(
+                    jnp.floor(count),
+                    jnp.floor(r / jnp.maximum(1.0, rows))))
+                rows_used = rows * pack
+                eff_count = jnp.ceil(count / pack)
+                if dfk == WS:
+                    tiles = jnp.ceil(rows_used / r) * jnp.ceil(n_ / c)
+                    stream = m
+                elif dfk == IS:
+                    tiles = jnp.ceil(rows_used / r) * jnp.ceil(k / c)
+                    stream = n_
+                else:
+                    tiles = jnp.ceil(rows_used / r) * jnp.ceil(n_ / c)
+                    stream = k
+                cyc = (tiles * stream + fill) * eff_count
+                cycles.append(jnp.where(zero, 0.0, cyc))
+            return jnp.stack(cycles), zero
+
+        def gemm_mults(dfk, m, k, n_, a_b, b_b, o_b, st_a, st_b, st_o):
+            a_cap = jnp.ceil(n_ / c)
+            b_cap = jnp.ceil(m / r)
+            if dfk == WS:
+                stage = jnp.maximum(st_b, r * c * b_b)
+                a_m = jnp.minimum(a_cap, jnp.ceil(k * n_ * b_b / stage))
+                return jnp.maximum(1.0, a_m), jnp.float64(1.0)
+            if dfk == IS:
+                stage = jnp.maximum(st_a, r * c * a_b)
+                b_m = jnp.minimum(b_cap, jnp.ceil(m * k * a_b / stage))
+                return jnp.float64(1.0), jnp.maximum(1.0, b_m)
+            stage = jnp.maximum(st_o, r * c * o_b)
+            tt = jnp.sqrt(stage / jnp.maximum(o_b, 1e-9))
+            a_m = jnp.minimum(a_cap, jnp.ceil(n_ / jnp.maximum(tt, c)))
+            b_m = jnp.minimum(b_cap, jnp.ceil(m / jnp.maximum(tt, r)))
+            return jnp.maximum(1.0, a_m), jnp.maximum(1.0, b_m)
+
+        def layer_pass(gm_num, gm_cls, n_gemms, vec_elems, act_extra,
+                       kv_write):
+            out4 = jnp.zeros(4)
+            t_gemm = 0.0
+            macs = 0.0
+            for g in range(n_gemms):
+                m, k, n_, count, chunks = (gm_num[b_idx, g, j]
+                                           for j in range(5))
+                acls, bcls, ocls = (gm_cls[g, j] for j in range(3))
+                cyc3, zero = gemm_terms(m, k, n_, count)
+                # dataflow: strategy for weight-bearing GEMMs, best-of-3
+                # for attention-internal ones (argmin = first minimum,
+                # matching min() over _ALL_DATAFLOWS)
+                df_g = jnp.where(bcls == 0, d["df_idx"],
+                                 jnp.argmin(cyc3).astype(jnp.int32))
+                sec = cyc3[df_g] / (d["clock"] * 1e9)
+                t_gemm = t_gemm + sec
+                macs = macs + m * k * n_ * count
+                a_b = bytes4[acls]
+                b_b = bytes4[bcls]
+                o_b = bytes4[ocls]
+                mults = [gemm_mults(dfk, m, k, n_, a_b, b_b, o_b,
+                                    stage4[acls], stage4[bcls],
+                                    stage4[ocls]) for dfk in (WS, IS, OS)]
+                am3 = jnp.stack([mm[0] for mm in mults])
+                bm3 = jnp.stack([mm[1] for mm in mults])
+                a_mult = jnp.where(zero, 1.0, am3[df_g])
+                b_mult = jnp.where(zero, 1.0, bm3[df_g])
+                a_once = m * k * count * a_b
+                b_once = k * n_ * count * b_b
+                a_panel = m * k * a_b / jnp.maximum(1.0, chunks)
+                b_panel = k * n_ * b_b
+
+                def add(out, cls_i, first, reread, panel):
+                    oh = jax.nn.one_hot(cls_i, 4, dtype=jnp.float64)
+                    out = out + oh * first
+                    to_scr = (cls_i == 3) | (
+                        (cls_i == 1) & (panel <= stage4[1] + 1e-9))
+                    oh_r = jnp.where(to_scr,
+                                     jax.nn.one_hot(3, 4,
+                                                    dtype=jnp.float64), oh)
+                    return out + jnp.where(reread > 0, oh_r * reread, 0.0)
+
+                out4 = add(out4, acls, a_once, a_once * (a_mult - 1.0),
+                           a_panel)
+                out4 = add(out4, bcls, b_once, b_once * (b_mult - 1.0),
+                           b_panel)
+                out4 = out4 + jax.nn.one_hot(ocls, 4, dtype=jnp.float64) \
+                    * (m * n_ * count * o_b)
+            out4 = out4 + jnp.array([0.0, 1.0, 0.0, 0.0]) * act_extra
+            out4 = out4 + jnp.array([0.0, 0.0, 1.0, 0.0]) * kv_write
+
+            # compute time: matrix & vector engines in parallel
+            t_gemm = t_gemm / d["mx_rate"]
+            t_vec = jnp.where(
+                vec_elems > 0, jnp.ceil(vec_elems / d["vlen"]), 0.0) \
+                / (d["clock"] * 1e9) / d["vec_rate"]
+            t_compute = jnp.maximum(t_gemm, t_vec)
+
+            # per-stream transfer time
+            t_w = jnp.where(out4[0] > 0,
+                            transfer(out4[0], alphas3[0], d["bw_mx"]), 0.0)
+            t_kv = jnp.where(out4[2] > 0,
+                             transfer(out4[2], alphas3[2], d["bw_mx"]), 0.0)
+            t_a = jnp.where(out4[1] > 0,
+                            transfer(out4[1], alphas3[1], d["bw_vec"]), 0.0)
+            t_scr = jnp.where(out4[3] > 0, out4[3] / d["onchip_bw"], 0.0)
+            t_matrix = t_w + t_kv
+            t_vecmem = t_a + t_scr
+            t_layer = jnp.maximum(jnp.maximum(t_compute, t_matrix),
+                                  t_vecmem)
+            bneck = jnp.where(
+                t_layer == t_compute, 0,
+                jnp.where(t_layer == t_matrix, 1, 2)).astype(jnp.int32)
+
+            # energy
+            e_comp = (E_MAC_PJ * macs + E_VECTOR_OP_PJ * vec_elems) * 1e-12
+            e_mem = 0.0
+            wr3 = jnp.stack([
+                jnp.float64(0.0), jnp.float64(0.5),
+                jnp.where(out4[2] > 0,
+                          jnp.minimum(1.0, kv_write / jnp.where(
+                              out4[2] > 0, out4[2], 1.0)), 0.0)])
+            for cls_i in range(3):
+                nb = out4[cls_i]
+                wr = wr3[cls_i]
+                for lv in range(L):
+                    bits = nb * frac[lv, cls_i] * 8.0
+                    e_mem = e_mem + jnp.where(
+                        nb > 0,
+                        d["er"][lv] * bits * (1 - wr) * 1e-12, 0.0)
+                    e_mem = e_mem + jnp.where(
+                        nb > 0, d["ew"][lv] * bits * wr * 1e-12, 0.0)
+            e_mem = e_mem + jnp.where(
+                out4[3] > 0,
+                (d["er0"] + d["ew0"]) / 2.0 * out4[3] * 8.0 * 1e-12,
+                0.0)
+            e_static = d["static_w"] * t_layer
+            e_layer = e_comp + e_mem + e_static
+            bd = (t_compute, t_matrix, t_vecmem, t_scr,
+                  out4[0], out4[1], out4[2], out4[3])
+            return t_layer, e_layer, bneck, bd
+
+        t_layer, e_layer, bneck, bd = layer_pass(
+            t["gm_num"], t["gm_cls"], G, t["vec_el"][b_idx],
+            d["actx"][b_idx], d["kvw"][b_idx])
+        t_head, e_head, _, _ = layer_pass(
+            t["hd_num"], t["hd_cls"], GH, t["vec_h"][b_idx],
+            d["actx_h"][b_idx], 0.0)
+
+        latency = t_layer * n_mult + t_head
+        energy = e_layer * n_mult + e_head
+        batch_val = t["choices"][b_idx]
+        tokens = batch_val * token_mult
+        tps = jnp.where(latency > 0, tokens / latency, 0.0)
+        power = jnp.where(latency > 0, energy / latency, 0.0)
+        ept = jnp.where(tokens > 0, energy / tokens, 0.0)
+        return {
+            "feasible": feasible,
+            "batch": batch_val,
+            "latency_s": latency,
+            "tokens": tokens,
+            "throughput_tps": tps,
+            "avg_power_w": power,
+            "energy_per_token_j": ept,
+            "compute_time_s": bd[0] * n_mult,
+            "memory_time_s": jnp.maximum(bd[1], bd[2]) * n_mult,
+            "bottleneck": bneck,
+            "compute_s": bd[0], "matrix_s": bd[1], "vector_s": bd[2],
+            "scratch_s": bd[3], "bytes_weights": bd[4],
+            "bytes_acts": bd[5], "bytes_kv": bd[6], "bytes_scratch": bd[7],
+        }
+
+    def run(d, t, tol, token_mult, n_mult):
+        return jax.vmap(lambda di: one(di, t, tol, token_mult, n_mult))(d)
+
+    return jax.jit(run)
+
+
+def _design_pytree(table: NPUTable) -> dict:
+    return {
+        "pe_r": table.pe_rows, "pe_c": table.pe_cols,
+        "vlen": table.vlen, "clock": table.clock_ghz,
+        "cap": table.lvl_cap_gb, "lat": table.lvl_lat_s,
+        "er": table.lvl_er_pj, "ew": table.lvl_ew_pj,
+        "present": table.lvl_present, "onchip": table.lvl_onchip,
+        "eff": table.eff_bw_gbps, "total_cap": table.total_cap_gb,
+        "onchip_bw": table.onchip_bw, "static_w": table.static_w,
+        "last_present": table.last_present,
+        "er0": table.er0_pj, "ew0": table.ew0_pj,
+        "w_bytes": table.w_bytes, "a_bytes": table.a_bytes,
+        "kv_bytes": table.kv_bytes, "mx_rate": table.mx_rate,
+        "vec_rate": table.vec_rate,
+        "df_idx": table.df_idx, "order": table.order,
+        "is_equal": table.is_equal,
+        "bw_mx": table.bw_mx, "bw_vec": table.bw_vec,
+    }
+
+
+def evaluate_batch_arrays(table: NPUTable, dims: ModelDims, trace: Trace,
+                          phase: Phase,
+                          batch: Optional[int] = None) -> dict:
+    """Score every design in `table` on (dims, trace, phase) in one
+    jitted call.  Returns numpy arrays keyed like PhaseResult fields
+    plus `feasible` (bool mask) and the mem-breakdown terms.
+
+    Runs in float64 under `jax.experimental.enable_x64` regardless of
+    the session default, so results track the scalar oracle.
+    """
+    t = _phase_tables(dims, trace, phase, batch, table.quants)
+    prog = _build_program(table.n_slots, len(t["choices"]),
+                          t["gm_num"].shape[1], t["hd_num"].shape[1])
+    tables = {k: t[k] for k in ("choices", "gm_num", "gm_cls", "vec_el",
+                                "hd_num", "hd_cls", "vec_h")}
+    d = _design_pytree(table)
+    uq = table.quant_idx
+    d["need"] = t["need"][uq]           # [n, NB]
+    d["sizes"] = t["sizes"][uq]         # [n, NB, 3]
+    d["kvw"] = t["kvw"][uq]
+    d["actx"] = t["actx"][uq]
+    d["actx_h"] = t["actx_h"][uq]
+    # bucket-pad the design axis to a power of two (replicating row 0)
+    # so varying DSE batch sizes reuse one compiled program per bucket;
+    # the 64 floor folds every small searcher batch (inits, NSGA-II
+    # child generations, TPE proposals) into a single compilation
+    n = table.n
+    bucket = 64
+    while bucket < n:
+        bucket *= 2
+    if bucket != n:
+        pad_idx = np.concatenate([np.arange(n),
+                                  np.zeros(bucket - n, dtype=np.int64)])
+        d = {k: np.asarray(v)[pad_idx] for k, v in d.items()}
+    with enable_x64():
+        out = prog(d, tables, t["tol"], t["token_mult"],
+                   t["n_layers_mult"])
+        out = {k: np.asarray(v)[:n] for k, v in out.items()}
+    return out
+
+
+def results_from_arrays(arrays: dict, phase: Phase) -> list:
+    """Materialize per-design PhaseResult objects (None when the
+    feasibility mask rejected the design) from `evaluate_batch_arrays`
+    output — the object-API compatibility layer over the SoA core."""
+    from .perfmodel import PhaseResult
+    out = []
+    feas = arrays["feasible"]
+    for i in range(len(feas)):
+        if not feas[i]:
+            out.append(None)
+            continue
+        bd = {"compute_s": float(arrays["compute_s"][i]),
+              "matrix_s": float(arrays["matrix_s"][i]),
+              "vector_s": float(arrays["vector_s"][i]),
+              "scratch_s": float(arrays["scratch_s"][i]),
+              "bytes_weights": float(arrays["bytes_weights"][i]),
+              "bytes_acts": float(arrays["bytes_acts"][i]),
+              "bytes_kv": float(arrays["bytes_kv"][i]),
+              "bytes_scratch": float(arrays["bytes_scratch"][i])}
+        out.append(PhaseResult(
+            phase=phase,
+            batch=int(arrays["batch"][i]),
+            latency_s=float(arrays["latency_s"][i]),
+            tokens=float(arrays["tokens"][i]),
+            throughput_tps=float(arrays["throughput_tps"][i]),
+            avg_power_w=float(arrays["avg_power_w"][i]),
+            energy_per_token_j=float(arrays["energy_per_token_j"][i]),
+            compute_time_s=float(arrays["compute_time_s"][i]),
+            memory_time_s=float(arrays["memory_time_s"][i]),
+            bottleneck=_BNECK_NAMES[int(arrays["bottleneck"][i])],
+            mem_breakdown=bd,
+        ))
+    return out
+
+
+def supports(dims: ModelDims, phase: Phase) -> bool:
+    """Whether the jitted path covers this (family, phase) — diffusion-LM
+    decode keeps its steps-per-token scalar path."""
+    return not (dims.family is Family.DLLM and phase is Phase.DECODE)
+
+
+def evaluate_batch_table(table: NPUTable, dims: ModelDims, trace: Trace,
+                         phase: Phase,
+                         batch: Optional[int] = None) -> list:
+    """`evaluate_batch_arrays` + PhaseResult materialization."""
+    if table.n == 0:
+        return []
+    return results_from_arrays(
+        evaluate_batch_arrays(table, dims, trace, phase, batch=batch),
+        phase)

@@ -49,6 +49,13 @@ class DataClass(enum.Enum):
                           # leave on-chip memory (flash-attention style)
 
 
+# Integer codes for the structure-of-arrays traffic export
+# (perfmodel_jit): indices match the stream order used by the
+# data-movement model (dataflow.WEIGHTS/ACTS/KV) plus SCRATCH = 3.
+CLASS_CODES = {DataClass.WEIGHT: 0, DataClass.ACT: 1,
+               DataClass.KV: 2, DataClass.SCRATCH: 3}
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelDims:
     """Architecture dimensions, the analytic model's view of a model."""
@@ -235,6 +242,20 @@ class LayerTraffic:
         self.vector_elems += other.vector_elems
         self.act_extra_bytes += other.act_extra_bytes
         self.kv_write_bytes += other.kv_write_bytes
+
+    def gemm_geometry(self) -> tuple:
+        """(numeric [G, 5] (m, k, n, count, a_chunks), class [G, 3]
+        (a_class, b_class, out_class) as `CLASS_CODES` ints) — the
+        structure-of-arrays view consumed by the jitted batch perfmodel.
+        The GEMM list order is preserved (evaluation sums follow it)."""
+        import numpy as np
+        num = np.array([[g.m, g.k, g.n, g.count, g.a_chunks]
+                        for g in self.gemms], dtype=np.float64)
+        cls = np.array([[CLASS_CODES[g.a_class], CLASS_CODES[g.b_class],
+                         CLASS_CODES[g.out_class]] for g in self.gemms],
+                       dtype=np.int32)
+        return num.reshape(len(self.gemms), 5), cls.reshape(
+            len(self.gemms), 3)
 
 
 def _attn_ops(dims: ModelDims, batch: int, q_len: int, kv_len: int,

@@ -1,3 +1,20 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+"""Version-tolerant Pallas TPU shims.
+
+JAX renamed the Pallas TPU compiler-parameter dataclass across releases
+(`pltpu.CompilerParams` in newer builds, `pltpu.TPUCompilerParams` in the
+0.4.x line this container ships).  All kernels import the name from here
+so one shim tracks the rename in both directions.
+"""
+
+from jax.experimental.pallas import tpu as _pltpu
+
+# Prefer the 0.4.x name (what this container ships); fall back to the
+# newer spelling so the kernels keep working across a JAX upgrade.
+TPUCompilerParams = getattr(_pltpu, "TPUCompilerParams", None) \
+    or getattr(_pltpu, "CompilerParams")
+
+__all__ = ["TPUCompilerParams"]

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import TPUCompilerParams
+
 DEFAULT_BLOCK_K = 512
 NEG_INF = -1e30
 
@@ -115,7 +117,7 @@ def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((group, 1), jnp.float32),
             pltpu.VMEM((group, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(t_arr, qf, kf, vf)

@@ -295,6 +295,35 @@ def test_bench_check_compare_timings():
     assert all(not ok for _, _, _, ok in verdicts)
 
 
+def test_bench_check_compare_jit_pool():
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.run import compare_jit_pool
+    base = {"jit_pool": {"speedup": 50.0}}
+    # healthy: above both the hard 10x floor and baseline/tolerance
+    ok = compare_jit_pool(base, {"jit_pool": {"speedup": 45.0,
+                                              "parity_mismatches": 0}}, 5.0)
+    assert ok == (45.0, 10.0, 0, True)
+    # below the hard floor -> regression even within tolerance of base
+    bad = compare_jit_pool(base, {"jit_pool": {"speedup": 8.0}}, 5.0)
+    assert not bad[-1]
+    # a large baseline raises the floor above 10x
+    big = {"jit_pool": {"speedup": 200.0}}
+    mid = compare_jit_pool(big, {"jit_pool": {"speedup": 30.0}}, 5.0)
+    assert mid[1] == pytest.approx(40.0) and not mid[-1]
+    # parity mismatches fail loudly regardless of speed
+    par = compare_jit_pool(base, {"jit_pool": {"speedup": 60.0,
+                                               "parity_mismatches": 2}}, 5.0)
+    assert not par[-1]
+    # pre-jit baselines skip the gate; missing fresh entry regresses
+    assert compare_jit_pool({"methods": {}}, {}, 5.0) is None
+    missing = compare_jit_pool(base, {}, 5.0)
+    assert missing[1] < 0 and not missing[-1]
+
+
 def test_bench_check_rejects_empty_baseline(tmp_path):
     import pathlib
     import sys

@@ -1,0 +1,195 @@
+"""Jitted structure-of-arrays perfmodel vs the scalar oracle.
+
+The contract (perfmodel.py module docstring): `perfmodel.evaluate` is
+the reference implementation; the jitted batch path must reproduce it
+at rtol 1e-5 with IDENTICAL feasibility decisions — same
+`InfeasibleConfig` set, same capacity-derived max batch, no float32
+off-by-one at the capacity boundary.
+
+The companion regression — that routing the searchers through the
+jitted path leaves the sha-pinned PR 2 seeded trajectories
+byte-identical — is asserted by
+tests/test_disagg_dse.py::test_single_device_trajectories_unchanged.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import LLADA_8B, LLAMA33_70B, QWEN3_32B
+from repro.core import baseline_npu, d1_npu, d2_npu, p1_npu, p2_npu
+from repro.core import perfmodel_jit as pj
+from repro.core.dse import space as sp
+from repro.core.perfmodel import (InfeasibleConfig, evaluate,
+                                  evaluate_batch, max_decode_batch,
+                                  max_prefill_batch)
+from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
+
+RTOL = 1e-5
+FIELDS = ("latency_s", "tokens", "throughput_tps", "avg_power_w",
+          "energy_per_token_j", "compute_time_s", "memory_time_s")
+
+
+def _scalar(npu, dims, phase, batch=None):
+    try:
+        return evaluate(npu, dims, OSWORLD_LIBREOFFICE, phase, batch=batch)
+    except (InfeasibleConfig, ValueError):
+        return None
+
+
+def _assert_match(want, got, label):
+    assert (want is None) == (got is None), f"feasibility differs @ {label}"
+    if want is None:
+        return
+    assert got.batch == want.batch, f"max batch differs @ {label}"
+    assert got.bottleneck == want.bottleneck, label
+    for f in FIELDS:
+        assert getattr(got, f) == pytest.approx(
+            getattr(want, f), rel=RTOL), f"{f} @ {label}"
+    for k, v in want.mem_breakdown.items():
+        assert got.mem_breakdown[k] == pytest.approx(v, rel=RTOL), \
+            f"breakdown {k} @ {label}"
+
+
+def _valid_single_designs(seed, n):
+    rng = np.random.default_rng(seed)
+    xs = sp.random_designs(rng, 4 * n)
+    xs = xs[sp.valid_mask(xs)]
+    assert len(xs) >= n, "raw validity unexpectedly low"
+    return xs[:n]
+
+
+# ---------------------------------------------------------------------------
+# Property test: >= 200 random valid designs x 2 paper models x 2 phases
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def design_pool():
+    xs = _valid_single_designs(0, 220)
+    return xs, sp.decode_batch(xs), [sp.decode(x) for x in xs]
+
+
+@pytest.mark.parametrize("dims", [QWEN3_32B, LLAMA33_70B],
+                         ids=lambda d: d.name)
+@pytest.mark.parametrize("phase", [Phase.PREFILL, Phase.DECODE],
+                         ids=lambda p: p.value)
+def test_jit_matches_scalar_on_random_designs(design_pool, dims, phase):
+    xs, table, npus = design_pool
+    got = pj.evaluate_batch_table(table, dims, OSWORLD_LIBREOFFICE, phase)
+    assert len(got) == len(xs) >= 200
+    n_feasible = 0
+    for x, npu, g in zip(xs, npus, got):
+        want = _scalar(npu, dims, phase)
+        n_feasible += want is not None
+        _assert_match(want, g, f"{dims.name}/{phase.value}/{list(x)}")
+    assert n_feasible >= len(xs) // 2      # the sweep exercises real designs
+
+
+@pytest.mark.parametrize("phase", [Phase.PREFILL, Phase.DECODE],
+                         ids=lambda p: p.value)
+def test_jit_matches_scalar_on_paired_halves(phase):
+    ps = sp.PairedSpace()
+    rng = np.random.default_rng(3)
+    pairs = ps.random_designs(rng, 48)
+    pre_tab, dec_tab = ps.decode_batch(pairs)
+    half_tab = pre_tab if phase is Phase.PREFILL else dec_tab
+    half_xs = pairs[:, :sp.N_DIMS] if phase is Phase.PREFILL \
+        else pairs[:, sp.N_DIMS:]
+    got = pj.evaluate_batch_table(half_tab, QWEN3_32B,
+                                  OSWORLD_LIBREOFFICE, phase)
+    for x, g in zip(half_xs, got):
+        want = _scalar(sp.decode(x), QWEN3_32B, phase)
+        _assert_match(want, g, f"paired/{phase.value}/{list(x)}")
+
+
+# ---------------------------------------------------------------------------
+# Feasibility boundary: the jitted mask must reject exactly the designs
+# whose scalar max_*_batch raises InfeasibleConfig, and agree on the
+# capacity-maximal batch (no float32 off-by-one in the capacity sums).
+# ---------------------------------------------------------------------------
+
+def test_feasibility_boundary_and_max_batch(design_pool):
+    xs, table, npus = design_pool
+    for phase, max_batch in ((Phase.PREFILL, max_prefill_batch),
+                             (Phase.DECODE, max_decode_batch)):
+        arrs = pj.evaluate_batch_arrays(table, LLAMA33_70B,
+                                        OSWORLD_LIBREOFFICE, phase)
+        for i, npu in enumerate(npus):
+            try:
+                want = max_batch(npu, LLAMA33_70B, OSWORLD_LIBREOFFICE)
+            except InfeasibleConfig:
+                want = None
+            if want is None:
+                assert not arrs["feasible"][i], npu.name
+            else:
+                assert arrs["feasible"][i], npu.name
+                assert int(arrs["batch"][i]) == want, npu.name
+
+
+def test_explicit_batch_override_parity():
+    xs = _valid_single_designs(7, 24)
+    table = sp.decode_batch(xs)
+    npus = [sp.decode(x) for x in xs]
+    # batch=4 is feasible for some designs and capacity-infeasible for
+    # others -> exercises the place_data (+1e-9 slack) gate both ways
+    for phase in (Phase.PREFILL, Phase.DECODE):
+        got = pj.evaluate_batch_table(table, QWEN3_32B,
+                                      OSWORLD_LIBREOFFICE, phase, batch=4)
+        statuses = {g is not None for g in got}
+        for x, npu, g in zip(xs, npus, got):
+            want = _scalar(npu, QWEN3_32B, phase, batch=4)
+            _assert_match(want, g, f"batch=4/{phase.value}/{list(x)}")
+        assert statuses, "empty batch"
+
+
+# ---------------------------------------------------------------------------
+# Object-API routing (evaluate_batch -> NPUTable.from_configs) and the
+# scalar fallback for the diffusion-LM decode path
+# ---------------------------------------------------------------------------
+
+def test_evaluate_batch_routes_table6_configs_through_jit():
+    npus = [baseline_npu(), p1_npu(), d1_npu(), p2_npu(), d2_npu()]
+    for phase in (Phase.PREFILL, Phase.DECODE):
+        got = evaluate_batch(npus, LLAMA33_70B, OSWORLD_LIBREOFFICE, phase)
+        ref = evaluate_batch(npus, LLAMA33_70B, OSWORLD_LIBREOFFICE, phase,
+                             use_jit=False)
+        for npu, g, w in zip(npus, got, ref):
+            _assert_match(w, g, f"table6/{npu.name}/{phase.value}")
+
+
+def test_dllm_decode_falls_back_to_oracle():
+    assert not pj.supports(LLADA_8B, Phase.DECODE)
+    assert pj.supports(LLADA_8B, Phase.PREFILL)
+    npus = [p1_npu(), d2_npu()]
+    got = evaluate_batch(npus, LLADA_8B, OSWORLD_LIBREOFFICE, Phase.DECODE)
+    for npu, g in zip(npus, got):
+        want = _scalar(npu, LLADA_8B, Phase.DECODE)
+        assert (want is None) == (g is None)
+        if want is not None:
+            assert g.throughput_tps == want.throughput_tps
+            assert g.energy_per_token_j == want.energy_per_token_j
+
+
+def test_evaluate_batch_cache_and_keys_semantics():
+    npus = [p1_npu(), d1_npu(), p1_npu()]
+    cache = {}
+    keys = [n.name for n in npus]
+    got = evaluate_batch(npus, QWEN3_32B, OSWORLD_LIBREOFFICE,
+                         Phase.PREFILL, keys=keys, cache=cache)
+    assert set(cache) == {"P1", "D1"}
+    again = evaluate_batch(npus, QWEN3_32B, OSWORLD_LIBREOFFICE,
+                           Phase.PREFILL, keys=keys, cache=cache)
+    for a, b in zip(got, again):
+        assert (a is None) == (b is None)
+        if a is not None:
+            assert b.throughput_tps == a.throughput_tps
+    with pytest.raises(ValueError, match="keys for"):
+        evaluate_batch(npus, QWEN3_32B, OSWORLD_LIBREOFFICE,
+                       Phase.PREFILL, keys=keys[:1])
+    # a None key opts a config out of caching: evaluated, never stored
+    cache2 = {}
+    got2 = evaluate_batch([p1_npu(), d1_npu()], QWEN3_32B,
+                          OSWORLD_LIBREOFFICE, Phase.PREFILL,
+                          keys=[None, "D1"], cache=cache2)
+    assert set(cache2) == {"D1"}
+    assert got2[0] is not None
+    assert got2[0].throughput_tps == got[0].throughput_tps

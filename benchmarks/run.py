@@ -30,11 +30,16 @@ gates the jitted perfmodel: the fresh ``jit_pool`` entry
 (jitted-vs-scalar candidate-pool speedup, see bench_dse.pool_rows)
 must stay above both the hard 10x floor and ``1/tolerance`` of the
 baseline speedup, and must report zero jit/scalar parity mismatches —
-a silent regression of the jitted path fails loudly here.  Refresh the
-baseline after an intentional perf change with::
+a silent regression of the jitted path fails loudly here.  Finally it
+reruns the seeded 4-role extreme-heterogeneity system search
+(bench_extreme, smoke budget): the fresh ``extreme_system``
+tokens/joule must stay at or above both the hard 0.276 floor (the PR 2
+searched pair) and the committed baseline, within the timing
+tolerance.  Refresh the baseline after an intentional perf change
+with::
 
   BENCH_DSE_JSON=benchmarks/BENCH_dse.json \\
-      PYTHONPATH=src python -m benchmarks.run --only fig6 --smoke
+      PYTHONPATH=src python -m benchmarks.run --only "fig6,fig9" --smoke
 """
 
 import argparse
@@ -65,6 +70,12 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_dse.json")
 # through decode_batch + the jitted evaluator must beat the scalar
 # oracle loop by at least this factor, regardless of the baseline.
 JIT_SPEEDUP_FLOOR = 10.0
+
+# Acceptance floor for the searched 4-role extreme-heterogeneity system
+# (bench_extreme): its seeded tokens/joule must at least match the PR 2
+# searched prefill/decode *pair* on the same workload, regardless of
+# the committed baseline.
+EXTREME_TOKJ_FLOOR = 0.276
 
 
 def compare_timings(base: dict, fresh: dict, tolerance: float) -> list:
@@ -105,6 +116,34 @@ def compare_jit_pool(base: dict, fresh: dict, tolerance: float):
     return (g["speedup"], floor, bad, g["speedup"] >= floor and bad == 0)
 
 
+def compare_extreme(base: dict, fresh: dict, tolerance: float):
+    """Extreme-system regression verdict, or None when the baseline
+    predates the bench_extreme entry.
+
+    Returns (fresh_tokj, tokj_floor, fresh_us, limit_us, ok): the
+    seeded searched-system tokens/joule must reach both the hard
+    `EXTREME_TOKJ_FLOOR` (the PR 2 searched pair) and ~the committed
+    baseline (the search is seeded, so a drop means a modeling or
+    search regression), and its runtime must stay within
+    ``tolerance x`` of the baseline.  A missing fresh entry counts as
+    a regression (limit < 0 marks it), and a baseline captured at a
+    different search budget than the fresh smoke run is flagged
+    (floor = -2: refresh the baseline with ``--smoke``) rather than
+    compared apples-to-oranges."""
+    b = base.get("extreme_system")
+    if not b or not isinstance(b.get("tokens_per_joule"), (int, float)):
+        return None
+    g = fresh.get("extreme_system")
+    if not g or not isinstance(g.get("tokens_per_joule"), (int, float)):
+        return (float("nan"), EXTREME_TOKJ_FLOOR, float("nan"), -1.0, False)
+    if b.get("n_total") != g.get("n_total"):
+        return (g["tokens_per_joule"], -2.0, g["us_per_run"], -2.0, False)
+    floor = max(EXTREME_TOKJ_FLOOR, b["tokens_per_joule"] * (1 - 1e-3))
+    limit = b["us_per_run"] * tolerance
+    ok = g["tokens_per_joule"] >= floor and g["us_per_run"] <= limit
+    return (g["tokens_per_joule"], floor, g["us_per_run"], limit, ok)
+
+
 def check_perf(baseline_path: str, tolerance: float) -> int:
     """Fresh --smoke DSE timings vs the committed baseline.
 
@@ -131,9 +170,12 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
     prev_json_path = os.environ.get("BENCH_DSE_JSON")
     os.environ["BENCH_DSE_JSON"] = fresh_path
     try:
-        from benchmarks import bench_dse
+        from benchmarks import bench_dse, bench_extreme
         for line in bench_dse.run(smoke=True):
             print(line)
+        if base.get("extreme_system"):   # gate the system search too
+            for line in bench_extreme.run(smoke=True):
+                print(line)
         with open(fresh_path) as f:
             fresh = json.load(f)
     finally:
@@ -174,12 +216,38 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
                 failures.append(
                     f"jit_pool: jitted-vs-scalar speedup {speedup:.1f}x "
                     f"below floor {floor:.1f}x")
+    ext = compare_extreme(base, fresh, tolerance)
+    if ext is not None:
+        tokj, floor_tokj, got_us, limit_us, ok = ext
+        if floor_tokj == -2.0:
+            failures.append(
+                "extreme_system: baseline search budget differs from the "
+                "fresh --smoke run; refresh the baseline with "
+                "BENCH_DSE_JSON=benchmarks/BENCH_dse.json "
+                "python -m benchmarks.run --only fig6,fig9 --smoke")
+        elif limit_us < 0:
+            failures.append("extreme_system: missing from fresh run")
+        else:
+            print(f"check_extreme_system,{got_us:.1f},"
+                  f"tokJ={tokj:.3f} floor={floor_tokj:.3f} "
+                  f"limit_us={limit_us:.1f} {'ok' if ok else 'FAIL'}")
+            if tokj < floor_tokj:
+                failures.append(
+                    f"extreme_system: searched tokens/joule {tokj:.3f} "
+                    f"below floor {floor_tokj:.3f}")
+            if got_us > limit_us:
+                failures.append(
+                    f"extreme_system: {got_us/1e6:.2f}s/run > "
+                    f"{tolerance:g}x baseline "
+                    f"{limit_us/tolerance/1e6:.2f}s/run")
     if failures:
         print("PERF REGRESSION:\n  " + "\n  ".join(failures), file=sys.stderr)
         return 1
     print(f"perf check passed ({len(base.get('methods', {}))} methods "
           f"within {tolerance:g}x of baseline"
-          + (", jit_pool above floor)" if jit is not None else ")"))
+          + (", jit_pool above floor" if jit is not None else "")
+          + (", extreme_system above floor" if ext is not None else "")
+          + ")")
     return 0
 
 

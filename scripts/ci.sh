@@ -8,8 +8,10 @@
 #    bench and fails when any search method exceeds --tolerance x its
 #    committed baseline (benchmarks/BENCH_dse.json), when the jitted
 #    perfmodel's pool-scoring speedup over the scalar oracle drops
-#    below the 10x floor (or 1/tolerance of the baseline speedup), or
-#    when the jitted path diverges from the oracle on the bench sample.
+#    below the 10x floor (or 1/tolerance of the baseline speedup),
+#    when the jitted path diverges from the oracle on the bench sample,
+#    or when the seeded extreme-system search (bench_extreme) falls
+#    below its committed tokens/joule baseline / the 0.276 pair floor.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

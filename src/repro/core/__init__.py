@@ -11,7 +11,9 @@ The paper's primary contribution, as a composable library:
   perfmodel   phase evaluation -> throughput/power/token-per-joule
   npu         one co-design point (Table 2) incl. the paper's Table 6 configs
   emulator    transaction-level cross-validation (Section 5.6)
-  disagg      PD-disaggregated system model (Sections 5.3/5.5)
+  disagg      N-device disaggregated system model: Role/SystemTopology
+              composition from plain PD pairs to extreme-heterogeneity
+              layer-group + decode-phase splits (Sections 5.3/5.5)
   dse         Sobol + GP/EHVI MOBO + NSGA-II + MO-TPE + random (Section 4.4)
   quant       MX formats + accuracy proxy (Table 3)
 """
@@ -19,6 +21,10 @@ The paper's primary contribution, as a composable library:
 from .compute import ComputeConfig, Dataflow, gemm_cycles, vector_seconds
 from .dataflow import (BandwidthPriority, SoftwareStrategy, StoragePriority,
                        place_data)
+from .disagg import (EXTREME_4ROLE, PD_PAIR, DisaggResult, Role,
+                     SystemResult, SystemTopology, evaluate_disagg_batch,
+                     evaluate_disaggregated, evaluate_system,
+                     evaluate_system_batch)
 from .hierarchy import (MemoryHierarchy, MemoryLevel, ShorelineError,
                         max_stacks)
 from .memtech import CATALOG, MemKind, MemoryTechnology

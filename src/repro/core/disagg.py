@@ -1,25 +1,63 @@
-"""Prefill/Decode-disaggregated system model (paper Sections 5.3, 5.5).
+"""N-device disaggregated system model (paper Sections 5.3, 5.5).
 
-A disaggregated serving system pairs a prefill-optimized device (or fleet)
-with a decode-optimized one; finished prefills hand their KV cache to the
-decode device over an interconnect (the paper models NVLink, following
-LLMCompass).  End-to-end metrics:
+A disaggregated serving system assigns each *role* of the inference
+pipeline to a dedicated device with its own memory system; finished
+stages hand their state to the next device over an interconnect (the
+paper models NVLink, following LLMCompass).
 
-  TTFT  = prefill latency + KV transfer time
+Role / topology model
+---------------------
+`Role` names one pipeline stage and how the full-model workload is
+restricted for the device serving it:
+
+  * ``phase`` — PREFILL or DECODE (which per-phase evaluator scores it);
+  * ``groups`` — layer-group restriction ("all" | "attn" | "ffn"): the
+    Section 5.5 prefill split by layer group (Fig. 9 left), realized as
+    `ModelDims.layer_groups` so footprints, traffic and the jitted
+    phase tables all see the restricted sub-model;
+  * ``ctx_frac`` — decode-phase restriction (Fig. 9 right): per-step
+    traffic evaluated at context = prompt + num/den of the generated
+    tokens (capacity stays at the full context), via the same
+    `context_override` the scalar `decode_phase_profile` uses;
+  * ``gen_frac`` — the share of each request's generated tokens this
+    decode role produces (0 for prefill roles).
+
+`SystemTopology` is an ordered tuple of roles.  Composition rules
+(generalizing the original prefill+decode pair arithmetic):
+
+  * prefill roles chain *serially* per request: TTFT sums their
+    per-request latencies plus the per-link activation hand-offs
+    (devices pipeline across requests, so all stay busy in steady
+    state);
+  * the last prefill role ships the prompt KV to the first decode role
+    (`kv_transfer_seconds`);
+  * decode roles chain by generation progress: a request generates
+    ``gen_frac`` of its tokens on each role, migrating its KV at every
+    switch; energy per generated token is the gen_frac-weighted sum,
+    and the aggregate token rate is bottlenecked by
+    ``min(role_tps / gen_frac)``;
+  * total system power and per-request energy sum over all roles and
+    links.
+
+`PD_PAIR` (plain prefill + decode) reproduces the original pair model
+bit-for-bit; `EXTREME_4ROLE` is the Section 5.5 extreme-heterogeneity
+system (prefill-attn, prefill-ffn, decode-early, decode-late).  After
+this layer, "add a role" is a data change — a new `Role` row — not a
+code change.
+
+`evaluate_system` scores one hand-picked device tuple;
+`evaluate_system_batch` scores whole DSE candidate batches by
+deduplicating the per-role halves and routing them through the jitted
+`perfmodel.evaluate_batch` with per-(role, phase) memoization — the
+system-search hot path behind `dse.runner.SystemObjective`.  The
+original pair entry points (`evaluate_disaggregated`,
+`evaluate_disagg_batch`) are thin wrappers over the K=2 topology.
+
+End-to-end metrics:
+
+  TTFT  = prefill chain latency + KV transfer time
   TPS   = decode tokens/s (per request and aggregate)
-  token/J across both devices + transfer energy
-
-`evaluate_disaggregated` scores one hand-picked pair;
-`evaluate_disagg_batch` scores whole DSE candidate batches by
-deduplicating the prefill/decode halves and routing them through
-`perfmodel.evaluate_batch` — the paired-search hot path behind
-`dse.runner.DisaggObjective`.
-
-Extreme heterogeneity (Section 5.5) further splits the pipeline:
-  * prefill by layer group — attention-heavy vs FFN-heavy layers may use
-    different configurations (Fig. 9 left), evaluated per-group;
-  * decode by generation phase — early decode (short context) vs late
-    decode (long context) have different memory profiles (Fig. 9 right).
+  token/J across all devices + transfer energy
 """
 
 from __future__ import annotations
@@ -28,8 +66,8 @@ import dataclasses
 from typing import Optional
 
 from .npu import NPUConfig
-from .perfmodel import (InfeasibleConfig, PhaseResult, evaluate_batch,
-                        evaluate_decode, evaluate_prefill)
+from .perfmodel import (InfeasibleConfig, PhaseResult, evaluate,
+                        evaluate_batch, evaluate_decode, evaluate_prefill)
 from .workload import ModelDims, Phase, Trace, layer_traffic
 
 # NVLink-class chip-to-chip interconnect (LLMCompass-style constants)
@@ -58,33 +96,293 @@ def kv_transfer_seconds(dims: ModelDims, trace: Trace, batch: int,
     return t, e
 
 
-def _combine_phase_results(pre: PhaseResult, dec: PhaseResult,
-                           dims: ModelDims, trace: Trace,
-                           prefill_quant) -> DisaggResult:
-    """Fold one prefill + one decode PhaseResult into end-to-end metrics.
+def _link_seconds(nbytes: float) -> tuple[float, float]:
+    """(seconds, joules) to move `nbytes` over the NVLink-class link."""
+    return (nbytes / (NVLINK_GBPS * 1e9),
+            NVLINK_PJ_PER_BIT * nbytes * 8.0 * 1e-12)
 
-    Shared by the scalar and batched evaluators so their numbers agree
-    exactly.  The KV transfer is quantified at the prefill device's KV
-    format (the pair constraint in dse.space.PairedSpace guarantees the
-    decode device consumes the same format)."""
-    t_kv, e_kv = kv_transfer_seconds(dims, trace, 1, prefill_quant)
-    ttft = pre.latency_s / pre.batch + t_kv   # per-request TTFT
-    # steady state: both devices busy; energy per generated token counts the
-    # amortized prefill energy per request's gen_tokens plus decode energy.
-    e_prefill_per_req = (pre.avg_power_w * pre.latency_s) / pre.batch
-    e_decode_per_tok = dec.energy_per_token_j
-    e_per_gen_token = (e_prefill_per_req + e_kv) / trace.gen_tokens \
-        + e_decode_per_tok
-    power = pre.avg_power_w + dec.avg_power_w
-    return DisaggResult(
+
+# ---------------------------------------------------------------------------
+# Roles and topologies
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Role:
+    """One pipeline stage of a disaggregated system (see module doc)."""
+
+    name: str
+    phase: Phase
+    groups: str = "all"                         # "all" | "attn" | "ffn"
+    ctx_frac: Optional[tuple] = None            # (num, den) of gen tokens
+    gen_frac: float = 0.0                       # share of generated tokens
+
+    def dims_for(self, dims: ModelDims) -> ModelDims:
+        """The (possibly layer-group-restricted) model this role runs."""
+        if self.groups == "all":
+            return dims
+        return dataclasses.replace(dims, layer_groups=self.groups)
+
+    def context_for(self, trace: Trace) -> Optional[int]:
+        """Decode-traffic context override, or None for the trace average.
+
+        Uses the same integer arithmetic as `decode_phase_profile`
+        (prompt + num * gen // den)."""
+        if self.ctx_frac is None:
+            return None
+        num, den = self.ctx_frac
+        return trace.prompt_tokens + num * trace.gen_tokens // den
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemTopology:
+    """An ordered tuple of `Role`s; prefill roles must precede decode
+    roles, and the decode roles' `gen_frac` must sum to 1."""
+
+    name: str
+    roles: tuple
+
+    def __post_init__(self):
+        phases = [r.phase for r in self.roles]
+        n_pre = sum(p is Phase.PREFILL for p in phases)
+        if any(p is Phase.PREFILL for p in phases[n_pre:]):
+            raise ValueError("prefill roles must precede decode roles")
+        if n_pre == len(phases):
+            raise ValueError("topology needs at least one decode role")
+        if n_pre == 0:
+            raise ValueError("topology needs at least one prefill role")
+        for r in self.roles:
+            if r.phase is Phase.PREFILL and r.gen_frac != 0.0:
+                raise ValueError(
+                    f"prefill role {r.name!r} cannot have gen_frac")
+            if r.phase is Phase.DECODE and not (0.0 <= r.gen_frac <= 1.0):
+                raise ValueError(
+                    f"decode role {r.name!r} gen_frac {r.gen_frac} "
+                    "outside [0, 1]")
+        gf = sum(r.gen_frac for r in self.roles if r.phase is Phase.DECODE)
+        if abs(gf - 1.0) > 1e-9:
+            raise ValueError(f"decode gen_frac must sum to 1, got {gf}")
+
+    @property
+    def k(self) -> int:
+        return len(self.roles)
+
+    def prefill_indices(self) -> list:
+        return [i for i, r in enumerate(self.roles)
+                if r.phase is Phase.PREFILL]
+
+    def decode_indices(self) -> list:
+        return [i for i, r in enumerate(self.roles)
+                if r.phase is Phase.DECODE]
+
+    def kv_producer_index(self) -> int:
+        """The prefill role that builds (and ships) the KV cache: the
+        first one whose layer group holds KV state."""
+        for i in self.prefill_indices():
+            if self.roles[i].groups != "ffn":
+                return i
+        return self.prefill_indices()[0]
+
+
+# The original PD pair: the K=2 specialization every existing caller
+# and test pins down (byte-identical composition arithmetic).
+PD_PAIR = SystemTopology("pd-pair", (
+    Role("prefill", Phase.PREFILL),
+    Role("decode", Phase.DECODE, gen_frac=1.0),
+))
+
+# Section 5.5 extreme heterogeneity: prefill split by layer group,
+# decode split by generation phase (early/late context at the same
+# quartile points Fig. 9 profiles).
+EXTREME_4ROLE = SystemTopology("extreme-4role", (
+    Role("prefill-attn", Phase.PREFILL, groups="attn"),
+    Role("prefill-ffn", Phase.PREFILL, groups="ffn"),
+    Role("decode-early", Phase.DECODE, ctx_frac=(1, 4), gen_frac=0.5),
+    Role("decode-late", Phase.DECODE, ctx_frac=(3, 4), gen_frac=0.5),
+))
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemResult:
+    """End-to-end metrics of one K-role system (field names shared with
+    `DisaggResult` so objective wrappers and benches read either)."""
+
+    ttft_s: float
+    decode_tps_per_request: float
+    decode_tps_aggregate: float
+    kv_transfer_s: float
+    total_power_w: float
+    tokens_per_joule: float
+    topology: SystemTopology
+    roles: tuple                     # one PhaseResult per topology role
+
+
+def _act_handoff_bytes(dims: ModelDims, trace: Trace, quant) -> float:
+    """Activation bytes one request ships between two prefill layer-group
+    devices: the d_model residual panel crosses the link twice per layer
+    (attn -> ffn and back)."""
+    n_layers = dims.n_layers + dims.n_encoder_layers
+    return (2.0 * n_layers * trace.prompt_tokens * dims.d_model
+            * quant.activation_bytes)
+
+
+def _combine_system(topo: SystemTopology, results: list, quants: list,
+                    dims: ModelDims, trace: Trace) -> SystemResult:
+    """Fold per-role PhaseResults into end-to-end system metrics.
+
+    This is THE composition rule (module doc): for `PD_PAIR` the
+    accumulation order reproduces the original pair arithmetic
+    bit-for-bit (the sha-pinned paired search trajectories depend on
+    it), and every K-role topology is the same loop over more roles.
+    """
+    gen = trace.gen_tokens
+    pre_idx = topo.prefill_indices()
+    dec_idx = topo.decode_indices()
+
+    # --- prefill chain: serial per request, activation links between ---
+    ttft = 0.0
+    e_req = 0.0                     # per-request energy up to decode
+    for j, i in enumerate(pre_idx):
+        p = results[i]
+        if j > 0:                   # hand-off from the previous stage
+            t_a, e_a = _link_seconds(
+                _act_handoff_bytes(dims, trace, quants[pre_idx[j - 1]]))
+            ttft += t_a
+            e_req += e_a
+        ttft += p.latency_s / p.batch
+        e_req += p.avg_power_w * p.latency_s / p.batch
+
+    # --- prompt-KV hand-off to the first decode role ---
+    kv_quant = quants[topo.kv_producer_index()]
+    t_kv, e_kv = kv_transfer_seconds(dims, trace, 1, kv_quant)
+    ttft += t_kv
+    e_req += e_kv
+
+    # --- decode chain: generation-phase split with KV migration ---
+    step_per_token = 0.0            # gen_frac-weighted per-step latency
+    e_per_token_dec = 0.0
+    agg_tps = float("inf")
+    mig_s = 0.0
+    cum_frac = 0.0
+    for j, i in enumerate(dec_idx):
+        r, d = topo.roles[i], results[i]
+        if j > 0:                   # migrate the KV grown so far
+            ctx_switch = trace.prompt_tokens + cum_frac * gen
+            prev_q = quants[dec_idx[j - 1]]
+            t_m, e_m = _link_seconds(
+                dims.kv_bytes_per_token(prev_q) * ctx_switch)
+            mig_s += t_m
+            e_req += e_m
+        step_per_token += r.gen_frac * d.latency_s
+        e_per_token_dec += r.gen_frac * d.energy_per_token_j
+        if r.gen_frac > 0:
+            agg_tps = min(agg_tps, d.throughput_tps / r.gen_frac)
+        cum_frac += r.gen_frac
+
+    # steady state: all devices busy; energy per generated token counts
+    # the amortized prefill+link energy per request's gen_tokens plus
+    # the weighted decode energy.
+    e_per_gen_token = e_req / gen + e_per_token_dec
+    step_req = step_per_token + mig_s / gen      # incl. amortized migration
+    power = 0.0
+    for d in results:
+        power += d.avg_power_w
+    return SystemResult(
         ttft_s=ttft,
-        decode_tps_per_request=1.0 / dec.latency_s if dec.latency_s else 0.0,
-        decode_tps_aggregate=dec.throughput_tps,
+        decode_tps_per_request=1.0 / step_req if step_req else 0.0,
+        decode_tps_aggregate=agg_tps if dec_idx else 0.0,
         kv_transfer_s=t_kv,
         total_power_w=power,
         tokens_per_joule=1.0 / e_per_gen_token if e_per_gen_token else 0.0,
+        topology=topo, roles=tuple(results))
+
+
+def _pair_result(sys_r: SystemResult) -> DisaggResult:
+    """SystemResult -> the original pair record (K=2 compatibility)."""
+    pre, dec = sys_r.roles
+    return DisaggResult(
+        ttft_s=sys_r.ttft_s,
+        decode_tps_per_request=sys_r.decode_tps_per_request,
+        decode_tps_aggregate=sys_r.decode_tps_aggregate,
+        kv_transfer_s=sys_r.kv_transfer_s,
+        total_power_w=sys_r.total_power_w,
+        tokens_per_joule=sys_r.tokens_per_joule,
         prefill=pre, decode=dec)
 
+
+def _combine_phase_results(pre: PhaseResult, dec: PhaseResult,
+                           dims: ModelDims, trace: Trace,
+                           prefill_quant) -> DisaggResult:
+    """Fold one prefill + one decode PhaseResult into end-to-end metrics
+    (the `PD_PAIR` instance of `_combine_system`; kept as the pair
+    evaluators' entry point so scalar and batched numbers agree
+    exactly).  The KV transfer is quantified at the prefill device's KV
+    format (the pair constraint in dse.space.PairedSpace guarantees the
+    decode device consumes the same format)."""
+    return _pair_result(_combine_system(
+        PD_PAIR, [pre, dec], [prefill_quant, prefill_quant], dims, trace))
+
+
+def evaluate_system(npus: list, topo: SystemTopology, dims: ModelDims,
+                    trace: Trace) -> SystemResult:
+    """End-to-end K-role evaluation of one device tuple (scalar path;
+    raises InfeasibleConfig when any role cannot run its sub-workload)."""
+    if len(npus) != topo.k:
+        raise ValueError(f"{topo.name} needs {topo.k} devices, "
+                         f"got {len(npus)}")
+    results = [
+        evaluate(npu, role.dims_for(dims), trace, role.phase,
+                 context_override=role.context_for(trace))
+        for role, npu in zip(topo.roles, npus)
+    ]
+    return _combine_system(topo, results, [n.quant for n in npus],
+                           dims, trace)
+
+
+def evaluate_system_batch(systems: list, topo: SystemTopology,
+                          dims: ModelDims, trace: Trace,
+                          caches: Optional[list] = None) -> list:
+    """Batched `evaluate_system` over K-device tuples.
+
+    Built on `perfmodel.evaluate_batch` (the jitted structure-of-arrays
+    path): each role's unique device set is scored by one `jax.jit`
+    call against that role's restricted workload (layer group /
+    context override), then the per-system combination is pure
+    arithmetic — DSE candidate pools share halves heavily (crossover
+    children, TPE proposals), so the per-role evaluation count is the
+    number of distinct halves, not the number of systems.  Returns one
+    SystemResult per tuple, with None for systems infeasible in any
+    role instead of raising.
+
+    Configs are deduplicated by `NPUConfig.name`; DSE-decoded designs
+    embed their genes in the name so this is exact for search batches
+    (hand-built configs must use distinct names, as the Table 6 ones
+    do).  Passing `caches` (one dict per role) memoizes per-(role,
+    phase) results across calls — `dse.runner.SystemObjective` threads
+    its role caches through every generation.
+    """
+    caches = [{} for _ in topo.roles] if caches is None else caches
+    if len(caches) != topo.k:
+        raise ValueError(f"{topo.name} needs {topo.k} caches")
+    for ri, role in enumerate(topo.roles):
+        cache = caches[ri]
+        miss = {s[ri].name: s[ri] for s in systems
+                if s[ri].name not in cache}
+        evaluate_batch(list(miss.values()), role.dims_for(dims), trace,
+                       role.phase, context_override=role.context_for(trace),
+                       keys=list(miss), cache=cache)
+    out = []
+    for s in systems:
+        results = [caches[ri][cfg.name] for ri, cfg in enumerate(s)]
+        out.append(None if any(r is None for r in results)
+                   else _combine_system(topo, results,
+                                        [cfg.quant for cfg in s],
+                                        dims, trace))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pair entry points: K=2 wrappers over the system layer
+# ---------------------------------------------------------------------------
 
 def evaluate_disaggregated(prefill_npu: NPUConfig, decode_npu: NPUConfig,
                            dims: ModelDims, trace: Trace) -> DisaggResult:
@@ -97,44 +395,18 @@ def evaluate_disaggregated(prefill_npu: NPUConfig, decode_npu: NPUConfig,
 def evaluate_disagg_batch(pairs: list, dims: ModelDims, trace: Trace,
                           pre_cache: Optional[dict] = None,
                           dec_cache: Optional[dict] = None) -> list:
-    """Batched `evaluate_disaggregated` over (prefill, decode) NPU pairs.
-
-    Built on `perfmodel.evaluate_batch` (since PR 3 the jitted
-    structure-of-arrays path: each side's unique-half miss set is
-    scored by one `jax.jit` call): each side's unique configurations
-    are evaluated once per call, then the per-pair combination is pure
-    arithmetic — the DSE's paired candidate pools share halves heavily
-    (crossover children, TPE proposals), so the per-phase evaluation
-    count is the number of distinct halves, not the number of pairs.
-    Returns one DisaggResult per pair, with None for pairs infeasible
-    in either phase instead of raising.
-
-    Configs are deduplicated by `NPUConfig.name`; DSE-decoded designs
-    embed their genes in the name so this is exact for search batches
-    (hand-built configs must use distinct names, as the Table 6 ones
-    do).  Passing `pre_cache` / `dec_cache` dicts memoizes per-phase
-    results across calls — `dse.runner.DisaggObjective` threads its
-    half caches through every generation.
-    """
-    pre_cache = {} if pre_cache is None else pre_cache
-    dec_cache = {} if dec_cache is None else dec_cache
-    pre_miss = {p.name: p for p, _ in pairs if p.name not in pre_cache}
-    evaluate_batch(list(pre_miss.values()), dims, trace, Phase.PREFILL,
-                   keys=list(pre_miss), cache=pre_cache)
-    dec_miss = {d.name: d for _, d in pairs if d.name not in dec_cache}
-    evaluate_batch(list(dec_miss.values()), dims, trace, Phase.DECODE,
-                   keys=list(dec_miss), cache=dec_cache)
-    out = []
-    for p, d in pairs:
-        pre, dec = pre_cache[p.name], dec_cache[d.name]
-        out.append(None if pre is None or dec is None
-                   else _combine_phase_results(pre, dec, dims, trace,
-                                               p.quant))
-    return out
+    """Batched `evaluate_disaggregated` over (prefill, decode) NPU pairs:
+    `evaluate_system_batch` on the `PD_PAIR` topology, returning
+    DisaggResults (None for infeasible pairs).  `pre_cache`/`dec_cache`
+    are the two role caches."""
+    caches = [{} if pre_cache is None else pre_cache,
+              {} if dec_cache is None else dec_cache]
+    out = evaluate_system_batch(pairs, PD_PAIR, dims, trace, caches=caches)
+    return [None if r is None else _pair_result(r) for r in out]
 
 
 # ---------------------------------------------------------------------------
-# Extreme heterogeneity (Section 5.5)
+# Extreme heterogeneity profiling (Section 5.5, Fig. 9)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -195,18 +467,27 @@ def decode_phase_profile(npu: NPUConfig, dims: ModelDims,
 
 
 def best_per_phase(npus: list[NPUConfig], dims: ModelDims, trace: Trace,
-                   phase: Phase) -> tuple[NPUConfig, PhaseResult]:
-    """Pick the best device for a (sub-)phase — the Section 5.5 search."""
+                   phase: Phase,
+                   context_override: Optional[int] = None
+                   ) -> tuple[NPUConfig, PhaseResult]:
+    """Pick the best device of an enumerated list for one (sub-)phase.
+
+    Scores the whole candidate list through the batched/jitted
+    `perfmodel.evaluate_batch` (infeasible devices come back as None
+    and are skipped; genuine bugs — AttributeError, TypeError on a
+    malformed config — still propagate from table construction).
+
+    This enumeration is deliberately narrow: it is the cheap
+    warm-start that seeds `SystemSpace` searches with a good
+    per-role device (`dse.runner.system_warm_start`), not the search
+    itself — the co-search over the full space is `SystemObjective` +
+    the dse runners.
+    """
+    results = evaluate_batch(npus, dims, trace, phase,
+                             context_override=context_override)
     best = None
-    for npu in npus:
-        try:
-            r = (evaluate_prefill(npu, dims, trace)
-                 if phase is Phase.PREFILL
-                 else evaluate_decode(npu, dims, trace))
-        except (InfeasibleConfig, ValueError):
-            # infeasible device for this phase; non-ValueError bugs
-            # (AttributeError, TypeError, ...) propagate instead of
-            # being silently read as "device skipped"
+    for npu, r in zip(npus, results):
+        if r is None:
             continue
         if best is None or r.tokens_per_joule > best[1].tokens_per_joule:
             best = (npu, r)

@@ -1,24 +1,31 @@
 """Design-space exploration (paper Section 4.4).
 
 space   Table 2 encoding <-> NPUConfig (+ vectorized validity/TDP tables)
-        and the DesignSpace protocol: SingleDeviceSpace (17 genes) and
-        PairedSpace (prefill/decode pair, 34 genes, KV-quant constraint)
+        and the DesignSpace protocol: SingleDeviceSpace (17 genes),
+        SystemSpace (K concatenated halves + GeneTie cross-half
+        constraints) and PairedSpace (its K=2 prefill/decode
+        specialization with the KV-quant tie)
 sobol   quasi-random initialization (N_init = 20)
 gp      GP surrogates (JAX, MLE-fit RBF-ARD, bucketed jit cache)
-pareto  dominance / front / exact 2-D hypervolume (Eq. 7), sweep-based
-ehvi    exact closed-form 2-D EHVI (Eq. 8) + quasi-MC oracle
+pareto  dominance / front / exact 2-D hypervolume (Eq. 7), sweep-based,
+        + nd slicing hypervolume for d > 2 objective counts
+ehvi    exact closed-form 2-D EHVI (Eq. 8) + quasi-MC estimator (test
+        oracle, and the d > 2 acquisition fallback)
 runner  GP+EHVI MOBO + NSGA-II / MO-TPE / Random baselines (batched),
-        generic over any DesignSpace; Objective (single device) and
-        DisaggObjective (disaggregated pairs, Sections 5.3/5.5)
+        generic over any DesignSpace; Objective (single device),
+        SystemObjective (K-role systems over a disagg.SystemTopology)
+        and DisaggObjective (disaggregated pairs, Sections 5.3/5.5),
+        plus system_warm_start (per-role champion seeding)
 """
 
 from . import space
 from .ehvi import ehvi_2d, mc_ehvi
 from .pareto import (IncrementalHV2D, dominates, hv_contributions_2d,
-                     hv_history, hypervolume_2d, pareto_front, pareto_mask,
-                     reference_point)
+                     hv_history, hypervolume, hypervolume_2d, pareto_front,
+                     pareto_mask, reference_point)
 from .runner import (METHODS, DisaggObjective, DSEResult, Objective,
-                     Observation, run_mobo, run_motpe, run_nsga2, run_random,
-                     shared_init)
+                     Observation, SystemObjective, run_mobo, run_motpe,
+                     run_nsga2, run_random, shared_init, system_warm_start)
 from .sobol import sobol
-from .space import DesignSpace, PairedSpace, SingleDeviceSpace
+from .space import (DesignSpace, GeneTie, PairedSpace, SingleDeviceSpace,
+                    SystemSpace, kv_quant_tie)

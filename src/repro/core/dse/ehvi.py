@@ -29,7 +29,7 @@ import math
 
 import numpy as np
 
-from .pareto import _staircase, hypervolume_2d
+from .pareto import _staircase, hypervolume, hypervolume_2d
 
 try:                                    # scipy ships with jax, but keep the
     from scipy.special import ndtr      # dse package importable without it
@@ -74,21 +74,27 @@ def ehvi_2d(front: np.ndarray, ref: np.ndarray, mu: np.ndarray,
 
 def mc_ehvi(front: np.ndarray, ref: np.ndarray, mu: np.ndarray,
             sd: np.ndarray, z: np.ndarray) -> np.ndarray:
-    """Quasi-MC EHVI estimate (test oracle for `ehvi_2d`).
+    """Quasi-MC EHVI estimate: test oracle for `ehvi_2d`, and the MOBO
+    acquisition fallback for d > 2 objectives (exact box decomposition
+    is 2-D only; see pareto.hypervolume for the nd indicator).
 
-    mu, sd: [n_cand, 2]; z: [n_samples, 2] standard-normal draws
+    mu, sd: [n_cand, d]; z: [n_samples, d] standard-normal draws
     (antithetic).  Returns EHVI estimates [n_cand].
     """
-    front = np.asarray(front, dtype=float).reshape(-1, 2)
-    base = hypervolume_2d(front, ref) if len(front) else 0.0
+    mu = np.atleast_2d(np.asarray(mu, dtype=float))
+    ref = np.asarray(ref, dtype=float)
+    d = mu.shape[1]
+    front = np.asarray(front, dtype=float).reshape(-1, d)
+    hv = hypervolume_2d if d == 2 else hypervolume
+    base = hv(front, ref) if len(front) else 0.0
     out = np.zeros(len(mu))
     for i in range(len(mu)):
-        ys = mu[i] + sd[i] * z            # [s, 2]
+        ys = mu[i] + sd[i] * z            # [s, d]
         hvs = 0.0
         for y in ys:
-            if y[0] <= ref[0] or y[1] <= ref[1]:
+            if np.any(y <= ref):
                 continue
-            hvs += max(0.0, hypervolume_2d(
+            hvs += max(0.0, hv(
                 np.vstack([front, y[None, :]]) if len(front) else y[None, :],
                 ref) - base)
         out[i] = hvs / len(ys)

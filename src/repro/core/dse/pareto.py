@@ -116,6 +116,43 @@ def hypervolume_2d(ys: np.ndarray, ref: np.ndarray) -> float:
     return float(np.sum((front[:, 0] - x_prev) * (front[:, 1] - ref[1])))
 
 
+def hypervolume(ys: np.ndarray, ref: np.ndarray) -> float:
+    """Exact dominated hypervolume for d maximized objectives.
+
+    d = 2 delegates to the staircase sweep; d > 2 uses dimension-sweep
+    slicing: sort the front descending in the last objective, slice the
+    dominated region into slabs between consecutive last-objective
+    values, and recurse on the (d-1)-dimensional projection of each
+    slab's dominating points.  Worst case O(n^{d-1} log n) — fine for
+    the <= ~100-point fronts the searchers and the quasi-MC EHVI
+    fallback hand it (the exact 3-D box decomposition for the EHVI
+    acquisition itself is still a ROADMAP item).
+    """
+    ys = np.asarray(ys, dtype=float)
+    ref = np.asarray(ref, dtype=float)
+    if ys.size == 0:
+        return 0.0
+    ys = ys.reshape(len(ys), -1)
+    if ys.shape[1] == 1:
+        return float(max(0.0, ys[:, 0].max() - ref[0]))
+    if ys.shape[1] == 2:
+        return hypervolume_2d(ys, ref)
+    pts = ys[np.all(ys > ref, axis=1)]
+    if len(pts) == 0:
+        return 0.0
+    pts = pts[pareto_mask(pts)]
+    order = np.argsort(-pts[:, -1], kind="stable")
+    pts = pts[order]
+    hv = 0.0
+    for i in range(len(pts)):
+        lo = pts[i + 1, -1] if i + 1 < len(pts) else ref[-1]
+        height = pts[i, -1] - lo
+        if height <= 0:             # duplicate last-coordinate: empty slab
+            continue
+        hv += height * hypervolume(pts[:i + 1, :-1], ref[:-1])
+    return float(hv)
+
+
 def hv_contributions_2d(front: np.ndarray, ref: np.ndarray) -> np.ndarray:
     """Exclusive hypervolume contribution of each point.
 

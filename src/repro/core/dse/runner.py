@@ -2,23 +2,32 @@
 (GP+EHVI MOBO, NSGA-II, MO-TPE, Random), paper Section 4.4 / Figure 6,
 generic over a `space.DesignSpace`.
 
-Two objective wrappers share one informal protocol (`.space`,
-`.tdp_limit_w`, `__call__`, `.evaluate_batch`):
+The objective wrappers share one informal protocol (`.space`,
+`.tdp_limit_w`, `.n_obj`, `__call__`, `.evaluate_batch`):
 
 * `Objective` — single-device search on `SingleDeviceSpace`:
   f(x) = (throughput_tps, -avg_power_w) under a device TDP cap
   (the paper's Fig. 6 experiment).
-* `DisaggObjective` — prefill/decode pair search on `PairedSpace`:
-  f(x) = (aggregate tokens/joule, -total system power) under a combined
-  pair TDP cap and a TTFT feasibility cap that includes the KV-transfer
-  time between the devices (the paper's Fig. 8 co-design, Section 5.3).
+* `SystemObjective` — K-role system search on `SystemSpace` over any
+  `disagg.SystemTopology`: f(x) = (aggregate tokens/joule, -total
+  system power) under a combined system TDP budget and a TTFT
+  feasibility cap that includes the inter-device hand-offs (Sections
+  5.3/5.5).  With `ttft_objective=True`, TTFT becomes a third
+  maximized objective (-TTFT) instead of a hard gate.
+* `DisaggObjective` — the K=2 prefill/decode specialization on
+  `PairedSpace` (the paper's Fig. 8 co-design, Section 5.3);
+  byte-identical to the pre-SystemObjective pair implementation.
 
-All methods maximize a 2-objective f, share the same Sobol/random
-initialization, and report their evaluation history so hypervolume-
-convergence curves can be drawn against a common reference point.  The
-searchers read every space-specific operation (sampling, Sobol mapping,
-GP normalization, validity/TDP prefilters, constraint repair) off
-`objective.space`, so they run unchanged on any `DesignSpace`.
+All methods maximize f (2 objectives by default; d > 2 routes MOBO's
+acquisition to the quasi-MC EHVI fallback), share the same
+Sobol/random initialization, and report their evaluation history so
+hypervolume-convergence curves can be drawn against a common reference
+point.  The searchers read every space-specific operation (sampling,
+Sobol mapping, GP normalization, validity/TDP prefilters, constraint
+repair) off `objective.space`, so they run unchanged on any
+`DesignSpace`.  `system_warm_start` seeds a system search from the
+best per-role single devices of a scored random pool (the
+`disagg.best_per_phase` enumeration idea, batched).
 
 Hot-path structure (vectorized engine):
 
@@ -47,13 +56,18 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from ..disagg import evaluate_disagg_batch
+from ..disagg import PD_PAIR, evaluate_disagg_batch, evaluate_system_batch
 from ..perfmodel import InfeasibleConfig, evaluate, evaluate_batch
 from ..workload import ModelDims, Phase, Trace
 from . import space as sp
-from .ehvi import ehvi_2d
-from .pareto import IncrementalHV2D, pareto_front, pareto_mask
+from .ehvi import ehvi_2d, mc_ehvi
+from .pareto import IncrementalHV2D, hypervolume, pareto_front, pareto_mask
 from .sobol import sobol
+
+# Quasi-MC sample count for the d > 2 EHVI acquisition fallback
+# (antithetic pairs, drawn from the method RNG so seeded trajectories
+# stay deterministic; 2-objective searches never draw these).
+MC_EHVI_SAMPLES = 64
 
 
 @dataclasses.dataclass
@@ -74,7 +88,19 @@ class DSEResult:
                         dtype=float)
 
     def hv_history(self, ref: np.ndarray) -> np.ndarray:
-        """HV of the feasible front after each evaluation (incremental)."""
+        """HV of the feasible front after each evaluation (incremental
+        staircase for 2 objectives; exact slicing recompute for d > 2,
+        where histories are short enough for the O(n) recomputes)."""
+        ref = np.asarray(ref, dtype=float)
+        if len(ref) != 2:
+            out = np.empty(len(self.observations))
+            hv, feas = 0.0, []
+            for i, o in enumerate(self.observations):
+                if o.f is not None:
+                    feas.append(o.f)
+                    hv = hypervolume(np.asarray(feas, dtype=float), ref)
+                out[i] = hv
+            return out
         inc = IncrementalHV2D(ref)
         out = np.empty(len(self.observations))
         hv = 0.0
@@ -106,6 +132,8 @@ def _dedup_pending(cache: dict, keys: list) -> list:
 
 class Objective:
     """Evaluate designs on one (model, trace, phase) under a TDP cap."""
+
+    n_obj = 2
 
     def __init__(self, dims: ModelDims, trace: Trace, phase: Phase,
                  tdp_limit_w: float = 700.0, batch: Optional[int] = None,
@@ -167,42 +195,65 @@ class Objective:
         return [self.cache[k] for k in keys]
 
 
-class DisaggObjective:
-    """Evaluate prefill/decode pairs end-to-end (paper Fig. 8) for the
-    paired DSE on `PairedSpace`.
+class SystemObjective:
+    """Evaluate K-role systems end-to-end for the system DSE on
+    `SystemSpace` (paper Sections 5.3/5.5).
 
-    f(x) = (aggregate tokens/joule across both devices incl. KV-transfer
+    f(x) = (aggregate tokens/joule across all devices incl. hand-off
     energy, -total system power), subject to
 
-      * a combined pair TDP cap (`tdp_limit_w`, default two 700 W
-        sockets), enforced pre-evaluation via `space.tdp_w_batch`, and
+      * a combined system TDP cap (`tdp_limit_w`, default one 700 W
+        socket per role), enforced pre-evaluation via
+        `space.tdp_w_batch`, and
       * a TTFT feasibility cap (`ttft_cap_s`): per-request TTFT =
-        prefill latency + `disagg.kv_transfer_seconds` over the NVLink-
-        class interconnect; pairs whose hand-off pushes TTFT past the
-        cap are infeasible regardless of their steady-state efficiency.
-        The 90 s default is an agentic-trace SLO roughly 4x the hand-
-        designed Table 6 pairs' TTFT on OSWorld — loose enough that the
-        searchers see a feasible gradient early, tight enough to reject
-        the capacity-starved region (TTFT in the 175-1000 s range).
+        prefill-chain latency + the KV/activation hand-offs over the
+        NVLink-class interconnect; systems whose hand-offs push TTFT
+        past the cap are infeasible regardless of their steady-state
+        efficiency.  The 90 s default is an agentic-trace SLO roughly
+        4x the hand-designed Table 6 pairs' TTFT on OSWorld — loose
+        enough that the searchers see a feasible gradient early, tight
+        enough to reject the capacity-starved region (TTFT in the
+        175-1000 s range).
 
-    Batched evaluation dedups the two 17-gene halves across pairs and
-    memoizes their per-phase results across generations (NSGA-II
-    children and TPE proposals reuse halves constantly), so the hot
-    path stays `perfmodel.evaluate_batch` on the unique-half miss set.
+    With `ttft_objective=True` the cap is dropped and -TTFT becomes a
+    third maximized objective; MOBO's acquisition then routes through
+    the quasi-MC EHVI fallback (`ehvi.mc_ehvi`), since the exact
+    closed form is 2-D only.
+
+    Batched evaluation dedups the K 17-gene halves across systems and
+    memoizes their per-(role, phase) results across generations
+    (NSGA-II children and TPE proposals reuse halves constantly), so
+    the hot path stays `perfmodel.evaluate_batch` on each role's
+    unique-half miss set.
     """
 
     def __init__(self, dims: ModelDims, trace: Trace,
-                 tdp_limit_w: float = 1400.0,
+                 topology=PD_PAIR,
+                 tdp_limit_w: Optional[float] = None,
                  ttft_cap_s: Optional[float] = 90.0,
-                 space: Optional[sp.PairedSpace] = None):
-        self.space = space if space is not None else sp.PairedSpace()
+                 ttft_objective: bool = False,
+                 space: Optional[sp.SystemSpace] = None):
+        self.topology = topology
+        self.space = (space if space is not None
+                      else sp.SystemSpace.for_topology(topology))
         self.dims, self.trace = dims, trace
-        self.tdp_limit_w = tdp_limit_w
-        self.ttft_cap_s = ttft_cap_s
+        self.tdp_limit_w = (tdp_limit_w if tdp_limit_w is not None
+                            else 700.0 * topology.k)
+        self.ttft_objective = ttft_objective
+        self.ttft_cap_s = None if ttft_objective else ttft_cap_s
+        self.n_obj = 3 if ttft_objective else 2
         self.cache: dict = {}
         self.n_evals = 0
-        self._pre_results: dict = {}    # prefill-half name -> PhaseResult|None
-        self._dec_results: dict = {}    # decode-half name -> PhaseResult|None
+        # one half-name -> PhaseResult|None memo per topology role
+        self._role_caches = [dict() for _ in topology.roles]
+
+    def _score_systems(self, systems: list) -> list:
+        return evaluate_system_batch(systems, self.topology, self.dims,
+                                     self.trace, caches=self._role_caches)
+
+    def _objective_tuple(self, r) -> tuple:
+        base = (r.tokens_per_joule, -r.total_power_w)
+        return base + (-r.ttft_s,) if self.ttft_objective else base
 
     def __call__(self, x) -> Observation:
         key = tuple(int(v) for v in x)
@@ -215,7 +266,7 @@ class DisaggObjective:
         todo = _dedup_pending(self.cache, keys)
         if todo:
             valid = self.space.valid_mask(np.asarray(todo, dtype=np.int64))
-            run_keys, run_pairs = [], []
+            run_keys, run_systems = [], []
             for k, ok in zip(todo, valid):
                 self.n_evals += 1
                 obs = Observation(x=list(k), f=None, npu=None)
@@ -223,24 +274,53 @@ class DisaggObjective:
                 if not ok:
                     continue
                 try:
-                    pair = self.space.decode(k)
+                    system = self.space.decode(k)
                 except sp.InvalidDesign:   # defensive: mask mirrors decode
                     continue
-                obs.npu = pair
-                if sum(n.tdp_w() for n in pair) <= self.tdp_limit_w:
+                obs.npu = system
+                if sum(n.tdp_w() for n in system) <= self.tdp_limit_w:
                     run_keys.append(k)
-                    run_pairs.append(pair)
-            results = evaluate_disagg_batch(
-                run_pairs, self.dims, self.trace,
-                pre_cache=self._pre_results, dec_cache=self._dec_results)
+                    run_systems.append(system)
+            results = self._score_systems(run_systems)
             for k, r in zip(run_keys, results):
                 if r is None:
                     continue
                 obs = self.cache[k]
                 obs.result = r
                 if self.ttft_cap_s is None or r.ttft_s <= self.ttft_cap_s:
-                    obs.f = (r.tokens_per_joule, -r.total_power_w)
+                    obs.f = self._objective_tuple(r)
         return [self.cache[k] for k in keys]
+
+
+class DisaggObjective(SystemObjective):
+    """Evaluate prefill/decode pairs end-to-end (paper Fig. 8) for the
+    paired DSE on `PairedSpace` — the K=2 `SystemObjective` on the
+    `disagg.PD_PAIR` topology, scoring through `evaluate_disagg_batch`
+    so results are the original `DisaggResult` records (and numbers are
+    byte-identical to the pre-SystemObjective pair implementation)."""
+
+    def __init__(self, dims: ModelDims, trace: Trace,
+                 tdp_limit_w: float = 1400.0,
+                 ttft_cap_s: Optional[float] = 90.0,
+                 space: Optional[sp.PairedSpace] = None):
+        super().__init__(
+            dims, trace, topology=PD_PAIR, tdp_limit_w=tdp_limit_w,
+            ttft_cap_s=ttft_cap_s,
+            space=space if space is not None else sp.PairedSpace())
+
+    def _score_systems(self, systems: list) -> list:
+        return evaluate_disagg_batch(
+            systems, self.dims, self.trace,
+            pre_cache=self._role_caches[0],
+            dec_cache=self._role_caches[1])
+
+    @property
+    def _pre_results(self) -> dict:    # prefill-half name -> PhaseResult|None
+        return self._role_caches[0]
+
+    @property
+    def _dec_results(self) -> dict:    # decode-half name -> PhaseResult|None
+        return self._role_caches[1]
 
 
 def shared_init(objective, n_init: int, seed: int) -> list:
@@ -321,8 +401,9 @@ def run_mobo(objective, n_total: int = 100, seed: int = 0,
             obs.append(objective(x))
             continue
         fs = np.array([o.f for o in feas], dtype=float)
+        n_obj = fs.shape[1]
         gps = [GP.fit_design(space, [o.x for o in feas], fs[:, m])
-               for m in range(2)]
+               for m in range(n_obj)]
         front = pareto_front(fs)
         ref = fs.min(axis=0) - 0.05 * (fs.max(axis=0) - fs.min(axis=0) + 1e-9)
         # candidate pool: one vectorized draw, validity/TDP filtered via
@@ -346,7 +427,15 @@ def run_mobo(objective, n_total: int = 100, seed: int = 0,
         mus, sds = zip(*(g.predict(xq) for g in gps))
         mu = np.stack(mus, axis=1)
         sd = np.stack(sds, axis=1)
-        scores = ehvi_2d(front, ref, mu, sd)
+        if n_obj == 2:
+            scores = ehvi_2d(front, ref, mu, sd)
+        else:
+            # d > 2: exact box decomposition is 2-D only — fall back to
+            # the antithetic quasi-MC estimator (drawn from the method
+            # RNG, so 2-objective seeded trajectories never change).
+            half = rng.standard_normal((MC_EHVI_SAMPLES // 2, n_obj))
+            scores = mc_ehvi(front, ref, mu, sd,
+                             np.concatenate([half, -half]))
         x_best = pool[int(np.argmax(scores))]
         seen.add(x_best)
         obs.append(objective(x_best))
@@ -406,10 +495,12 @@ def run_nsga2(objective, n_total: int = 100, seed: int = 0,
     obs = list(init) if init else []
     seen = {tuple(o.x) for o in obs}
 
+    n_obj = getattr(objective, "n_obj", 2)
+
     def penal(o: Observation) -> np.ndarray:
         # constraint-domination: infeasible points sit far below
         return (np.array(o.f) if o.f is not None
-                else np.array([-1e18, -1e18]))
+                else np.full(n_obj, -1e18))
 
     pop = list(obs[-pop_size:])
     while len(pop) < pop_size and len(obs) < n_total:
@@ -561,6 +652,68 @@ def run_motpe(objective, n_total: int = 100, seed: int = 0,
         seen.add(best_x)
         obs.append(objective(best_x))
     return DSEResult(method="MO-TPE", observations=obs)
+
+
+# ---------------------------------------------------------------------------
+# System-search warm start (the disagg.best_per_phase idea, batched)
+# ---------------------------------------------------------------------------
+
+def system_warm_start(objective: SystemObjective, n_init: int, seed: int,
+                      pool: int = 256) -> list:
+    """Seed a `SystemSpace` search from per-role champions of a scored
+    single-device pool.
+
+    Draws a pool of valid single-device genes (TDP-prefiltered to one
+    role's share of the system budget), scores every decoded config
+    against each topology role's restricted workload through the
+    batched/jitted `perfmodel.evaluate_batch`, ranks the pool per role
+    by tokens/joule, and composes the i-th best half of every role into
+    the i-th warm-start system (repaired, so cross-half ties hold).
+    Shortfall — infeasible compositions or a thin pool — is topped up
+    by the space's rejection sampler, and everything is evaluated
+    through `objective.evaluate_batch` so warm starts land in the same
+    caches the searchers use.
+    """
+    topo = objective.topology
+    space = objective.space
+    rng = np.random.default_rng(seed + 97)
+    xs = np.empty((0, sp.N_DIMS), dtype=np.int64)
+    for _ in range(8):
+        if len(xs) >= pool:
+            break
+        draw = sp.random_designs(rng, pool)
+        draw = draw[sp.valid_mask(draw)]
+        draw = draw[sp.tdp_w_batch(draw)
+                    <= objective.tdp_limit_w / topo.k]
+        xs = np.concatenate([xs, draw])
+    xs = xs[:pool]
+    configs = [sp.decode(x) for x in xs]
+    per_role_order = []
+    for role in topo.roles:
+        results = evaluate_batch(configs, role.dims_for(objective.dims),
+                                 objective.trace, role.phase,
+                                 context_override=role.context_for(
+                                     objective.trace))
+        scores = np.array([-np.inf if r is None else r.tokens_per_joule
+                           for r in results])
+        per_role_order.append(np.argsort(-scores, kind="stable"))
+    seen = set()
+    starts = []
+    for i in range(min(n_init, len(xs))):
+        genes = []
+        for order in per_role_order:
+            genes.extend(int(v) for v in xs[order[i]])
+        x = tuple(space.repair(genes))
+        if x not in seen:
+            seen.add(x)
+            starts.append(x)
+    while len(starts) < n_init:
+        x = tuple(space.random_design(rng))
+        if x in seen:
+            continue
+        seen.add(x)
+        starts.append(x)
+    return objective.evaluate_batch(starts)
 
 
 METHODS: dict[str, Callable] = {

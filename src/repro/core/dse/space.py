@@ -12,12 +12,15 @@ over a `DesignSpace`:
 
   SingleDeviceSpace   the 17-gene Table 2 space (wraps this module's
                       functions; the paper's Fig. 6 experiment)
-  PairedSpace         two concatenated 17-gene halves — a prefill device
-                      and a decode device co-searched as one 34-gene
-                      point (paper Sections 5.3/5.5, Fig. 8), with the
-                      KV-cache-quant compatibility constraint between
-                      the halves (transferred KV must decode on the
-                      other device)
+  SystemSpace         K concatenated 17-gene halves — one device per
+                      `disagg.SystemTopology` role, co-searched as one
+                      K*17-gene point (paper Section 5.5 extreme
+                      heterogeneity), with declarative `GeneTie`
+                      cross-half constraints
+  PairedSpace         the K=2 SystemSpace with the KV-cache-quant tie
+                      (a prefill and a decode device, paper Sections
+                      5.3/5.5, Fig. 8; transferred KV must decode on
+                      the other device)
 
 The module-level functions remain the single-device fast path; the
 classes delegate to them so existing seeded trajectories are unchanged.
@@ -465,44 +468,107 @@ class SingleDeviceSpace(DesignSpace):
 KV_GENE = 12
 
 
-class PairedSpace(DesignSpace):
-    """Prefill/decode disaggregated pair space (paper Sections 5.3/5.5).
+@dataclasses.dataclass(frozen=True)
+class GeneTie:
+    """Declarative cross-half equality constraint of a `SystemSpace`.
 
-    A point is two concatenated 17-gene halves: genes [0, 17) encode the
-    prefill-optimized device, genes [17, 34) the decode-optimized one.
-    One cross-half constraint applies: both halves must use the same
-    KV-cache quantization format (gene `KV_GENE` of each half), because
-    the KV cache produced during prefill is shipped over the interconnect
-    and consumed verbatim by the decode device — a format mismatch would
-    require a re-quantization pass the system model does not provide.
+    Gene `gene` (an index within one 17-gene half) must take the same
+    value in every half listed in `halves` (None = all halves).  The
+    first listed half is authoritative: `repair` copies its value onto
+    the others.  `value_names` (optional) labels values in violation
+    messages.
+    """
 
-    `repair` (and therefore every sampling primitive) enforces the
-    constraint by copying the prefill half's KV gene onto the decode
-    half; `valid_mask`/`decode` reject vectors that still violate it
+    gene: int
+    halves: Optional[tuple] = None
+    label: str = "tied gene"
+    value_names: tuple = ()
+
+    def resolve(self, k: int) -> tuple:
+        return tuple(range(k)) if self.halves is None else self.halves
+
+    def violation(self, x, k: int) -> Optional[str]:
+        """A human-readable violation description, or None if satisfied."""
+        hs = self.resolve(k)
+        src = hs[0]
+        for h in hs[1:]:
+            a, b = x[src * N_DIMS + self.gene], x[h * N_DIMS + self.gene]
+            if a != b:
+                name = (self.value_names[v] if self.value_names else str(v)
+                        for v in (a, b))
+                return (f"{self.label} mismatch between halves {src} "
+                        f"and {h}: {' vs '.join(name)}")
+        return None
+
+
+def kv_quant_tie(halves: Optional[tuple] = None) -> GeneTie:
+    """The KV-cache quantization compatibility rule as one `GeneTie`:
+    every device on the KV hand-off path must consume the format the
+    prefill device writes (a mismatch would need a re-quantization pass
+    the system model does not provide)."""
+    return GeneTie(KV_GENE, halves, label="KV-cache quant",
+                   value_names=tuple(KV_FMTS))
+
+
+class SystemSpace(DesignSpace):
+    """K concatenated single-device halves searched as one point
+    (paper Sections 5.3/5.5).
+
+    A design is K 17-gene Table 2 encodings back to back — one device
+    per `disagg.SystemTopology` role — plus a declarative list of
+    `GeneTie` cross-half constraints (the KV-quant compatibility rule
+    is the canonical instance).  `PairedSpace` is the K=2
+    specialization; an extreme-heterogeneity system (prefill-attn /
+    prefill-ffn / decode-early / decode-late) is K=4 with the same tie.
+
+    `repair` (and therefore every sampling primitive) enforces each tie
+    by copying the authoritative half's gene onto the others;
+    `valid_mask`/`decode` reject vectors that still violate one
     (e.g. raw crossover output that bypassed repair).
     """
 
-    name = "paired-prefill-decode"
     init_filter_valid = True
     samples_valid = True
 
     # Bound on validity rejection-sampling rounds (raw validity of a
-    # random pair is ~10-20%, so a handful of rounds nearly always
-    # suffices; the bound keeps sampling total even if tables change).
+    # random K-tuple is exp. small in K — ~10-20% at K=2 — so a handful
+    # of rounds nearly always suffices; the bound keeps sampling total
+    # even if tables change).
     _MAX_RESAMPLE = 64
 
-    def __init__(self):
-        self.cardinalities = list(CARDINALITIES) * 2
+    def __init__(self, k: int, ties: tuple = (),
+                 name: Optional[str] = None):
+        if k < 1:
+            raise ValueError("SystemSpace needs at least one half")
+        self.k = k
+        self.ties = tuple(ties)
+        self.cardinalities = list(CARDINALITIES) * k
+        if name is not None:
+            self.name = name
+        else:
+            self.name = f"system-{k}dev"
+        for tie in self.ties:
+            for h in tie.resolve(k):
+                if not (0 <= h < k):
+                    raise ValueError(f"tie half {h} out of range for K={k}")
+
+    @classmethod
+    def for_topology(cls, topology) -> "SystemSpace":
+        """One half per `disagg.SystemTopology` role, KV formats tied
+        across all halves (the KV cache crosses every hand-off link)."""
+        return cls(topology.k, ties=(kv_quant_tie(),),
+                   name=f"system-{topology.name}")
 
     def random_design(self, rng: np.random.Generator) -> list:
-        """One random *valid* pair (rejection sampling over valid_mask).
+        """One random *valid* K-tuple (rejection sampling over
+        valid_mask).
 
-        Both halves of a raw uniform draw must independently pass the
-        single-device validity tables, which squares the rejection rate
-        — uniform sampling would waste ~85% of every search budget on
-        undecodable pairs, so the paired space samples the validity-
-        filtered set directly (the single-device space keeps raw draws
-        for seeded-trajectory compatibility)."""
+        Every half of a raw uniform draw must independently pass the
+        single-device validity tables, which compounds the rejection
+        rate — uniform sampling would waste most of the search budget
+        on undecodable tuples, so the system space samples the
+        validity-filtered set directly (the single-device space keeps
+        raw draws for seeded-trajectory compatibility)."""
         x = super().random_design(rng)
         for _ in range(self._MAX_RESAMPLE):
             if bool(self.valid_mask(np.asarray([x], dtype=np.int64))[0]):
@@ -511,7 +577,7 @@ class PairedSpace(DesignSpace):
         return x
 
     def random_designs(self, rng: np.random.Generator, n: int) -> np.ndarray:
-        """`n` random pairs, validity-rejection-sampled like
+        """`n` random K-tuples, validity-rejection-sampled like
         `random_design` (vectorized: oversample, filter, top up)."""
         out = np.empty((0, self.n_dims), dtype=np.int64)
         for _ in range(self._MAX_RESAMPLE):
@@ -525,42 +591,85 @@ class PairedSpace(DesignSpace):
         return out[:n]
 
     def split(self, x) -> tuple:
-        """34-gene pair -> (prefill 17-gene half, decode 17-gene half)."""
+        """K*17-gene vector -> K 17-gene halves."""
         x = list(x)
-        return x[:N_DIMS], x[N_DIMS:]
+        return tuple(x[i * N_DIMS:(i + 1) * N_DIMS] for i in range(self.k))
 
     def repair(self, x) -> list:
         x = list(x)
-        x[N_DIMS + KV_GENE] = x[KV_GENE]
+        for tie in self.ties:
+            hs = tie.resolve(self.k)
+            v = x[hs[0] * N_DIMS + tie.gene]
+            for h in hs[1:]:
+                x[h * N_DIMS + tie.gene] = v
         return x
 
     def repair_batch(self, xs: np.ndarray) -> np.ndarray:
         xs = np.array(xs)           # copy: never mutate the caller's batch
-        xs[:, N_DIMS + KV_GENE] = xs[:, KV_GENE]
+        for tie in self.ties:
+            hs = tie.resolve(self.k)
+            for h in hs[1:]:
+                xs[:, h * N_DIMS + tie.gene] = xs[:, hs[0] * N_DIMS
+                                                  + tie.gene]
         return xs
 
     def decode(self, x) -> tuple:
-        """34-gene pair -> (prefill NPUConfig, decode NPUConfig)."""
+        """K*17-gene vector -> one NPUConfig per half."""
         x = [int(v) for v in x]
-        if len(x) != 2 * N_DIMS:
-            raise InvalidDesign(f"need {2 * N_DIMS} genes, got {len(x)}")
-        if x[KV_GENE] != x[N_DIMS + KV_GENE]:
+        if len(x) != self.k * N_DIMS:
             raise InvalidDesign(
-                "KV-cache quant mismatch between prefill and decode halves: "
-                f"{KV_FMTS[x[KV_GENE]]} vs {KV_FMTS[x[N_DIMS + KV_GENE]]}")
-        return decode(x[:N_DIMS]), decode(x[N_DIMS:])
+                f"need {self.k * N_DIMS} genes, got {len(x)}")
+        for tie in self.ties:
+            msg = tie.violation(x, self.k)
+            if msg is not None:
+                raise InvalidDesign(msg)
+        return tuple(decode(h) for h in self.split(x))
 
     def valid_mask(self, xs: np.ndarray) -> np.ndarray:
         xs = np.asarray(xs, dtype=np.int64)
-        return (valid_mask(xs[:, :N_DIMS]) & valid_mask(xs[:, N_DIMS:])
-                & (xs[:, KV_GENE] == xs[:, N_DIMS + KV_GENE]))
+        m = np.ones(len(xs), dtype=bool)
+        for i in range(self.k):
+            m &= valid_mask(xs[:, i * N_DIMS:(i + 1) * N_DIMS])
+        for tie in self.ties:
+            hs = tie.resolve(self.k)
+            for h in hs[1:]:
+                m &= (xs[:, hs[0] * N_DIMS + tie.gene]
+                      == xs[:, h * N_DIMS + tie.gene])
+        return m
 
     def tdp_w_batch(self, xs: np.ndarray) -> np.ndarray:
-        """Combined pair TDP: the two devices draw from one power budget."""
+        """Combined system TDP: all K devices draw from one power budget."""
         xs = np.asarray(xs, dtype=np.int64)
-        return tdp_w_batch(xs[:, :N_DIMS]) + tdp_w_batch(xs[:, N_DIMS:])
+        out = tdp_w_batch(xs[:, :N_DIMS])
+        for i in range(1, self.k):
+            out = out + tdp_w_batch(xs[:, i * N_DIMS:(i + 1) * N_DIMS])
+        return out
 
     def decode_batch(self, xs: np.ndarray) -> tuple:
-        """(prefill NPUTable, decode NPUTable) — SoA decoding per half."""
+        """One perfmodel_jit.NPUTable per half — SoA decoding."""
         xs = np.asarray(xs, dtype=np.int64)
-        return decode_batch(xs[:, :N_DIMS]), decode_batch(xs[:, N_DIMS:])
+        return tuple(decode_batch(xs[:, i * N_DIMS:(i + 1) * N_DIMS])
+                     for i in range(self.k))
+
+
+class PairedSpace(SystemSpace):
+    """Prefill/decode disaggregated pair space: the K=2 `SystemSpace`
+    with the KV-quant tie (paper Sections 5.3/5.5).
+
+    Genes [0, 17) encode the prefill-optimized device, genes [17, 34)
+    the decode-optimized one; the KV cache produced during prefill is
+    shipped over the interconnect and consumed verbatim by the decode
+    device, so both halves must share the KV-cache quantization format
+    (`kv_quant_tie`).  All sampling/repair/validity behavior is the
+    generic SystemSpace machinery — seeded paired trajectories are
+    byte-identical to the pre-refactor pair-specific implementation.
+    """
+
+    def __init__(self):
+        super().__init__(2, ties=(kv_quant_tie(),),
+                         name="paired-prefill-decode")
+
+    def split(self, x) -> tuple:
+        """34-gene pair -> (prefill 17-gene half, decode 17-gene half)."""
+        x = list(x)
+        return x[:N_DIMS], x[N_DIMS:]

@@ -340,6 +340,12 @@ def evaluate_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
     ctx = (context_override if context_override is not None
            else trace.prompt_tokens + trace.gen_tokens // 2)
     if dims.family is Family.DLLM:
+        if context_override is not None:
+            # every denoise step reprocesses the full sequence: there is
+            # no per-step context to override — fail loudly rather than
+            # silently scoring decode-phase-split roles identically
+            raise ValueError("context_override is undefined for "
+                             "diffusion-LM decode")
         return _evaluate_dllm_decode(npu, dims, trace, b)
     placement = _placement_for(npu, dims, b,
                                trace.prompt_tokens + trace.gen_tokens, 1)
@@ -389,27 +395,34 @@ def _evaluate_dllm_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
 
 
 def evaluate(npu: NPUConfig, dims: ModelDims, trace: Trace, phase: Phase,
-             batch: Optional[int] = None) -> PhaseResult:
+             batch: Optional[int] = None,
+             context_override: Optional[int] = None) -> PhaseResult:
     if phase is Phase.PREFILL:
+        if context_override is not None:
+            raise ValueError("context_override applies to DECODE only")
         return evaluate_prefill(npu, dims, trace, batch=batch)
-    return evaluate_decode(npu, dims, trace, batch=batch)
+    return evaluate_decode(npu, dims, trace, batch=batch,
+                           context_override=context_override)
 
 
 def _evaluate_batch_scalar(npus, dims: ModelDims, trace: Trace,
                            phase: Phase,
-                           batch: Optional[int] = None) -> list:
+                           batch: Optional[int] = None,
+                           context_override: Optional[int] = None) -> list:
     """Reference oracle: map the scalar `evaluate` over the configs."""
     out = []
     for npu in npus:
         try:
-            out.append(evaluate(npu, dims, trace, phase, batch=batch))
-        except ValueError:          # InfeasibleConfig et al.
+            out.append(evaluate(npu, dims, trace, phase, batch=batch,
+                                context_override=context_override))
+        except (InfeasibleConfig, ValueError):   # infeasible et al.
             out.append(None)
     return out
 
 
 def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
                    batch: Optional[int] = None,
+                   context_override: Optional[int] = None,
                    keys: Optional[list] = None,
                    cache: Optional[dict] = None,
                    use_jit: Optional[bool] = None) -> list:
@@ -429,6 +442,11 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
     diffusion-LM decode phase always uses it (no batch-choice table for
     the steps-per-token aggregation).
 
+    `context_override` (DECODE only) evaluates the per-step traffic at
+    an explicit context length instead of the trace's average — the
+    decode-phase-split roles of `disagg.SystemTopology` (early vs late
+    generation, Section 5.5) score their devices through here.
+
     With `keys` (one hashable per config) and `cache` (a caller-owned
     dict), results memoize across calls: cached keys are returned
     without re-evaluation and misses are written back.  The paired
@@ -437,6 +455,13 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
     """
     if keys is not None and len(keys) != len(npus):
         raise ValueError(f"{len(keys)} keys for {len(npus)} configs")
+    if context_override is not None and phase is Phase.PREFILL:
+        raise ValueError("context_override applies to DECODE only")
+    if context_override is not None and dims.family is Family.DLLM:
+        # the scalar fallback would swallow the per-config ValueError as
+        # "infeasible" — reject the undefined combination loudly instead
+        raise ValueError("context_override is undefined for "
+                         "diffusion-LM decode")
     miss_idx = list(range(len(npus)))
     if cache is not None and keys is not None:
         # a None key means "do not cache this config": always a miss
@@ -450,10 +475,11 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
         if use_jit and perfmodel_jit.supports(dims, phase):
             results = perfmodel_jit.evaluate_batch_table(
                 perfmodel_jit.NPUTable.from_configs(miss), dims, trace,
-                phase, batch=batch)
+                phase, batch=batch, context_override=context_override)
         else:
-            results = _evaluate_batch_scalar(miss, dims, trace, phase,
-                                             batch=batch)
+            results = _evaluate_batch_scalar(
+                miss, dims, trace, phase, batch=batch,
+                context_override=context_override)
     else:
         results = []
     by_idx = dict(zip(miss_idx, results))

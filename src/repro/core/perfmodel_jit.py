@@ -276,13 +276,20 @@ class NPUTable:
 
 @functools.lru_cache(maxsize=512)
 def _phase_tables(dims: ModelDims, trace: Trace, phase: Phase,
-                  batch: Optional[int], quants: tuple) -> dict:
+                  batch: Optional[int], quants: tuple,
+                  context_override: Optional[int] = None) -> dict:
     """Numpy tables: capacity-need / placement-size per (quant, batch
     choice), GEMM geometry per batch choice, byte terms per quant.
 
     All footprint entries come from the scalar model's own lru-cached
     functions, so the jitted feasibility comparison `need <= capacity`
     reproduces `max_*_batch` / `place_data` decisions exactly.
+
+    `context_override` (DECODE only) moves the per-step traffic context
+    off the trace average, mirroring the scalar
+    `evaluate_decode(context_override=...)`: capacity stays at the full
+    context (the device must still hold the whole conversation's KV),
+    only the streamed KV length changes.
     """
     if phase is Phase.PREFILL:
         choices = (batch,) if batch is not None else PREFILL_BATCH_CHOICES
@@ -294,7 +301,8 @@ def _phase_tables(dims: ModelDims, trace: Trace, phase: Phase,
         choices = (batch,) if batch is not None else DECODE_BATCH_CHOICES
         ctx_cap = trace.prompt_tokens + trace.gen_tokens   # full-context KV
         q_cap = 1
-        ctx_traffic = trace.prompt_tokens + trace.gen_tokens // 2
+        ctx_traffic = (context_override if context_override is not None
+                       else trace.prompt_tokens + trace.gen_tokens // 2)
         n_layers_mult = dims.n_layers
     U, NB = len(quants), len(choices)
     need = np.zeros((U, NB))
@@ -662,7 +670,8 @@ def _design_pytree(table: NPUTable) -> dict:
 
 def evaluate_batch_arrays(table: NPUTable, dims: ModelDims, trace: Trace,
                           phase: Phase,
-                          batch: Optional[int] = None) -> dict:
+                          batch: Optional[int] = None,
+                          context_override: Optional[int] = None) -> dict:
     """Score every design in `table` on (dims, trace, phase) in one
     jitted call.  Returns numpy arrays keyed like PhaseResult fields
     plus `feasible` (bool mask) and the mem-breakdown terms.
@@ -670,7 +679,8 @@ def evaluate_batch_arrays(table: NPUTable, dims: ModelDims, trace: Trace,
     Runs in float64 under `jax.experimental.enable_x64` regardless of
     the session default, so results track the scalar oracle.
     """
-    t = _phase_tables(dims, trace, phase, batch, table.quants)
+    t = _phase_tables(dims, trace, phase, batch, table.quants,
+                      context_override)
     prog = _build_program(table.n_slots, len(t["choices"]),
                           t["gm_num"].shape[1], t["hd_num"].shape[1])
     tables = {k: t[k] for k in ("choices", "gm_num", "gm_cls", "vec_el",
@@ -744,10 +754,12 @@ def supports(dims: ModelDims, phase: Phase) -> bool:
 
 def evaluate_batch_table(table: NPUTable, dims: ModelDims, trace: Trace,
                          phase: Phase,
-                         batch: Optional[int] = None) -> list:
+                         batch: Optional[int] = None,
+                         context_override: Optional[int] = None) -> list:
     """`evaluate_batch_arrays` + PhaseResult materialization."""
     if table.n == 0:
         return []
     return results_from_arrays(
-        evaluate_batch_arrays(table, dims, trace, phase, batch=batch),
+        evaluate_batch_arrays(table, dims, trace, phase, batch=batch,
+                              context_override=context_override),
         phase)

@@ -84,6 +84,14 @@ class ModelDims:
     attn_window: int = 0             # sliding window (0 = full attention)
     # diffusion
     diffusion_steps_per_token: float = 0.25   # denoise steps per generated token
+    # Layer-group restriction (paper Section 5.5, Fig. 9 left): a device
+    # dedicated to one sub-workload of every layer.  "all" is the whole
+    # model; "attn" keeps attention/SSM (+ KV cache + embeddings/head) and
+    # drops the FFN; "ffn" keeps only the FFN experts (plus the sampling
+    # head it still has to run).  Role dims are built with
+    # `dataclasses.replace(dims, layer_groups=...)` so every downstream
+    # cache (traffic, footprints, jitted phase tables) keys on the group.
+    layer_groups: str = "all"
 
     @property
     def q_dim(self) -> int:
@@ -102,7 +110,7 @@ class ModelDims:
         return self.n_experts > 1 and self.top_k >= 1
 
     def ffn_weight_params(self) -> int:
-        if self.d_ff <= 0:
+        if self.d_ff <= 0 or self.layer_groups == "attn":
             return 0
         per_expert = (3 if self.gated_ffn else 2) * self.d_model * self.d_ff
         if self.is_moe:
@@ -110,10 +118,14 @@ class ModelDims:
         return per_expert
 
     def attn_weight_params(self) -> int:
+        if self.layer_groups == "ffn":
+            return 0
         return (self.d_model * (self.q_dim + 2 * self.kv_dim)
                 + self.q_dim * self.d_model)
 
     def ssm_weight_params(self) -> int:
+        if self.layer_groups == "ffn":
+            return 0
         if self.family is Family.SSM:
             return 4 * self.d_model * self.q_dim + 2 * self.d_model
         if self.family is Family.HYBRID:
@@ -155,7 +167,7 @@ class ModelDims:
             + self.vocab * self.d_model
 
     def kv_bytes_per_token(self, quant: QuantConfig) -> float:
-        if self.family is Family.SSM:
+        if self.family is Family.SSM or self.layer_groups == "ffn":
             return 0.0
         per_layer = 2 * self.kv_dim * quant.kv_bytes
         if self.n_encoder_layers:
@@ -163,6 +175,8 @@ class ModelDims:
         return self.n_layers * per_layer
 
     def ssm_state_bytes(self, batch: int, quant: QuantConfig) -> float:
+        if self.layer_groups == "ffn":
+            return 0.0
         if self.family is Family.SSM:
             per_layer = self.n_heads * (self.head_dim * self.head_dim
                                         + 2 * self.head_dim)
@@ -359,24 +373,36 @@ def layer_traffic(dims: ModelDims, phase: Phase, batch: int,
     else:
         q = 1
         kv = context
+    # layer-group restriction (Section 5.5): an "attn" device runs the
+    # attention/SSM sub-workload of every layer, a "ffn" device only the
+    # FFN experts — the split that extreme-heterogeneity prefill assigns
+    # to two differently-provisioned devices.
+    do_attn = dims.layer_groups != "ffn"
+    do_ffn = dims.layer_groups != "attn"
 
     if dims.family is Family.SSM:
-        _ssm_ops(dims, batch, q, quant, t)
-        _ffn_ops(dims, batch, q, quant, t)
+        if do_attn:
+            _ssm_ops(dims, batch, q, quant, t)
+        if do_ffn:
+            _ffn_ops(dims, batch, q, quant, t)
         return t
 
     if dims.family is Family.HYBRID:
-        _attn_ops(dims, batch, q, kv, quant, t)
-        _ssm_ops(dims, batch, q, quant, t)
-        _ffn_ops(dims, batch, q, quant, t)
+        if do_attn:
+            _attn_ops(dims, batch, q, kv, quant, t)
+            _ssm_ops(dims, batch, q, quant, t)
+        if do_ffn:
+            _ffn_ops(dims, batch, q, quant, t)
         return t
 
-    _attn_ops(dims, batch, q, kv, quant, t)
-    if dims.cross_attn_every and dims.cross_attn_every > 0:
-        tc = LayerTraffic()
-        _attn_ops(dims, batch, q, dims.cross_len, quant, tc, causal=False)
-        t.merge(tc.scale(1.0 / dims.cross_attn_every))
-    _ffn_ops(dims, batch, q, quant, t)
+    if do_attn:
+        _attn_ops(dims, batch, q, kv, quant, t)
+        if dims.cross_attn_every and dims.cross_attn_every > 0:
+            tc = LayerTraffic()
+            _attn_ops(dims, batch, q, dims.cross_len, quant, tc, causal=False)
+            t.merge(tc.scale(1.0 / dims.cross_attn_every))
+    if do_ffn:
+        _ffn_ops(dims, batch, q, quant, t)
     return t
 
 
@@ -436,6 +462,7 @@ def activation_footprint_gb(dims: ModelDims, batch: int, q_len: int,
     plus ONE active request's widest transient (the d_ff intermediate) —
     requests are processed panel-at-a-time through each layer."""
     resident = batch * q_len * dims.d_model
-    width = dims.d_ff if (dims.d_ff and not dims.is_moe) else dims.d_model
+    width = dims.d_ff if (dims.d_ff and not dims.is_moe
+                          and dims.layer_groups != "attn") else dims.d_model
     active = q_len * max(width, dims.d_model)
     return (resident + active) * quant.activation_bytes / 1e9

@@ -12,9 +12,6 @@ tokens/joule.  The result is merged into ``BENCH_dse.json`` (key
 timing and its achieved tokens/joule.
 """
 
-import json
-import os
-
 from repro.configs.paper_models import LLAMA33_70B
 from repro.core import d1_npu, p1_npu
 from repro.core.disagg import (EXTREME_4ROLE, decode_phase_profile,
@@ -22,7 +19,7 @@ from repro.core.disagg import (EXTREME_4ROLE, decode_phase_profile,
 from repro.core.dse import SystemObjective, run_mobo, system_warm_start
 from repro.core.workload import OSWORLD_LIBREOFFICE
 
-from .common import row, timed
+from .common import merge_bench_json, row, timed
 
 SEARCH_N_TOTAL = 60          # acceptance setting: seeded sweep budget
 SEARCH_N_INIT = 20
@@ -30,8 +27,6 @@ SEARCH_SEED = 0
 SMOKE_N_TOTAL = 40
 TDP_LIMIT_W = 2800.0         # four 700 W sockets, one system budget
 TTFT_CAP_S = 90.0
-
-DEFAULT_JSON_PATH = "BENCH_dse.json"
 
 
 def _searched_system(trace, n_total: int):
@@ -43,25 +38,6 @@ def _searched_system(trace, n_total: int):
     feas = [o for o in res.observations if o.f is not None]
     best = max(feas, key=lambda o: o.f[0], default=None)
     return best, obj
-
-
-def _merge_json(payload: dict) -> None:
-    """Merge the ``extreme_system`` entry into the (possibly existing)
-    BENCH_dse.json — bench_dse writes the file fresh earlier in the
-    suite, this bench adds its key without clobbering the rest."""
-    json_path = os.environ.get("BENCH_DSE_JSON", DEFAULT_JSON_PATH)
-    data = {}
-    try:
-        with open(json_path) as f:
-            data = json.load(f)
-    except (OSError, ValueError):
-        pass                        # no/unreadable file: start fresh
-    data["extreme_system"] = payload
-    try:
-        with open(json_path, "w") as f:
-            json.dump(data, f, indent=1, sort_keys=True)
-    except OSError:
-        pass                        # read-only working dir: CSV rows suffice
 
 
 def run(smoke: bool = False) -> list:
@@ -87,9 +63,10 @@ def run(smoke: bool = False) -> list:
     if best is None:
         out.append(row("fig9_searched_system", us,
                        f"no feasible system in {n_total} evals"))
-        _merge_json({"n_total": n_total, "seed": SEARCH_SEED,
-                     "smoke": smoke, "us_per_run": us,
-                     "tokens_per_joule": None})
+        merge_bench_json("extreme_system", {
+            "n_total": n_total, "seed": SEARCH_SEED,
+            "smoke": smoke, "us_per_run": us,
+            "tokens_per_joule": None})
         return out
     r = best.result
     out.append(row(
@@ -101,7 +78,7 @@ def run(smoke: bool = False) -> list:
         "fig9_searched_system_devices", 0.0,
         " || ".join(f"{role.name}:{cfg.hierarchy.describe()}"
                     for role, cfg in zip(EXTREME_4ROLE.roles, best.npu))))
-    _merge_json({
+    merge_bench_json("extreme_system", {
         "n_total": n_total, "seed": SEARCH_SEED, "smoke": smoke,
         "us_per_run": us,
         "tokens_per_joule": r.tokens_per_joule,

@@ -2,7 +2,32 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
+
+DEFAULT_BENCH_JSON = "BENCH_dse.json"
+
+
+def merge_bench_json(key: str, payload: dict) -> None:
+    """Merge one top-level entry into the (possibly existing) machine-
+    readable benchmark JSON (``BENCH_DSE_JSON`` env var, default
+    ``BENCH_dse.json``) — bench_dse writes the file fresh earlier in
+    the suite; the searched-system benches add their keys through here
+    without clobbering the rest (or each other)."""
+    json_path = os.environ.get("BENCH_DSE_JSON", DEFAULT_BENCH_JSON)
+    data = {}
+    try:
+        with open(json_path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        pass                        # no/unreadable file: start fresh
+    data[key] = payload
+    try:
+        with open(json_path, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+    except OSError:
+        pass                        # read-only working dir: CSV rows suffice
 
 
 def timed(fn, *args, repeat: int = 1, **kwargs):

@@ -31,15 +31,18 @@ gates the jitted perfmodel: the fresh ``jit_pool`` entry
 must stay above both the hard 10x floor and ``1/tolerance`` of the
 baseline speedup, and must report zero jit/scalar parity mismatches —
 a silent regression of the jitted path fails loudly here.  Finally it
-reruns the seeded 4-role extreme-heterogeneity system search
-(bench_extreme, smoke budget): the fresh ``extreme_system``
-tokens/joule must stay at or above both the hard 0.276 floor (the PR 2
-searched pair) and the committed baseline, within the timing
-tolerance.  Refresh the baseline after an intentional perf change
-with::
+reruns the seeded searched-system sweeps: the 4-role extreme-
+heterogeneity search (bench_extreme) must keep its ``extreme_system``
+tokens/joule at or above both the hard 0.276 floor (the PR 2 searched
+pair) and the committed baseline, and the 3-role diffusion-LM fleet
+search (bench_dllm) must keep its ``dllm_system`` tokens/joule at or
+above both the hard `DLLM_TOKJ_FLOOR` (the hand-designed all-P1
+fleet) and the committed baseline — each within the timing tolerance.
+Refresh the baselines after an intentional perf change with::
 
   BENCH_DSE_JSON=benchmarks/BENCH_dse.json \\
-      PYTHONPATH=src python -m benchmarks.run --only "fig6,fig9" --smoke
+      PYTHONPATH=src python -m benchmarks.run \\
+      --only "fig6,fig9,table7" --smoke
 """
 
 import argparse
@@ -76,6 +79,13 @@ JIT_SPEEDUP_FLOOR = 10.0
 # searched prefill/decode *pair* on the same workload, regardless of
 # the committed baseline.
 EXTREME_TOKJ_FLOOR = 0.276
+
+# Acceptance floor for the searched 3-role diffusion-LM fleet
+# (bench_dllm): its seeded tokens/joule must at least match the
+# hand-designed all-P1 fleet on LLaDA-8B/OSWORLD_DLLM (each denoise
+# step is a full-sequence pass, so the on-chip-heavy prefill device is
+# the strongest hand-designed choice for every role).
+DLLM_TOKJ_FLOOR = 0.0034
 
 
 def compare_timings(base: dict, fresh: dict, tolerance: float) -> list:
@@ -116,32 +126,45 @@ def compare_jit_pool(base: dict, fresh: dict, tolerance: float):
     return (g["speedup"], floor, bad, g["speedup"] >= floor and bad == 0)
 
 
-def compare_extreme(base: dict, fresh: dict, tolerance: float):
-    """Extreme-system regression verdict, or None when the baseline
-    predates the bench_extreme entry.
+def _compare_searched_system(base: dict, fresh: dict, key: str,
+                             hard_floor: float, tolerance: float):
+    """Seeded searched-system regression verdict for one BENCH_dse.json
+    entry (`extreme_system`, `dllm_system`), or None when the baseline
+    predates it.
 
     Returns (fresh_tokj, tokj_floor, fresh_us, limit_us, ok): the
     seeded searched-system tokens/joule must reach both the hard
-    `EXTREME_TOKJ_FLOOR` (the PR 2 searched pair) and ~the committed
-    baseline (the search is seeded, so a drop means a modeling or
-    search regression), and its runtime must stay within
-    ``tolerance x`` of the baseline.  A missing fresh entry counts as
-    a regression (limit < 0 marks it), and a baseline captured at a
-    different search budget than the fresh smoke run is flagged
-    (floor = -2: refresh the baseline with ``--smoke``) rather than
-    compared apples-to-oranges."""
-    b = base.get("extreme_system")
+    `hard_floor` and ~the committed baseline (the search is seeded, so
+    a drop means a modeling or search regression), and its runtime
+    must stay within ``tolerance x`` of the baseline.  A missing fresh
+    entry counts as a regression (limit < 0 marks it), and a baseline
+    captured at a different search budget than the fresh smoke run is
+    flagged (floor = -2: refresh the baseline with ``--smoke``) rather
+    than compared apples-to-oranges."""
+    b = base.get(key)
     if not b or not isinstance(b.get("tokens_per_joule"), (int, float)):
         return None
-    g = fresh.get("extreme_system")
+    g = fresh.get(key)
     if not g or not isinstance(g.get("tokens_per_joule"), (int, float)):
-        return (float("nan"), EXTREME_TOKJ_FLOOR, float("nan"), -1.0, False)
+        return (float("nan"), hard_floor, float("nan"), -1.0, False)
     if b.get("n_total") != g.get("n_total"):
         return (g["tokens_per_joule"], -2.0, g["us_per_run"], -2.0, False)
-    floor = max(EXTREME_TOKJ_FLOOR, b["tokens_per_joule"] * (1 - 1e-3))
+    floor = max(hard_floor, b["tokens_per_joule"] * (1 - 1e-3))
     limit = b["us_per_run"] * tolerance
     ok = g["tokens_per_joule"] >= floor and g["us_per_run"] <= limit
     return (g["tokens_per_joule"], floor, g["us_per_run"], limit, ok)
+
+
+def compare_extreme(base: dict, fresh: dict, tolerance: float):
+    """`extreme_system` verdict: hard floor = the PR 2 searched pair."""
+    return _compare_searched_system(base, fresh, "extreme_system",
+                                    EXTREME_TOKJ_FLOOR, tolerance)
+
+
+def compare_dllm(base: dict, fresh: dict, tolerance: float):
+    """`dllm_system` verdict: hard floor = the hand-designed P1 fleet."""
+    return _compare_searched_system(base, fresh, "dllm_system",
+                                    DLLM_TOKJ_FLOOR, tolerance)
 
 
 def check_perf(baseline_path: str, tolerance: float) -> int:
@@ -170,11 +193,14 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
     prev_json_path = os.environ.get("BENCH_DSE_JSON")
     os.environ["BENCH_DSE_JSON"] = fresh_path
     try:
-        from benchmarks import bench_dse, bench_extreme
+        from benchmarks import bench_dllm, bench_dse, bench_extreme
         for line in bench_dse.run(smoke=True):
             print(line)
         if base.get("extreme_system"):   # gate the system search too
             for line in bench_extreme.run(smoke=True):
+                print(line)
+        if base.get("dllm_system"):      # ... and the diffusion fleet
+            for line in bench_dllm.run(smoke=True):
                 print(line)
         with open(fresh_path) as f:
             fresh = json.load(f)
@@ -217,27 +243,35 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
                     f"jit_pool: jitted-vs-scalar speedup {speedup:.1f}x "
                     f"below floor {floor:.1f}x")
     ext = compare_extreme(base, fresh, tolerance)
-    if ext is not None:
-        tokj, floor_tokj, got_us, limit_us, ok = ext
+    dll = compare_dllm(base, fresh, tolerance)
+    # the refresh recipe reruns ALL baseline-writing modules: bench_dse
+    # rewrites BENCH_dse.json from scratch, so refreshing one searched-
+    # system key alone would clobber the other and silently disable its
+    # gate on the next --check
+    refresh_only = "fig6,fig9,table7"
+    for key, verdict in (("extreme_system", ext), ("dllm_system", dll)):
+        if verdict is None:
+            continue
+        tokj, floor_tokj, got_us, limit_us, ok = verdict
         if floor_tokj == -2.0:
             failures.append(
-                "extreme_system: baseline search budget differs from the "
+                f"{key}: baseline search budget differs from the "
                 "fresh --smoke run; refresh the baseline with "
                 "BENCH_DSE_JSON=benchmarks/BENCH_dse.json "
-                "python -m benchmarks.run --only fig6,fig9 --smoke")
+                f"python -m benchmarks.run --only {refresh_only} --smoke")
         elif limit_us < 0:
-            failures.append("extreme_system: missing from fresh run")
+            failures.append(f"{key}: missing from fresh run")
         else:
-            print(f"check_extreme_system,{got_us:.1f},"
-                  f"tokJ={tokj:.3f} floor={floor_tokj:.3f} "
+            print(f"check_{key},{got_us:.1f},"
+                  f"tokJ={tokj:.4f} floor={floor_tokj:.4f} "
                   f"limit_us={limit_us:.1f} {'ok' if ok else 'FAIL'}")
             if tokj < floor_tokj:
                 failures.append(
-                    f"extreme_system: searched tokens/joule {tokj:.3f} "
-                    f"below floor {floor_tokj:.3f}")
+                    f"{key}: searched tokens/joule {tokj:.4f} "
+                    f"below floor {floor_tokj:.4f}")
             if got_us > limit_us:
                 failures.append(
-                    f"extreme_system: {got_us/1e6:.2f}s/run > "
+                    f"{key}: {got_us/1e6:.2f}s/run > "
                     f"{tolerance:g}x baseline "
                     f"{limit_us/tolerance/1e6:.2f}s/run")
     if failures:
@@ -247,6 +281,7 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
           f"within {tolerance:g}x of baseline"
           + (", jit_pool above floor" if jit is not None else "")
           + (", extreme_system above floor" if ext is not None else "")
+          + (", dllm_system above floor" if dll is not None else "")
           + ")")
     return 0
 

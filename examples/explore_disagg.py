@@ -12,6 +12,11 @@ The extreme-heterogeneity section then co-searches a *4-role* system
 5.5 layer-group + decode-phase splits) on the 68-gene `SystemSpace`
 with a seeded GP+EHVI sweep warm-started from per-role champions.
 
+Finally, the diffusion-LM fleet section co-searches the `dllm-3role`
+topology (prompt prefill + early/late denoise split) on LLaDA-8B over
+the agentic-length `OSWORLD_DLLM` trace — DLLM decode is a first-class
+jitted scenario, so the same machinery searches it unchanged.
+
     PYTHONPATH=src python examples/explore_disagg.py [--evals 60]
 """
 
@@ -19,12 +24,13 @@ import argparse
 
 import numpy as np
 
-from repro.configs.paper_models import LLAMA33_70B
+from repro.configs.paper_models import LLADA_8B, LLAMA33_70B
 from repro.core import d1_npu, p1_npu
-from repro.core.disagg import EXTREME_4ROLE, evaluate_disaggregated
+from repro.core.disagg import (DLLM_3ROLE, EXTREME_4ROLE,
+                               evaluate_disaggregated)
 from repro.core.dse import (METHODS, DisaggObjective, SystemObjective,
                             run_mobo, shared_init, system_warm_start)
-from repro.core.workload import OSWORLD_LIBREOFFICE
+from repro.core.workload import OSWORLD_DLLM, OSWORLD_LIBREOFFICE
 
 
 def main():
@@ -98,6 +104,29 @@ def main():
           f"(vs searched pair {r.tokens_per_joule/best_pair_tokj:.2f}x, "
           f"vs P1+D1 {r.tokens_per_joule/hand.tokens_per_joule:.2f}x)")
     for role, cfg in zip(EXTREME_4ROLE.roles, best.npu):
+        print(f"  {role.name:13s} {cfg.describe()}")
+
+    # --- diffusion-LM fleet: DLLM decode as a searched scenario ---
+    print(f"\n== diffusion-LM fleet: {DLLM_3ROLE.name} "
+          f"({', '.join(r.name for r in DLLM_3ROLE.roles)}) on "
+          f"LLaDA-8B/{OSWORLD_DLLM.name}, GP+EHVI {args.evals} evals, "
+          f"2100 W fleet TDP ==")
+    dllm_obj = SystemObjective(LLADA_8B, OSWORLD_DLLM,
+                               topology=DLLM_3ROLE, tdp_limit_w=2100.0,
+                               ttft_cap_s=args.ttft_cap)
+    dllm_init = system_warm_start(dllm_obj, 20, seed=0)
+    dllm_res = run_mobo(dllm_obj, n_total=args.evals, seed=0,
+                        init=list(dllm_init))
+    feas = [o for o in dllm_res.observations if o.f is not None]
+    best = max(feas, key=lambda o: o.f[0], default=None)
+    if best is None:
+        print("no feasible DLLM fleet found — loosen the caps")
+        return
+    r = best.result
+    print(f"best fleet: tokJ={r.tokens_per_joule:.4f} "
+          f"P={r.total_power_w:.0f}W TTFT={r.ttft_s:.1f}s "
+          f"TPSagg={r.decode_tps_aggregate:.2f}")
+    for role, cfg in zip(DLLM_3ROLE.roles, best.npu):
         print(f"  {role.name:13s} {cfg.describe()}")
 
 

@@ -3,22 +3,40 @@
 #
 #   scripts/ci.sh
 #
-# 1. tier-1: the full pytest suite (ROADMAP "Tier-1 verify").
+# 1. tier-1: the full pytest suite (ROADMAP "Tier-1 verify").  When the
+#    pytest-cov plugin is importable, tier-1 additionally enforces a
+#    branch-coverage floor on the analytical core (`repro.core`); on
+#    containers without the plugin (tier-1 forbids installing deps) the
+#    suite runs without the floor — that degradation is the documented
+#    opt-out, printed loudly below.  COV_FLOOR can be overridden per
+#    invocation (e.g. COV_FLOOR=0 scripts/ci.sh to skip the floor while
+#    keeping the report).
 # 2. perf gate: benchmarks/run.py --smoke --check reruns the smoke DSE
 #    bench and fails when any search method exceeds --tolerance x its
 #    committed baseline (benchmarks/BENCH_dse.json), when the jitted
 #    perfmodel's pool-scoring speedup over the scalar oracle drops
 #    below the 10x floor (or 1/tolerance of the baseline speedup),
 #    when the jitted path diverges from the oracle on the bench sample,
-#    or when the seeded extreme-system search (bench_extreme) falls
-#    below its committed tokens/joule baseline / the 0.276 pair floor.
+#    or when a seeded searched-system sweep (bench_extreme's
+#    extreme_system, bench_dllm's dllm_system) falls below its
+#    committed tokens/joule baseline / hard floor.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+COV_FLOOR="${COV_FLOOR:-70}"
+
 echo "== tier-1 tests =="
-python -m pytest -x -q
+if python -c "import pytest_cov" >/dev/null 2>&1; then
+    python -m pytest -x -q --cov=repro.core --cov-branch \
+        --cov-report=term --cov-fail-under="${COV_FLOOR}"
+else
+    echo "pytest-cov not installed: running tier-1 WITHOUT the" \
+         "repro.core branch-coverage floor (install pytest-cov to" \
+         "restore it)"
+    python -m pytest -x -q
+fi
 
 echo "== benchmark smoke + perf-regression check =="
 python -m benchmarks.run --smoke --check

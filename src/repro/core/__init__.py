@@ -21,7 +21,7 @@ The paper's primary contribution, as a composable library:
 from .compute import ComputeConfig, Dataflow, gemm_cycles, vector_seconds
 from .dataflow import (BandwidthPriority, SoftwareStrategy, StoragePriority,
                        place_data)
-from .disagg import (EXTREME_4ROLE, PD_PAIR, DisaggResult, Role,
+from .disagg import (DLLM_3ROLE, EXTREME_4ROLE, PD_PAIR, DisaggResult, Role,
                      SystemResult, SystemTopology, evaluate_disagg_batch,
                      evaluate_disaggregated, evaluate_system,
                      evaluate_system_batch)
@@ -35,6 +35,6 @@ from .perfmodel import (InfeasibleConfig, PhaseResult, evaluate,
                         evaluate_decode, evaluate_prefill, max_decode_batch)
 from .power import compute_power_w, memory_power_w, system_tdp_w
 from .quant.formats import FORMATS, MXFormat, QuantConfig, quantize_dequantize
-from .workload import (BFCL_WEB_SEARCH, CHATBOT, GSM8K_DLLM,
-                       OSWORLD_LIBREOFFICE, Family, ModelDims, Phase, Trace,
-                       layer_traffic, weight_footprint_gb)
+from .workload import (BFCL_DLLM, BFCL_WEB_SEARCH, CHATBOT, GSM8K_DLLM,
+                       OSWORLD_DLLM, OSWORLD_LIBREOFFICE, Family, ModelDims,
+                       Phase, Trace, layer_traffic, weight_footprint_gb)

@@ -68,7 +68,7 @@ from typing import Optional
 from .npu import NPUConfig
 from .perfmodel import (InfeasibleConfig, PhaseResult, evaluate,
                         evaluate_batch, evaluate_decode, evaluate_prefill)
-from .workload import ModelDims, Phase, Trace, layer_traffic
+from .workload import Family, ModelDims, Phase, Trace, layer_traffic
 
 # NVLink-class chip-to-chip interconnect (LLMCompass-style constants)
 NVLINK_GBPS = 450.0         # effective per-direction bandwidth
@@ -200,6 +200,19 @@ EXTREME_4ROLE = SystemTopology("extreme-4role", (
     Role("decode-late", Phase.DECODE, ctx_frac=(3, 4), gen_frac=0.5),
 ))
 
+# Diffusion-LM serving fleet (Section 5.4.1 workload as a searched
+# scenario): one prompt-prefill device feeding an early/late denoise
+# split.  A DLLM decode role's ctx_frac sets the sequence length each
+# denoise step reprocesses (capacity stays at the full context) — the
+# same quartile points as the autoregressive decode split, but the
+# traffic is a full PREFILL-geometry pass per step, so early and late
+# devices diverge far harder than in the autoregressive case.
+DLLM_3ROLE = SystemTopology("dllm-3role", (
+    Role("prefill", Phase.PREFILL),
+    Role("denoise-early", Phase.DECODE, ctx_frac=(1, 4), gen_frac=0.5),
+    Role("denoise-late", Phase.DECODE, ctx_frac=(3, 4), gen_frac=0.5),
+))
+
 
 @dataclasses.dataclass(frozen=True)
 class SystemResult:
@@ -272,7 +285,13 @@ def _combine_system(topo: SystemTopology, results: list, quants: list,
                 dims.kv_bytes_per_token(prev_q) * ctx_switch)
             mig_s += t_m
             e_req += e_m
-        step_per_token += r.gen_frac * d.latency_s
+        # an autoregressive decode role's latency_s is one step = one
+        # token per request; a DLLM role has no step — its latency_s is
+        # the whole generation's denoise time, so normalize to
+        # per-generated-token units before the gen_frac-weighted fold
+        step_s = (d.latency_s / gen if dims.family is Family.DLLM
+                  else d.latency_s)
+        step_per_token += r.gen_frac * step_s
         e_per_token_dec += r.gen_frac * d.energy_per_token_j
         if r.gen_frac > 0:
             agg_tps = min(agg_tps, d.throughput_tps / r.gen_frac)

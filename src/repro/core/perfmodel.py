@@ -27,10 +27,14 @@ implementation — plain float64 Python, one design at a time, raising
 the structure-of-arrays jax.jit program in perfmodel_jit.py, which
 replicates this arithmetic op-for-op and encodes infeasibility as a
 mask; tests/test_perfmodel_jit.py property-tests the two against each
-other (rtol 1e-5, identical feasibility).  Behavioral changes MUST land
-in the scalar oracle first and be mirrored in perfmodel_jit, never the
-other way around.  Set REPRO_PERFMODEL_SCALAR=1 (or pass
-`use_jit=False`) to force batch evaluation through the oracle.
+other (rtol 1e-5, identical feasibility).  Since the denoise-step
+tables landed, the jitted path covers EVERY (family, phase) pair —
+diffusion-LM decode included — so the oracle's remaining duties are
+parity testing and explicit opt-out, never routing.  Behavioral
+changes MUST land in the scalar oracle first and be mirrored in
+perfmodel_jit, never the other way around.  Set
+REPRO_PERFMODEL_SCALAR=1 (or pass `use_jit=False`) to force batch
+evaluation through the oracle.
 """
 
 from __future__ import annotations
@@ -340,13 +344,8 @@ def evaluate_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
     ctx = (context_override if context_override is not None
            else trace.prompt_tokens + trace.gen_tokens // 2)
     if dims.family is Family.DLLM:
-        if context_override is not None:
-            # every denoise step reprocesses the full sequence: there is
-            # no per-step context to override — fail loudly rather than
-            # silently scoring decode-phase-split roles identically
-            raise ValueError("context_override is undefined for "
-                             "diffusion-LM decode")
-        return _evaluate_dllm_decode(npu, dims, trace, b)
+        return _evaluate_dllm_decode(npu, dims, trace, b,
+                                     context_override=context_override)
     placement = _placement_for(npu, dims, b,
                                trace.prompt_tokens + trace.gen_tokens, 1)
     traffic = layer_traffic_cached(dims, Phase.DECODE, b, ctx, npu.quant)
@@ -370,12 +369,21 @@ def evaluate_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
 
 
 def _evaluate_dllm_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
-                          batch: int) -> PhaseResult:
+                          batch: int,
+                          context_override: Optional[int] = None
+                          ) -> PhaseResult:
     """Diffusion LM decode (Section 5.4.1): each denoise step processes the
-    full sequence; steps per generated token given by the model."""
+    full sequence; steps per generated token given by the model.
+
+    `context_override` (decode-phase-split roles, Section 5.5) sets the
+    sequence length each denoise step reprocesses — the conversation
+    early/late in generation — while capacity and placement stay at the
+    full context (the device must still hold the whole conversation),
+    the same capacity-vs-traffic split `evaluate_decode` applies."""
     S = trace.prompt_tokens + trace.gen_tokens
+    seq = context_override if context_override is not None else S
     placement = _placement_for(npu, dims, batch, S, S)
-    traffic = layer_traffic_cached(dims, Phase.PREFILL, batch, S, npu.quant)
+    traffic = layer_traffic_cached(dims, Phase.PREFILL, batch, seq, npu.quant)
     t_layer, e_layer, bneck, bd = _layer_time_and_energy(npu, traffic, placement)
     steps = max(1.0, trace.gen_tokens * dims.diffusion_steps_per_token)
     t_step = t_layer * dims.n_layers
@@ -438,14 +446,18 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
     unwind).
 
     The scalar path (`evaluate`) remains the reference oracle:
-    `use_jit=False` or REPRO_PERFMODEL_SCALAR=1 forces it, and the
-    diffusion-LM decode phase always uses it (no batch-choice table for
-    the steps-per-token aggregation).
+    `use_jit=False` or REPRO_PERFMODEL_SCALAR=1 forces it.  Every
+    (family, phase) combination — including diffusion-LM decode, via
+    the per-batch-choice denoise-step tables in perfmodel_jit — routes
+    through the jitted program; the oracle exists for parity testing
+    and explicit opt-out, not as a routing fallback.
 
     `context_override` (DECODE only) evaluates the per-step traffic at
     an explicit context length instead of the trace's average — the
     decode-phase-split roles of `disagg.SystemTopology` (early vs late
-    generation, Section 5.5) score their devices through here.
+    generation, Section 5.5) score their devices through here.  For
+    diffusion-LM decode it sets the sequence length each denoise step
+    reprocesses (capacity stays at the full context).
 
     With `keys` (one hashable per config) and `cache` (a caller-owned
     dict), results memoize across calls: cached keys are returned
@@ -457,11 +469,6 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
         raise ValueError(f"{len(keys)} keys for {len(npus)} configs")
     if context_override is not None and phase is Phase.PREFILL:
         raise ValueError("context_override applies to DECODE only")
-    if context_override is not None and dims.family is Family.DLLM:
-        # the scalar fallback would swallow the per-config ValueError as
-        # "infeasible" — reject the undefined combination loudly instead
-        raise ValueError("context_override is undefined for "
-                         "diffusion-LM decode")
     miss_idx = list(range(len(npus)))
     if cache is not None and keys is not None:
         # a None key means "do not cache this config": always a miss

@@ -41,9 +41,21 @@ Known oracle deviations (documented, sub-1e-12 relative):
 Neither affects feasibility (capacity comparisons use inputs computed
 by the scalar footprint functions themselves).
 
-The diffusion-LM decode path (`_evaluate_dllm_decode`) keeps steps-per-
-token aggregation that has no batch-choice table; `evaluate_batch`
-falls back to the scalar oracle for that family/phase combination.
+Diffusion-LM decode (the denoise-step table): DLLM decode has no
+autoregressive step — every denoise step reprocesses the whole
+sequence with PREFILL GEMM geometry, and a request's generation costs
+``steps = max(1, gen_tokens * diffusion_steps_per_token)`` such
+passes.  `_phase_tables` encodes this as a per-batch-choice table
+whose capacity-need column keeps the `max_decode_batch` selection rule
+(activations at q_len = 1) while the placement-size and `need_place`
+columns hold the full-sequence state the `place_data` gate actually
+checks (activations and KV at prompt + gen tokens), and whose traffic
+geometry is the full-sequence PREFILL pass at the (optionally
+`context_override`-shortened) denoised sequence length.  The jitted
+program then scales the layer pass by the dynamic `steps` scalar and
+drops the lm-head term (`head_mult = 0`), reproducing the scalar
+`_evaluate_dllm_decode` op-for-op — so `supports()` is True for every
+(family, phase) pair and no scalar routing fallback remains.
 """
 
 from __future__ import annotations
@@ -289,23 +301,50 @@ def _phase_tables(dims: ModelDims, trace: Trace, phase: Phase,
     off the trace average, mirroring the scalar
     `evaluate_decode(context_override=...)`: capacity stays at the full
     context (the device must still hold the whole conversation's KV),
-    only the streamed KV length changes.
+    only the streamed KV length changes.  For diffusion-LM decode it
+    shortens the sequence each denoise step reprocesses instead.
+
+    Diffusion-LM decode is the one (family, phase) pair where the
+    batch-selection need and the placement state diverge: the scalar
+    `max_decode_batch` sizes activations at q_len = 1, but
+    `_evaluate_dllm_decode` then places (and `place_data` gates) the
+    full-sequence activations/KV.  The tables therefore carry a
+    separate `need_place` column (the `place_data` sum, + 1e-9 slack in
+    the program) alongside the selection `need`, PREFILL-geometry
+    traffic at the denoised sequence length, the denoise-step count
+    `steps`, and `head_mult` = 0 (no lm-head pass per denoise step).
     """
+    dllm_decode = dims.family is Family.DLLM and phase is Phase.DECODE
     if phase is Phase.PREFILL:
         choices = (batch,) if batch is not None else PREFILL_BATCH_CHOICES
         ctx_cap = trace.prompt_tokens          # capacity at prompt KV
         q_cap = trace.prompt_tokens            # activations at full prompt
+        q_sel = q_cap                          # selection == placement size
         ctx_traffic = trace.prompt_tokens
+        traffic_phase = Phase.PREFILL
         n_layers_mult = dims.n_layers + dims.n_encoder_layers
+    elif dllm_decode:
+        choices = (batch,) if batch is not None else DECODE_BATCH_CHOICES
+        S = trace.prompt_tokens + trace.gen_tokens
+        ctx_cap = S                # capacity/placement at the full context
+        q_cap = S                  # ... incl. full-sequence activations
+        q_sel = 1                  # but max_decode_batch selects at q=1
+        ctx_traffic = (context_override if context_override is not None
+                       else S)     # sequence reprocessed per denoise step
+        traffic_phase = Phase.PREFILL      # full-sequence denoise pass
+        n_layers_mult = dims.n_layers
     else:
         choices = (batch,) if batch is not None else DECODE_BATCH_CHOICES
         ctx_cap = trace.prompt_tokens + trace.gen_tokens   # full-context KV
         q_cap = 1
+        q_sel = 1
         ctx_traffic = (context_override if context_override is not None
                        else trace.prompt_tokens + trace.gen_tokens // 2)
+        traffic_phase = Phase.DECODE
         n_layers_mult = dims.n_layers
     U, NB = len(quants), len(choices)
     need = np.zeros((U, NB))
+    need_place = np.zeros((U, NB))
     sizes = np.zeros((U, NB, 3))
     kvw = np.zeros((U, NB))
     actx = np.zeros((U, NB))
@@ -317,14 +356,20 @@ def _phase_tables(dims: ModelDims, trace: Trace, phase: Phase,
         for bi, b in enumerate(choices):
             kv = kv_footprint_gb(dims, b, ctx_cap, q)
             act = activation_footprint_gb(dims, b, q_cap, q)
+            act_sel = (act if q_sel == q_cap
+                       else activation_footprint_gb(dims, b, q_sel, q))
             if batch is None:
-                need[ui, bi] = w + kv + act    # max_*_batch order
+                need[ui, bi] = w + kv + act_sel    # max_*_batch order
             else:
                 # explicit batch: only place_data's sum([w, act, kv])
                 # + 1e-9 slack gate applies
                 need[ui, bi] = (0.0 + w + act) + kv
+            # the place_data gate on the chosen batch's placement state
+            # (sum([w, act, kv]) association, 1e-9 slack in the program)
+            need_place[ui, bi] = (0.0 + w + act) + kv
             sizes[ui, bi] = (w, act, kv)
-            tr = layer_traffic_cached(dims, phase, b, ctx_traffic, q)
+            tr = layer_traffic_cached(dims, traffic_phase, b, ctx_traffic,
+                                      q)
             kvw[ui, bi] = tr.kv_write_bytes
             actx[ui, bi] = tr.act_extra_bytes
             hd = lm_head_traffic_cached(dims, b, 1, q)
@@ -349,13 +394,23 @@ def _phase_tables(dims: ModelDims, trace: Trace, phase: Phase,
                     "GEMM geometry unexpectedly depends on quantization"
     return {
         "choices": np.asarray(choices, dtype=np.float64),
-        "need": need, "sizes": sizes, "kvw": kvw, "actx": actx,
+        "need": need, "need_place": need_place,
+        "sizes": sizes, "kvw": kvw, "actx": actx,
         "gm_num": gm_num, "gm_cls": gm_cls, "vec_el": vec_el,
         "hd_num": hd_num, "hd_cls": hd_cls, "vec_h": vec_h,
         "actx_h": actx_h,
         "n_layers_mult": float(n_layers_mult),
-        "token_mult": float(trace.prompt_tokens)
-        if phase is Phase.PREFILL else 1.0,
+        "token_mult": (float(trace.prompt_tokens)
+                       if phase is Phase.PREFILL
+                       else float(trace.gen_tokens) if dllm_decode
+                       else 1.0),
+        # denoise passes per request; the whole layer term scales by it
+        "steps": (max(1.0, trace.gen_tokens
+                      * dims.diffusion_steps_per_token)
+                  if dllm_decode else 1.0),
+        # DLLM decode has NO lm-head term at all (the scalar
+        # _evaluate_dllm_decode never computes one): zero it out
+        "head_mult": 0.0 if dllm_decode else 1.0,
         "tol": 1e-9 if batch is not None else 0.0,
     }
 
@@ -369,14 +424,19 @@ def _phase_tables(dims: ModelDims, trace: Trace, phase: Phase,
 @functools.lru_cache(maxsize=64)
 def _build_program(L: int, NB: int, G: int, GH: int):
 
-    def one(d, t, tol, token_mult, n_mult):
+    def one(d, t, tol, token_mult, n_mult, steps, head_mult):
         # quant-dependent workload rows arrive pre-gathered per design
         # (numpy-side), so the distinct-quant count never enters the
         # traced shapes — one program per (L, NB, G, GH) signature.
         cap_total = d["total_cap"]
         ok = d["need"] <= cap_total + tol                  # [NB]
-        feasible = jnp.any(ok)
         b_idx = jnp.maximum(jnp.max(jnp.where(ok, jnp.arange(NB), -1)), 0)
+        # selection picks the batch, place_data gates its placement
+        # state (diverges from the selection need only for DLLM decode,
+        # whose batch rule sizes activations at q=1 but places them at
+        # the full sequence — mirrors the scalar InfeasibleConfig path)
+        feasible = jnp.any(ok) \
+            & (d["need_place"][b_idx] <= cap_total + 1e-9)
         sizes3 = d["sizes"][b_idx]                         # (w, act, kv) GB
         cap = d["cap"]                                     # [L]
 
@@ -619,8 +679,12 @@ def _build_program(L: int, NB: int, G: int, GH: int):
             t["hd_num"], t["hd_cls"], GH, t["vec_h"][b_idx],
             d["actx_h"][b_idx], 0.0)
 
-        latency = t_layer * n_mult + t_head
-        energy = e_layer * n_mult + e_head
+        # `steps` (denoise passes per request) multiplies the layer term
+        # AFTER the n_mult product — the scalar's (t_layer * n_layers)
+        # * steps association — and the head term is gated by head_mult
+        # (0 for DLLM decode: no lm-head pass per denoise step).
+        latency = t_layer * n_mult * steps + t_head * head_mult
+        energy = e_layer * n_mult * steps + e_head * head_mult
         batch_val = t["choices"][b_idx]
         tokens = batch_val * token_mult
         tps = jnp.where(latency > 0, tokens / latency, 0.0)
@@ -634,16 +698,17 @@ def _build_program(L: int, NB: int, G: int, GH: int):
             "throughput_tps": tps,
             "avg_power_w": power,
             "energy_per_token_j": ept,
-            "compute_time_s": bd[0] * n_mult,
-            "memory_time_s": jnp.maximum(bd[1], bd[2]) * n_mult,
+            "compute_time_s": bd[0] * n_mult * steps,
+            "memory_time_s": jnp.maximum(bd[1], bd[2]) * n_mult * steps,
             "bottleneck": bneck,
             "compute_s": bd[0], "matrix_s": bd[1], "vector_s": bd[2],
             "scratch_s": bd[3], "bytes_weights": bd[4],
             "bytes_acts": bd[5], "bytes_kv": bd[6], "bytes_scratch": bd[7],
         }
 
-    def run(d, t, tol, token_mult, n_mult):
-        return jax.vmap(lambda di: one(di, t, tol, token_mult, n_mult))(d)
+    def run(d, t, tol, token_mult, n_mult, steps, head_mult):
+        return jax.vmap(lambda di: one(di, t, tol, token_mult, n_mult,
+                                       steps, head_mult))(d)
 
     return jax.jit(run)
 
@@ -688,6 +753,7 @@ def evaluate_batch_arrays(table: NPUTable, dims: ModelDims, trace: Trace,
     d = _design_pytree(table)
     uq = table.quant_idx
     d["need"] = t["need"][uq]           # [n, NB]
+    d["need_place"] = t["need_place"][uq]
     d["sizes"] = t["sizes"][uq]         # [n, NB, 3]
     d["kvw"] = t["kvw"][uq]
     d["actx"] = t["actx"][uq]
@@ -706,7 +772,7 @@ def evaluate_batch_arrays(table: NPUTable, dims: ModelDims, trace: Trace,
         d = {k: np.asarray(v)[pad_idx] for k, v in d.items()}
     with enable_x64():
         out = prog(d, tables, t["tol"], t["token_mult"],
-                   t["n_layers_mult"])
+                   t["n_layers_mult"], t["steps"], t["head_mult"])
         out = {k: np.asarray(v)[:n] for k, v in out.items()}
     return out
 
@@ -747,9 +813,15 @@ def results_from_arrays(arrays: dict, phase: Phase) -> list:
 
 
 def supports(dims: ModelDims, phase: Phase) -> bool:
-    """Whether the jitted path covers this (family, phase) — diffusion-LM
-    decode keeps its steps-per-token scalar path."""
-    return not (dims.family is Family.DLLM and phase is Phase.DECODE)
+    """Whether the jitted path covers this (family, phase).
+
+    Always True: the denoise-step tables folded the last holdout
+    (diffusion-LM decode) into the jitted program.  Kept as the
+    routing hook so a future family with genuinely table-free
+    aggregation has a place to opt out — and so callers can assert
+    full coverage."""
+    del dims, phase
+    return True
 
 
 def evaluate_batch_table(table: NPUTable, dims: ModelDims, trace: Trace,

@@ -203,6 +203,14 @@ OSWORLD_LIBREOFFICE = Trace("osworld-libreoffice", 90_000, 8_000)
 GSM8K_DLLM = Trace("gsm8k-dllm", 1_400, 200)
 CHATBOT = Trace("chatbot", 1_400, 200)
 
+# Agentic-length diffusion-LM traces (Section 5.4.1 workload at the
+# Section 5.1 agentic scale): every denoise step reprocesses the whole
+# conversation, so OSWorld/BFCL-scale prompts stress decode bandwidth
+# and capacity far harder than the short GSM8K math trace — these feed
+# the searched `dllm_system` bench row and the DLLM decode-role tests.
+OSWORLD_DLLM = Trace("osworld-dllm", 90_000, 8_000)
+BFCL_DLLM = Trace("bfcl-dllm", 114_000, 5_000)
+
 
 @dataclasses.dataclass(frozen=True)
 class GemmOp:

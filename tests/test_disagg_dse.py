@@ -277,6 +277,7 @@ def test_best_per_phase_skips_infeasible_keeps_bugs():
 # Perf-regression gate plumbing (benchmarks/run.py --check)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.bench
 def test_bench_check_compare_timings():
     import pathlib
     import sys
@@ -295,6 +296,7 @@ def test_bench_check_compare_timings():
     assert all(not ok for _, _, _, ok in verdicts)
 
 
+@pytest.mark.bench
 def test_bench_check_compare_jit_pool():
     import pathlib
     import sys

@@ -4,13 +4,20 @@ The contract (perfmodel.py module docstring): `perfmodel.evaluate` is
 the reference implementation; the jitted batch path must reproduce it
 at rtol 1e-5 with IDENTICAL feasibility decisions — same
 `InfeasibleConfig` set, same capacity-derived max batch, no float32
-off-by-one at the capacity boundary.
+off-by-one at the capacity boundary.  Since the denoise-step tables
+landed, coverage includes diffusion-LM decode — property-tested over
+random valid designs x DLLM model variants x traces, with its boundary
+behaviors (steps clamp at 1, the place-data gate on full-sequence
+state, `context_override` as the denoised sequence length) asserted
+explicitly.
 
 The companion regression — that routing the searchers through the
 jitted path leaves the sha-pinned PR 2 seeded trajectories
 byte-identical — is asserted by
 tests/test_disagg_dse.py::test_single_device_trajectories_unchanged.
 """
+
+import dataclasses
 
 import numpy as np
 import pytest
@@ -20,18 +27,21 @@ from repro.core import baseline_npu, d1_npu, d2_npu, p1_npu, p2_npu
 from repro.core import perfmodel_jit as pj
 from repro.core.dse import space as sp
 from repro.core.perfmodel import (InfeasibleConfig, evaluate,
-                                  evaluate_batch, max_decode_batch,
-                                  max_prefill_batch)
-from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
+                                  evaluate_batch, evaluate_decode,
+                                  max_decode_batch, max_prefill_batch)
+from repro.core.workload import (BFCL_DLLM, GSM8K_DLLM, OSWORLD_DLLM,
+                                 OSWORLD_LIBREOFFICE, Family, Phase)
 
 RTOL = 1e-5
 FIELDS = ("latency_s", "tokens", "throughput_tps", "avg_power_w",
           "energy_per_token_j", "compute_time_s", "memory_time_s")
 
 
-def _scalar(npu, dims, phase, batch=None):
+def _scalar(npu, dims, phase, batch=None, trace=OSWORLD_LIBREOFFICE,
+            context_override=None):
     try:
-        return evaluate(npu, dims, OSWORLD_LIBREOFFICE, phase, batch=batch)
+        return evaluate(npu, dims, trace, phase, batch=batch,
+                        context_override=context_override)
     except (InfeasibleConfig, ValueError):
         return None
 
@@ -142,8 +152,7 @@ def test_explicit_batch_override_parity():
 
 
 # ---------------------------------------------------------------------------
-# Object-API routing (evaluate_batch -> NPUTable.from_configs) and the
-# scalar fallback for the diffusion-LM decode path
+# Object-API routing (evaluate_batch -> NPUTable.from_configs)
 # ---------------------------------------------------------------------------
 
 def test_evaluate_batch_routes_table6_configs_through_jit():
@@ -156,17 +165,152 @@ def test_evaluate_batch_routes_table6_configs_through_jit():
             _assert_match(w, g, f"table6/{npu.name}/{phase.value}")
 
 
-def test_dllm_decode_falls_back_to_oracle():
-    assert not pj.supports(LLADA_8B, Phase.DECODE)
-    assert pj.supports(LLADA_8B, Phase.PREFILL)
+# ---------------------------------------------------------------------------
+# Diffusion-LM decode: the denoise-step tables replaced the scalar
+# fallback — the jitted path must cover every (family, phase) pair and
+# reproduce `_evaluate_dllm_decode` exactly.
+# ---------------------------------------------------------------------------
+
+DLLM_VARIANTS = (
+    LLADA_8B,
+    dataclasses.replace(LLADA_8B, name="llada-8b-2spt",
+                        diffusion_steps_per_token=2.0),
+    # gen * steps_per_token < 1 for every trace here: the steps clamp
+    dataclasses.replace(LLADA_8B, name="llada-8b-clamp",
+                        diffusion_steps_per_token=1e-3),
+)
+
+
+def test_supports_covers_every_family_phase():
+    """No scalar routing fallback remains: every (family, phase) pair is
+    jitted (the DLLM decode carve-out was the last one)."""
+    for fam in Family:
+        dims = dataclasses.replace(LLADA_8B, family=fam)
+        for phase in Phase:
+            assert pj.supports(dims, phase), (fam, phase)
+
+
+@pytest.mark.parametrize("dims", DLLM_VARIANTS, ids=lambda d: d.name)
+@pytest.mark.parametrize("trace", [GSM8K_DLLM, OSWORLD_DLLM],
+                         ids=lambda t: t.name)
+def test_dllm_decode_jit_matches_scalar(design_pool, dims, trace):
+    xs, table, npus = design_pool
+    got = pj.evaluate_batch_table(table, dims, trace, Phase.DECODE)
+    n_feasible = 0
+    for x, npu, g in zip(xs, npus, got):
+        want = _scalar(npu, dims, Phase.DECODE, trace=trace)
+        n_feasible += want is not None
+        _assert_match(want, g, f"{dims.name}/{trace.name}/{list(x)}")
+    assert n_feasible >= len(xs) // 4  # the agentic trace rejects some
+
+
+def test_dllm_steps_clamp_at_one(design_pool):
+    """gen_tokens * diffusion_steps_per_token below 1 clamps to exactly
+    one denoise pass: two sub-threshold step rates score identically,
+    while the paper's 0.25 (50 passes on GSM8K) must not."""
+    _, table, _ = design_pool
+    tiny = dataclasses.replace(LLADA_8B, name="llada-tiny-spt",
+                               diffusion_steps_per_token=1e-6)
+    small = dataclasses.replace(LLADA_8B, name="llada-small-spt",
+                                diffusion_steps_per_token=1e-3)
+    r_tiny = pj.evaluate_batch_table(table, tiny, GSM8K_DLLM, Phase.DECODE)
+    r_small = pj.evaluate_batch_table(table, small, GSM8K_DLLM,
+                                      Phase.DECODE)
+    r_full = pj.evaluate_batch_table(table, LLADA_8B, GSM8K_DLLM,
+                                     Phase.DECODE)
+    n_feasible = 0
+    for t_, s_, f_ in zip(r_tiny, r_small, r_full):
+        assert (t_ is None) == (s_ is None) == (f_ is None)
+        if t_ is None:
+            continue
+        n_feasible += 1
+        assert t_.latency_s == s_.latency_s          # both clamped to 1
+        assert t_.energy_per_token_j == s_.energy_per_token_j
+        # 0.25 steps/token * 200 gen = 50 denoise passes
+        assert f_.latency_s == pytest.approx(50.0 * t_.latency_s, rel=RTOL)
+    assert n_feasible > 0
+
+
+def test_dllm_context_override_capacity_vs_traffic():
+    """`context_override` on DLLM decode is now DEFINED: it shortens the
+    sequence each denoise step reprocesses (traffic side) while the
+    capacity/batch decision stays at the full context — so feasibility
+    and max batch match the no-override evaluation, but the step gets
+    cheaper.  Parity with the scalar oracle at rtol 1e-5."""
+    xs = _valid_single_designs(5, 48)
+    table = sp.decode_batch(xs)
+    npus = [sp.decode(x) for x in xs]
+    trace = OSWORLD_DLLM
+    ctx = trace.prompt_tokens + trace.gen_tokens // 4
+    got = pj.evaluate_batch_table(table, LLADA_8B, trace, Phase.DECODE,
+                                  context_override=ctx)
+    base = pj.evaluate_batch_table(table, LLADA_8B, trace, Phase.DECODE)
+    n_feasible = 0
+    for x, npu, g, b0 in zip(xs, npus, got, base):
+        want = _scalar(npu, LLADA_8B, Phase.DECODE, trace=trace,
+                       context_override=ctx)
+        _assert_match(want, g, f"dllm-ctx/{list(x)}")
+        assert (g is None) == (b0 is None)   # capacity at full context
+        if g is None:
+            continue
+        n_feasible += 1
+        assert g.batch == b0.batch           # ... so same max batch
+        assert g.latency_s < b0.latency_s    # shorter denoised sequence
+    assert n_feasible > 0
+
+
+def test_dllm_context_override_accepted_through_scalar_and_batch():
+    """The old ValueError is gone on both paths, and they agree."""
+    ctx = GSM8K_DLLM.prompt_tokens + GSM8K_DLLM.gen_tokens // 4
+    want = evaluate_decode(p1_npu(), LLADA_8B, GSM8K_DLLM,
+                           context_override=ctx)
+    got = evaluate_batch([p1_npu()], LLADA_8B, GSM8K_DLLM, Phase.DECODE,
+                         context_override=ctx)[0]
+    _assert_match(want, got, "dllm-ctx-batch")
+    full = evaluate_decode(p1_npu(), LLADA_8B, GSM8K_DLLM)
+    assert want.batch == full.batch
+    assert want.latency_s < full.latency_s
+
+
+def test_dllm_explicit_batch_place_gate_parity():
+    """Explicit-batch DLLM decode exercises the full-sequence place_data
+    gate both ways: max_decode_batch's q=1 selection rule never runs,
+    so feasibility is exactly `place_data` on (weights, full-sequence
+    activations, full-context KV) — probed on the longest-context
+    agentic trace (BFCL_DLLM, 119k tokens), where the gate bites
+    hardest."""
+    xs = _valid_single_designs(9, 48)
+    table = sp.decode_batch(xs)
+    npus = [sp.decode(x) for x in xs]
+    statuses = set()
+    for b in (8, 64):
+        got = pj.evaluate_batch_table(table, LLADA_8B, BFCL_DLLM,
+                                      Phase.DECODE, batch=b)
+        for x, npu, g in zip(xs, npus, got):
+            want = _scalar(npu, LLADA_8B, Phase.DECODE, batch=b,
+                           trace=BFCL_DLLM)
+            _assert_match(want, g, f"dllm-batch={b}/{list(x)}")
+            statuses.add(g is not None)
+    assert statuses == {True, False}   # the gate rejected AND accepted
+
+
+def test_dllm_decode_routes_through_jit(monkeypatch):
+    """evaluate_batch must score DLLM decode through the jitted program,
+    not the oracle loop (which now exists for parity/opt-out only)."""
+    import repro.core.perfmodel as pm
+
+    def boom(*a, **k):
+        raise AssertionError("scalar oracle must not route batch evals")
+
+    monkeypatch.setattr(pm, "_evaluate_batch_scalar", boom)
     npus = [p1_npu(), d2_npu()]
-    got = evaluate_batch(npus, LLADA_8B, OSWORLD_LIBREOFFICE, Phase.DECODE)
-    for npu, g in zip(npus, got):
-        want = _scalar(npu, LLADA_8B, Phase.DECODE)
-        assert (want is None) == (g is None)
-        if want is not None:
-            assert g.throughput_tps == want.throughput_tps
-            assert g.energy_per_token_j == want.energy_per_token_j
+    got = evaluate_batch(npus, LLADA_8B, GSM8K_DLLM, Phase.DECODE)
+    assert any(g is not None for g in got)
+    monkeypatch.undo()
+    ref = evaluate_batch(npus, LLADA_8B, GSM8K_DLLM, Phase.DECODE,
+                         use_jit=False)
+    for npu, g, w in zip(npus, got, ref):
+        _assert_match(w, g, f"dllm-routing/{npu.name}")
 
 
 def test_evaluate_batch_cache_and_keys_semantics():

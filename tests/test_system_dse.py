@@ -2,7 +2,8 @@
 enforcement, K=2 byte-equivalence with the paired machinery (pinned
 GP+EHVI trajectory), batch-vs-scalar equivalence of the generic system
 composition, layer-group / decode-phase role evaluators, the d>2 EHVI
-routing, the DLLM jit fallback, and the extreme-system perf gate."""
+routing, DLLM decode roles as a first-class jitted searched scenario
+(the `dllm-3role` fleet), and the searched-system perf gates."""
 
 import hashlib
 import itertools
@@ -13,10 +14,10 @@ import pytest
 
 from repro.configs.paper_models import LLADA_8B, QWEN3_32B
 from repro.core import d1_npu, p1_npu
-from repro.core.disagg import (EXTREME_4ROLE, PD_PAIR, Role, SystemTopology,
-                               _combine_phase_results, _combine_system,
-                               evaluate_disaggregated, evaluate_system,
-                               evaluate_system_batch)
+from repro.core.disagg import (DLLM_3ROLE, EXTREME_4ROLE, PD_PAIR, Role,
+                               SystemTopology, _combine_phase_results,
+                               _combine_system, evaluate_disaggregated,
+                               evaluate_system, evaluate_system_batch)
 from repro.core.dse import (DisaggObjective, PairedSpace, SystemObjective,
                             hypervolume, mc_ehvi, run_mobo, run_motpe,
                             run_nsga2, run_random, shared_init,
@@ -24,8 +25,9 @@ from repro.core.dse import (DisaggObjective, PairedSpace, SystemObjective,
 from repro.core.dse import space as sp
 from repro.core.perfmodel import (InfeasibleConfig, evaluate_batch,
                                   evaluate_decode)
-from repro.core.workload import (GSM8K_DLLM, OSWORLD_LIBREOFFICE, Phase,
-                                 layer_traffic, weight_footprint_gb)
+from repro.core.workload import (GSM8K_DLLM, OSWORLD_DLLM,
+                                 OSWORLD_LIBREOFFICE, Phase, layer_traffic,
+                                 weight_footprint_gb)
 import dataclasses
 
 
@@ -143,6 +145,7 @@ def _trajectory_sha(obj) -> str:
     return hashlib.sha256(json.dumps(payload).encode()).hexdigest()
 
 
+@pytest.mark.slow
 def test_paired_trajectory_pinned_through_system_layer():
     disagg_obj = DisaggObjective(QWEN3_32B, OSWORLD_LIBREOFFICE,
                                  tdp_limit_w=1400.0, ttft_cap_s=90.0)
@@ -319,50 +322,80 @@ def test_context_override_rejected_for_prefill():
                        Phase.PREFILL, context_override=1000)
 
 
-def test_context_override_rejected_for_dllm_decode():
-    """Diffusion decode reprocesses the full sequence every step: a
-    decode-phase split is undefined there and must fail loudly, not
-    silently score early/late roles identically (or mark everything
-    infeasible through the scalar fallback's except clause)."""
-    with pytest.raises(ValueError, match="diffusion"):
-        evaluate_batch([p1_npu()], LLADA_8B, GSM8K_DLLM, Phase.DECODE,
-                       context_override=1000)
-    with pytest.raises(ValueError, match="diffusion"):
-        evaluate_decode(p1_npu(), LLADA_8B, GSM8K_DLLM, batch=1,
-                        context_override=1000)
+def test_context_override_defined_for_dllm_decode():
+    """Diffusion decode-phase splits are now DEFINED: the override sets
+    the sequence length each denoise step reprocesses (capacity stays
+    at the full context), so early/late roles genuinely diverge instead
+    of raising."""
+    trace = GSM8K_DLLM
+    early = trace.prompt_tokens + trace.gen_tokens // 4
+    late = trace.prompt_tokens + 3 * trace.gen_tokens // 4
+    r_early = evaluate_decode(p1_npu(), LLADA_8B, trace,
+                              context_override=early)
+    r_late = evaluate_decode(p1_npu(), LLADA_8B, trace,
+                             context_override=late)
+    assert r_early.batch == r_late.batch     # capacity at full context
+    assert r_early.latency_s < r_late.latency_s
+    got = evaluate_batch([p1_npu()], LLADA_8B, trace, Phase.DECODE,
+                         context_override=early)[0]
+    assert got.latency_s == pytest.approx(r_early.latency_s, rel=1e-9)
 
 
 # ---------------------------------------------------------------------------
-# DLLM decode: the jit fallback is actually exercised end-to-end
+# DLLM decode roles: a first-class jitted searched scenario, end-to-end
 # ---------------------------------------------------------------------------
 
-def test_dllm_decode_fallback_through_evaluate_batch(monkeypatch):
+def test_dllm_decode_role_system_end_to_end(monkeypatch):
+    """The fallback branch is gone: a DLLM fleet (prefill + early/late
+    denoise roles) evaluates end-to-end through the jitted batch path —
+    the oracle loop must never run — and matches the scalar system
+    evaluation."""
+    import repro.core.perfmodel as pm
     from repro.core import perfmodel_jit
-    assert not perfmodel_jit.supports(LLADA_8B, Phase.DECODE)
+    assert perfmodel_jit.supports(LLADA_8B, Phase.DECODE)
     assert perfmodel_jit.supports(LLADA_8B, Phase.PREFILL)
-    npus = [p1_npu(), d1_npu()]
-    from repro.core.perfmodel import _evaluate_batch_scalar, evaluate
 
     def boom(*a, **k):
-        raise AssertionError("jitted path must not run for DLLM decode")
+        raise AssertionError("scalar oracle must not route batch evals")
 
-    monkeypatch.setattr(perfmodel_jit, "evaluate_batch_table", boom)
-    got = evaluate_batch(npus, LLADA_8B, GSM8K_DLLM, Phase.DECODE)
-    want = _evaluate_batch_scalar(npus, LLADA_8B, GSM8K_DLLM, Phase.DECODE)
-    assert len(got) == len(want) == 2
+    monkeypatch.setattr(pm, "_evaluate_batch_scalar", boom)
+    ss = sp.SystemSpace.for_topology(DLLM_3ROLE)
+    rng = np.random.default_rng(23)
+    xs = ss.random_designs(rng, 8)
+    systems = [ss.decode(x) for x in xs]
+    caches = [dict() for _ in DLLM_3ROLE.roles]
+    got = evaluate_system_batch(systems, DLLM_3ROLE, LLADA_8B, GSM8K_DLLM,
+                                caches=caches)
+    monkeypatch.undo()
     n_feasible = 0
-    for npu, g, w in zip(npus, got, want):
-        assert (g is None) == (w is None)
-        if g is not None:
-            n_feasible += 1
-            assert g.latency_s == w.latency_s
-            assert g.energy_per_token_j == w.energy_per_token_j
-            assert g.latency_s == evaluate(npu, LLADA_8B, GSM8K_DLLM,
-                                           Phase.DECODE).latency_s
-    assert n_feasible > 0              # the fallback produced real results
-    # ... while the DLLM prefill phase still raises through the jit stub
-    with pytest.raises(AssertionError, match="jitted path"):
-        evaluate_batch(npus, LLADA_8B, GSM8K_DLLM, Phase.PREFILL)
+    for s, r in zip(systems, got):
+        try:
+            want = evaluate_system(list(s), DLLM_3ROLE, LLADA_8B,
+                                   GSM8K_DLLM)
+        except (InfeasibleConfig, ValueError):
+            assert r is None
+            continue
+        n_feasible += 1
+        assert r.tokens_per_joule == pytest.approx(want.tokens_per_joule,
+                                                   rel=1e-9)
+        assert r.ttft_s == pytest.approx(want.ttft_s, rel=1e-9)
+        assert r.total_power_w == pytest.approx(want.total_power_w,
+                                                rel=1e-9)
+        assert r.decode_tps_aggregate == pytest.approx(
+            want.decode_tps_aggregate, rel=1e-9)
+    assert n_feasible > 0
+    for ri in range(DLLM_3ROLE.k):
+        assert set(caches[ri]) == {s[ri].name for s in systems}
+    # the same device scores differently under the early vs late denoise
+    # role (the decode-phase split is real for DLLM now)
+    early = evaluate_batch([p1_npu()], LLADA_8B, GSM8K_DLLM, Phase.DECODE,
+                           context_override=DLLM_3ROLE.roles[1]
+                           .context_for(GSM8K_DLLM))[0]
+    late = evaluate_batch([p1_npu()], LLADA_8B, GSM8K_DLLM, Phase.DECODE,
+                          context_override=DLLM_3ROLE.roles[2]
+                          .context_for(GSM8K_DLLM))[0]
+    assert early.latency_s < late.latency_s
+    assert early.batch == late.batch       # capacity at full context
 
 
 # ---------------------------------------------------------------------------
@@ -410,6 +443,7 @@ def test_mc_ehvi_3d_runs_and_is_positive():
     assert scores[0] > scores[1] >= 0.0
 
 
+@pytest.mark.slow
 def test_three_objective_system_search_runs():
     """TTFT as a third objective: MOBO routes through the MC-EHVI
     fallback instead of crashing, and all searchers stay deterministic."""
@@ -437,10 +471,48 @@ def test_three_objective_system_search_runs():
                           init=list(init)).observations) == 10
 
 
+def test_dllm_system_per_request_tps_units():
+    """A DLLM decode role's latency_s is the WHOLE generation's denoise
+    time (no autoregressive step), so the system fold must normalize it
+    to per-generated-token units: the per-request TPS of an all-P1
+    fleet is gen / (gen_frac-weighted denoise time), not 1 / (total
+    time) — a gen_tokens-factor error otherwise."""
+    npus = [dataclasses.replace(p1_npu(), name=f"P1-{r.name}")
+            for r in DLLM_3ROLE.roles]
+    r = evaluate_system(npus, DLLM_3ROLE, LLADA_8B, GSM8K_DLLM)
+    early, late = r.roles[1], r.roles[2]
+    expect = GSM8K_DLLM.gen_tokens / (0.5 * early.latency_s
+                                      + 0.5 * late.latency_s)
+    # the amortized KV-migration term shifts this by well under 0.1%
+    assert r.decode_tps_per_request == pytest.approx(expect, rel=1e-3)
+
+
+@pytest.mark.slow
+def test_dllm_system_search_seeded_determinism():
+    """The `dllm_system` bench row is a seeded searched sweep: the same
+    seed must reproduce the exact evaluation trajectory (a scaled-down
+    bench_dllm._searched_system), and the budget must find a feasible
+    fleet — the properties run.py --check's floor gate relies on."""
+    def trajectory():
+        obj = SystemObjective(LLADA_8B, OSWORLD_DLLM, topology=DLLM_3ROLE,
+                              tdp_limit_w=2100.0, ttft_cap_s=90.0)
+        init = system_warm_start(obj, 6, seed=0, pool=64)
+        res = run_mobo(obj, n_total=12, seed=0, init=list(init))
+        return [(tuple(o.x), o.f) for o in res.observations]
+
+    t1, t2 = trajectory(), trajectory()
+    assert t1 == t2
+    assert len(t1) == 12
+    feas = [f for _, f in t1 if f is not None]
+    assert feas                      # a feasible DLLM fleet exists
+    assert all(f[0] > 0 for f in feas)
+
+
 # ---------------------------------------------------------------------------
 # Warm start
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_system_warm_start_seeds_search():
     obj = SystemObjective(QWEN3_32B, OSWORLD_LIBREOFFICE,
                           topology=EXTREME_4ROLE, tdp_limit_w=2800.0,
@@ -465,6 +537,7 @@ def test_system_warm_start_seeds_search():
 # Perf-gate plumbing: the extreme-system entry in run.py --check
 # ---------------------------------------------------------------------------
 
+@pytest.mark.bench
 def test_bench_check_compare_extreme():
     import pathlib
     import sys
@@ -501,4 +574,46 @@ def test_bench_check_compare_extreme():
     # pre-extreme baselines skip the gate; missing fresh entry regresses
     assert compare_extreme({"methods": {}}, {}, 5.0) is None
     missing = compare_extreme(base, {}, 5.0)
+    assert missing[3] < 0 and not missing[-1]
+
+
+@pytest.mark.bench
+def test_bench_check_compare_dllm():
+    """The `dllm_system` gate mirrors `compare_extreme`: hard tokJ floor
+    (the hand-designed P1 fleet), committed-baseline floor, timing
+    limit, budget-mismatch sentinel, missing-entry regression."""
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.run import DLLM_TOKJ_FLOOR, compare_dllm
+    base = {"dllm_system": {"tokens_per_joule": 0.005,
+                            "us_per_run": 40e6}}
+    ok = compare_dllm(base, {"dllm_system": {
+        "tokens_per_joule": 0.005, "us_per_run": 50e6}}, 5.0)
+    assert ok[-1]
+    # below the committed baseline -> regression even above the floor
+    drop = compare_dllm(base, {"dllm_system": {
+        "tokens_per_joule": 0.004, "us_per_run": 40e6}}, 5.0)
+    assert not drop[-1]
+    # below the hard hand-designed-fleet floor -> regression
+    weak_base = {"dllm_system": {"tokens_per_joule": 0.002,
+                                 "us_per_run": 40e6}}
+    weak = compare_dllm(weak_base, {"dllm_system": {
+        "tokens_per_joule": 0.002, "us_per_run": 40e6}}, 5.0)
+    assert weak[1] == DLLM_TOKJ_FLOOR and not weak[-1]
+    # timing blow-up -> regression
+    slow = compare_dllm(base, {"dllm_system": {
+        "tokens_per_joule": 0.005, "us_per_run": 201e6}}, 5.0)
+    assert not slow[-1]
+    # a baseline captured at a different search budget is flagged
+    full_base = {"dllm_system": {"tokens_per_joule": 0.006,
+                                 "us_per_run": 60e6, "n_total": 60}}
+    mismatch = compare_dllm(full_base, {"dllm_system": {
+        "tokens_per_joule": 0.005, "us_per_run": 40e6, "n_total": 40}}, 5.0)
+    assert mismatch[1] == -2.0 and not mismatch[-1]
+    # pre-dllm baselines skip the gate; missing fresh entry regresses
+    assert compare_dllm({"methods": {}}, {}, 5.0) is None
+    missing = compare_dllm(base, {}, 5.0)
     assert missing[3] < 0 and not missing[-1]

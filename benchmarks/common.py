@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import json
 import os
+import sys
+import tempfile
 import time
 
 DEFAULT_BENCH_JSON = "BENCH_dse.json"
@@ -14,7 +16,15 @@ def merge_bench_json(key: str, payload: dict) -> None:
     readable benchmark JSON (``BENCH_DSE_JSON`` env var, default
     ``BENCH_dse.json``) — bench_dse writes the file fresh earlier in
     the suite; the searched-system benches add their keys through here
-    without clobbering the rest (or each other)."""
+    without clobbering the rest (or each other).
+
+    Crash-safe: the merged document is written to a temp file in the
+    same directory and atomically renamed over the target, so a bench
+    run killed mid-write can never leave a truncated baseline behind
+    to poison the ``--check`` gates.  Write failures (read-only working
+    dir, full disk) are survivable — the CSV rows on stdout still carry
+    the numbers — but they are *warned about*, never swallowed: a
+    ``--check`` user must know the baseline was not updated."""
     json_path = os.environ.get("BENCH_DSE_JSON", DEFAULT_BENCH_JSON)
     data = {}
     try:
@@ -23,11 +33,25 @@ def merge_bench_json(key: str, payload: dict) -> None:
     except (OSError, ValueError):
         pass                        # no/unreadable file: start fresh
     data[key] = payload
+    tmp_name = None
     try:
-        with open(json_path, "w") as f:
+        fd, tmp_name = tempfile.mkstemp(
+            dir=os.path.dirname(json_path) or ".",
+            prefix=os.path.basename(json_path) + ".", suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
             json.dump(data, f, indent=1, sort_keys=True)
-    except OSError:
-        pass                        # read-only working dir: CSV rows suffice
+        os.replace(tmp_name, json_path)
+        tmp_name = None
+    except OSError as exc:
+        print(f"WARNING: could not update {json_path} ({exc}); the "
+              f"committed baseline is UNCHANGED — --check will gate "
+              f"against stale numbers", file=sys.stderr)
+    finally:
+        if tmp_name is not None:
+            try:
+                os.unlink(tmp_name)
+            except OSError:
+                pass
 
 
 def timed(fn, *args, repeat: int = 1, **kwargs):

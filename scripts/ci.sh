@@ -11,7 +11,12 @@
 #    opt-out, printed loudly below.  COV_FLOOR can be overridden per
 #    invocation (e.g. COV_FLOOR=0 scripts/ci.sh to skip the floor while
 #    keeping the report).
-# 2. perf gate: benchmarks/run.py --smoke --check reruns the smoke DSE
+# 2. fault/resume gate: the `fault`-marked suite (already part of
+#    tier-1) is rerun by itself so the crash-safe-search guarantees —
+#    seeded fault-injection convergence and byte-identical journal
+#    resume — gate every run visibly even if tier-1 marker selection
+#    ever changes.
+# 3. perf gate: benchmarks/run.py --smoke --check reruns the smoke DSE
 #    bench and fails when any search method exceeds --tolerance x its
 #    committed baseline (benchmarks/BENCH_dse.json), when the jitted
 #    perfmodel's pool-scoring speedup over the scalar oracle drops
@@ -37,6 +42,9 @@ else
          "restore it)"
     python -m pytest -x -q
 fi
+
+echo "== fault-injection + interrupt/resume smoke =="
+python -m pytest -q -m fault
 
 echo "== benchmark smoke + perf-regression check =="
 python -m benchmarks.run --smoke --check

@@ -15,11 +15,20 @@ runner  GP+EHVI MOBO + NSGA-II / MO-TPE / Random baselines (batched),
         generic over any DesignSpace; Objective (single device),
         SystemObjective (K-role systems over a disagg.SystemTopology)
         and DisaggObjective (disaggregated pairs, Sections 5.3/5.5),
-        plus system_warm_start (per-role champion seeding)
+        plus system_warm_start (per-role champion seeding); guarded
+        evaluation (retry transients, quarantine NaN/Inf)
+journal append-only JSONL evaluation journal: crash-safe searches with
+        deterministic (byte-identical) resume
+faults  seeded fault injection (transient exceptions, NaN storms,
+        infeasibility floods) wrapping any objective
 """
 
 from . import space
 from .ehvi import ehvi_2d, mc_ehvi
+from .faults import FaultInjector, FaultSpec, FaultyObjective, \
+    TransientEvalError
+from .journal import (JournalError, JournalMismatch, SearchJournal,
+                      objective_identity)
 from .pareto import (IncrementalHV2D, dominates, hv_contributions_2d,
                      hv_history, hypervolume, hypervolume_2d, pareto_front,
                      pareto_mask, reference_point)

@@ -1,0 +1,172 @@
+"""Deterministic fault injection for the DSE evaluation path.
+
+The searchers' robustness claims ("every searcher completes and, for
+transient faults, converges to the failure-free result") are only worth
+anything if they are exercised — this module is the seeded chaos layer
+that exercises them.  `FaultyObjective` wraps any objective (it sits
+exactly where `Objective.evaluate_batch` / `evaluate_system_batch`
+deliver results to the searchers) and injects three failure modes the
+fleet-scale searches actually see:
+
+* **transient evaluator exceptions** — a whole `evaluate_batch` call
+  raises `TransientEvalError` (a `runtime.fault.StepFailure`) before
+  any work happens, simulating a jit compile/dispatch crash.  The
+  guarded evaluation layer in `runner` retries; since the fault budget
+  per distinct batch is finite, retries converge to the clean result.
+* **NaN/Inf objective storms** — selected designs deliver non-finite
+  objective tuples for their first `fault_attempts` deliveries,
+  simulating numerical blowups in the evaluator.  The clean value is
+  computed (and cached) underneath; only the *delivered copy* is
+  corrupted, so a retry after the budget is spent observes the true
+  objectives and trajectories converge to the failure-free run.
+* **infeasibility floods** — selected designs are reported infeasible
+  (``f=None``).  These are *sticky* (an infeasible verdict is
+  indistinguishable from a real one, so nothing retries it): they test
+  that searchers complete and keep flooded points out of the front,
+  not that they converge.
+
+All decisions are drawn from RNGs seeded by (injector seed, design key)
+— independent of call order — so a run with injection is itself
+deterministic and reproducible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Optional
+
+import numpy as np
+
+from ...runtime.fault import StepFailure
+
+
+class TransientEvalError(StepFailure):
+    """Injected (or simulated) transient evaluator failure."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """Probabilities and budgets of the injected failure modes.
+
+    `p_transient` applies per distinct batch (the set of keys passed to
+    one `evaluate_batch` call); `p_nan` / `p_infeasible` apply per
+    distinct design key.  `fault_attempts` is how many deliveries of a
+    faulted key (or batch) fail before the clean result flows.
+
+    Convergence bound: faults *compose* within one guarded evaluation —
+    a transient-faulted batch containing a NaN-faulted key must survive
+    ``fault_attempts`` raised calls plus ``fault_attempts`` corrupted
+    deliveries before a clean delivery, i.e. worst case
+    ``2 * fault_attempts + 1`` attempts against the runner's
+    ``EVAL_RETRIES + 1`` budget.  For convergence tests keep the summed
+    per-mode budgets at or below ``EVAL_RETRIES`` (e.g.
+    ``fault_attempts=1`` with both modes on, or ``EVAL_RETRIES`` with a
+    single mode); push past the budget to exercise quarantine instead.
+    """
+
+    p_transient: float = 0.0
+    p_nan: float = 0.0
+    p_infeasible: float = 0.0
+    fault_attempts: int = 1
+    nan_value: float = math.nan     # swap for math.inf to storm with Infs
+    seed: int = 0
+
+
+class FaultInjector:
+    """Seeded, key-addressed fault decisions + an event log."""
+
+    def __init__(self, spec: FaultSpec):
+        self.spec = spec
+        self.events: list = []
+        self._key_plan: dict = {}       # key -> [kind, remaining]
+        self._batch_plan: dict = {}     # batch signature -> remaining
+
+    def _rng_for(self, token) -> np.random.Generator:
+        h = zlib.crc32(repr(token).encode())
+        return np.random.default_rng((int(self.spec.seed) << 32) ^ h)
+
+    def batch_should_fail(self, keys) -> bool:
+        """Transient-exception decision for one evaluate_batch call."""
+        sig = tuple(keys)
+        if sig not in self._batch_plan:
+            fails = (self._rng_for(("batch", sig)).random()
+                     < self.spec.p_transient)
+            self._batch_plan[sig] = self.spec.fault_attempts if fails else 0
+        if self._batch_plan[sig] > 0:
+            self._batch_plan[sig] -= 1
+            self.events.append(("transient", len(sig)))
+            return True
+        return False
+
+    def plan_for(self, key) -> Optional[str]:
+        """The per-key fault to apply to this delivery, if any."""
+        if key not in self._key_plan:
+            u = self._rng_for(("key", key)).random()
+            if u < self.spec.p_nan:
+                self._key_plan[key] = ["nan", self.spec.fault_attempts]
+            elif u < self.spec.p_nan + self.spec.p_infeasible:
+                # sticky: infeasible verdicts are never retried
+                self._key_plan[key] = ["infeasible", -1]
+            else:
+                self._key_plan[key] = [None, 0]
+        kind, remaining = self._key_plan[key]
+        if kind is None:
+            return None
+        if remaining == 0:
+            return None
+        if remaining > 0:
+            self._key_plan[key][1] -= 1
+        self.events.append((kind, key))
+        return kind
+
+
+class FaultyObjective:
+    """Wrap an objective, corrupting deliveries per a `FaultInjector`.
+
+    Delegates every attribute (``space``, ``tdp_limit_w``, ``cache``,
+    ...) to the wrapped objective, so searchers, journals and warm
+    starts treat it as the objective itself.  Corruption happens on the
+    *returned copies* only — the wrapped objective's cache always holds
+    the clean evaluations, which is what makes transient-fault runs
+    converge to the failure-free trajectory once retries drain the
+    fault budgets.
+    """
+
+    def __init__(self, objective, injector: FaultInjector):
+        self._inner = objective
+        self.injector = injector
+
+    @property
+    def unwrapped(self):
+        return getattr(self._inner, "unwrapped", self._inner)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def _deliver(self, obs):
+        key = tuple(int(v) for v in obs.x)
+        kind = self.injector.plan_for(key)
+        if kind is None:
+            return obs
+        if kind == "infeasible":
+            return dataclasses.replace(obs, f=None, result=None)
+        # NaN/Inf storm: corrupt one objective component per delivery
+        if obs.f is None:
+            return obs                  # nothing to corrupt
+        bad = list(obs.f)
+        bad[len(bad) // 2] = self.injector.spec.nan_value
+        return dataclasses.replace(obs, f=tuple(bad))
+
+    def __call__(self, x):
+        key = (tuple(int(v) for v in x),)
+        if self.injector.batch_should_fail(key):
+            raise TransientEvalError("injected transient evaluator failure")
+        return self._deliver(self._inner(x))
+
+    def evaluate_batch(self, xs):
+        keys = tuple(tuple(int(v) for v in x) for x in xs)
+        if self.injector.batch_should_fail(keys):
+            raise TransientEvalError("injected transient evaluator failure")
+        return [self._deliver(o) for o in self._inner.evaluate_batch(xs)]

@@ -16,6 +16,22 @@ Performance notes (the DSE refits per iteration on a growing dataset):
 * `predict` is pure NumPy: the posterior is a couple of small matmuls
   and a triangular solve, and the per-call NumPy<->JAX round-trip it
   used to pay (dispatch + retrace per query shape) dominated its cost.
+
+Numerical hardening (degenerate data is routine mid-search: a feasible
+set of 4 observations can be constant in an objective, and NSGA-II/TPE
+revisit near-duplicate designs constantly):
+
+* `_stable_cholesky` retries `np.linalg.cholesky` with an escalating
+  diagonal nugget (1e-10 .. 1e-2 of the mean kernel diagonal) instead
+  of raising `LinAlgError`, with an eigenvalue-clamp reconstruction as
+  the last resort — a near-singular kernel costs posterior sharpness,
+  never the search.
+* Non-finite hyperparameters out of the jitted MLE (a diverged Adam
+  run on pathological targets) fall back to the initialization values
+  (`_sanitize_params`) rather than poisoning the NumPy-side posterior.
+* Targets must be finite: the searchers quarantine NaN/Inf
+  observations before fitting (see `runner`), and `fit` raises a clear
+  `ValueError` if a non-finite target slips through anyway.
 """
 
 from __future__ import annotations
@@ -99,6 +115,43 @@ def _fit_adam(x, y, mask, init_ls):
     return params
 
 
+#: escalating jitter schedule of `_stable_cholesky`, as fractions of
+#: the mean kernel diagonal
+_JITTERS = (0.0, 1e-10, 1e-8, 1e-6, 1e-4, 1e-2)
+
+
+def _stable_cholesky(k: np.ndarray) -> np.ndarray:
+    """Cholesky with jitter escalation: retry with an increasing nugget
+    on the diagonal instead of raising `LinAlgError` on degenerate
+    kernels (duplicate rows, constant targets pushing the noise floor
+    down).  Falls back to an eigenvalue clamp if even the largest
+    nugget fails — always returns a finite factor."""
+    n = len(k)
+    scale = float(np.mean(np.diag(k))) or 1.0
+    for jit in _JITTERS:
+        try:
+            chol = np.linalg.cholesky(k if jit == 0.0
+                                      else k + (jit * scale) * np.eye(n))
+        except np.linalg.LinAlgError:
+            continue
+        if np.all(np.isfinite(chol)):
+            return chol
+    # last resort: clamp the spectrum and refactor (cannot fail: the
+    # clamped matrix is symmetric positive definite by construction)
+    w, v = np.linalg.eigh((k + k.T) / 2.0)
+    w = np.maximum(w, 1e-10 * scale)
+    return np.linalg.cholesky((v * w) @ v.T)
+
+
+def _sanitize_params(params: dict, d: int) -> dict:
+    """Replace non-finite fitted hyperparameters (diverged MLE on
+    degenerate data) with the optimizer's initialization values."""
+    defaults = {"ls": np.full(d, -0.5), "sf": np.array(0.0),
+                "sn": np.array(-2.0)}
+    return {key: (val if np.all(np.isfinite(val)) else defaults[key])
+            for key, val in params.items()}
+
+
 @dataclasses.dataclass
 class GP:
     """Fitted GP posterior over one standardized objective."""
@@ -128,6 +181,9 @@ class GP:
     def fit(cls, x: np.ndarray, y: np.ndarray) -> "GP":
         x = np.asarray(x, dtype=np.float64)
         y = np.asarray(y, dtype=np.float64)
+        if not np.all(np.isfinite(y)):
+            raise ValueError("GP.fit: non-finite targets — quarantine "
+                             "NaN/Inf observations before fitting")
         mu, sd = float(y.mean()), float(y.std() + 1e-9)
         ys = (y - mu) / sd
         n, d = x.shape
@@ -143,9 +199,10 @@ class GP:
                            jnp.asarray(mask), init_ls)
         params = {k: np.asarray(v, dtype=np.float64)
                   for k, v in params.items()}
+        params = _sanitize_params(params, d)
         k = _rbf_np(x, x, params["ls"], params["sf"])
         k = k + (np.exp(2.0 * params["sn"]) + 1e-6) * np.eye(n)
-        chol = np.linalg.cholesky(k)
+        chol = _stable_cholesky(k)
         alpha = np.linalg.solve(chol.T, np.linalg.solve(chol, ys))
         return cls(x=x, y_mean=mu, y_std=sd, params=params, chol=chol,
                    alpha=alpha)

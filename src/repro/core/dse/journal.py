@@ -1,0 +1,237 @@
+"""Append-only evaluation journal: crash-safe search state + replay.
+
+Long searches (1000-eval fleet sweeps over 100+-gene `SystemSpace`s)
+must survive a mid-run kill without discarding every evaluation.  The
+journal makes them resumable with a deliberately simple failure model:
+
+* **What is persisted** — every *final* observation the searchers act
+  on, one JSON line per design, in evaluation order: the integer design
+  key, the objective tuple (or ``null`` when infeasible), the reported
+  bottleneck, and a fault tag when the observation was quarantined by
+  the guarded evaluation layer (see `runner`).  Nothing else: searcher
+  RNG state, GP hyperparameters and population state are *derived*
+  state — the seeded searchers recompute them deterministically.
+* **What resumes** — on restart the journal replays its records into
+  the objective's evaluation cache and the searcher reruns from its
+  seed.  Every already-journaled proposal is a cache hit (no model
+  evaluation), so the search fast-forwards through the prefix and
+  continues live exactly where it died.  Because replayed values are
+  byte-exact (JSON round-trips IEEE-754 doubles losslessly) the resumed
+  run's proposals, journal lines, and final front are byte-identical to
+  the uninterrupted run — `tests/test_journal_resume.py` proves this at
+  every iteration boundary against the sha-pinned trajectories.
+* **What is refused** — a journal written by a *different* search: the
+  header pins the space/objective/seed identity (space type and
+  cardinalities, objective type, model/trace/phase, TDP budget,
+  objective count, seed) and `begin` raises `JournalMismatch` rather
+  than silently mixing trajectories.
+* **What survives a crash mid-write** — a torn final line (the process
+  died inside `write`).  `begin` truncates the file back to the last
+  complete record before replaying; the lost evaluation is simply
+  recomputed.
+
+File format (JSONL, canonical separators, sorted keys)::
+
+    {"identity": {...}, "kind": "header", "meta": {...}, "version": 1}
+    {"bneck": "...", "f": [t, -p], "i": 0, "kind": "eval", "x": [...]}
+    {"f": null, "i": 1, "kind": "eval", "x": [...]}
+    {"f": null, "fault": "non_finite", "i": 2, "kind": "eval", ...}
+
+The journal never stores timestamps or host state — identical searches
+produce identical bytes, which is what the resume tests pin.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+
+class JournalError(RuntimeError):
+    """The journal file cannot be used (corrupt header, bad record)."""
+
+
+class JournalMismatch(JournalError):
+    """The journal belongs to a different space/objective/seed."""
+
+
+def _canon(obj) -> str:
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def objective_identity(objective, seed: Optional[int] = None) -> dict:
+    """The identity dict pinned by the journal header.
+
+    Everything that changes the meaning of a (design key -> objectives)
+    record: the design space encoding, the evaluated workload, the
+    feasibility budgets, the objective count — plus the search seed,
+    so a journal can never silently resume a differently-seeded run.
+    Wrapped objectives (e.g. the fault injector's `FaultyObjective`)
+    expose the real objective via ``unwrapped``.
+    """
+    obj = getattr(objective, "unwrapped", objective)
+    space = obj.space
+    ident = {
+        "objective": type(obj).__name__,
+        "space": type(space).__name__,
+        "n_dims": int(space.n_dims),
+        "cardinalities": [int(c) for c in space.cardinalities],
+        "model": getattr(getattr(obj, "dims", None), "name", None),
+        "trace": getattr(getattr(obj, "trace", None), "name", None),
+        "phase": getattr(getattr(obj, "phase", None), "name", None),
+        "tdp_limit_w": float(obj.tdp_limit_w),
+        "n_obj": int(getattr(obj, "n_obj", 2)),
+    }
+    topo = getattr(obj, "topology", None)
+    if topo is not None:
+        ident["topology"] = getattr(topo, "name", None)
+    ttft = getattr(obj, "ttft_cap_s", None)
+    if ttft is not None:
+        ident["ttft_cap_s"] = float(ttft)
+    if seed is not None:
+        ident["seed"] = int(seed)
+    return ident
+
+
+class SearchJournal:
+    """Append-only JSONL journal of one seeded search's evaluations.
+
+    Usage::
+
+        j = SearchJournal("run.jsonl")
+        res = run_mobo(objective, n_total=200, seed=0, journal=j)
+
+    Kill the process at any point and rerun the same two lines: `begin`
+    (called by the searcher) replays the journal into the objective's
+    cache and the search continues from where it stopped, reproducing
+    the uninterrupted trajectory byte-identically.
+    """
+
+    def __init__(self, path):
+        self.path = os.fspath(path)
+        self._fh = None
+        self._logged: set = set()
+        self._n = 0
+        self._begun = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def begin(self, objective, seed: int,
+              method: Optional[str] = None) -> int:
+        """Open the journal for `objective`/`seed`; replay any existing
+        records into the objective's evaluation cache.
+
+        Returns the number of replayed evaluations.  Idempotent: the
+        searchers, `shared_init` and `system_warm_start` all call it,
+        so one journal threads through a warm start plus a search.
+        Raises `JournalMismatch` when the on-disk header pins a
+        different space/objective/seed.
+        """
+        identity = objective_identity(objective, seed=seed)
+        if self._begun:
+            if identity != self._identity:
+                raise JournalMismatch(
+                    f"{self.path}: journal already begun with a different "
+                    f"identity")
+            return len(self._logged)
+        n_replayed = 0
+        if os.path.exists(self.path) and os.path.getsize(self.path) > 0:
+            n_replayed = self._replay(objective, identity)
+        if self._fh is None:        # fresh file (or torn-header restart)
+            header = {"kind": "header", "version": 1, "identity": identity,
+                      "meta": {"method": method}}
+            self._fh = open(self.path, "a")
+            self._fh.write(_canon(header) + "\n")
+            self._fh.flush()
+        self._identity = identity
+        self._begun = True
+        return n_replayed
+
+    def _replay(self, objective, identity: dict) -> int:
+        # local import: runner imports journal, so the Observation type
+        # is fetched lazily to keep the module graph acyclic.
+        from .runner import Observation
+        with open(self.path, "r+") as f:
+            raw = f.read()
+            keep = len(raw)
+            if raw and not raw.endswith("\n"):
+                # torn final line from a crash mid-write: drop it
+                keep = raw.rfind("\n") + 1
+                f.truncate(keep)
+        lines = raw[:keep].splitlines()
+        if not lines:
+            # the crash tore the header itself: nothing usable survived,
+            # restart the journal from scratch
+            return 0
+        try:
+            header = json.loads(lines[0])
+        except ValueError as exc:
+            raise JournalError(f"{self.path}: unreadable header") from exc
+        if header.get("kind") != "header":
+            raise JournalError(f"{self.path}: first line is not a header")
+        if header.get("identity") != identity:
+            raise JournalMismatch(
+                f"{self.path}: journal identity does not match this "
+                f"search (got {header.get('identity')!r}, "
+                f"want {identity!r})")
+        cache = getattr(objective, "cache", None)
+        n = 0
+        for ln, line in enumerate(lines[1:], start=2):
+            try:
+                rec = json.loads(line)
+            except ValueError as exc:
+                raise JournalError(
+                    f"{self.path}:{ln}: unreadable record") from exc
+            if rec.get("kind") != "eval":
+                continue
+            key = tuple(int(v) for v in rec["x"])
+            f_val = rec.get("f")
+            obs = Observation(
+                x=list(key),
+                f=None if f_val is None else tuple(float(v) for v in f_val),
+                npu=None, fault=rec.get("fault"))
+            if cache is not None and key not in cache:
+                cache[key] = obs
+            self._logged.add(key)
+            n += 1
+        self._n = n
+        self._fh = open(self.path, "a")
+        return n
+
+    def close(self):
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- recording ---------------------------------------------------------
+
+    def record(self, obs) -> None:
+        """Append one observation (no-op for already-journaled keys)."""
+        if self._fh is None:
+            raise JournalError("journal not begun")
+        key = tuple(int(v) for v in obs.x)
+        if key in self._logged:
+            return
+        rec = {"kind": "eval", "i": self._n, "x": list(key),
+               "f": None if obs.f is None else [float(v) for v in obs.f]}
+        bneck = getattr(obs.result, "bottleneck", None)
+        if bneck is not None:
+            rec["bneck"] = str(bneck)
+        fault = getattr(obs, "fault", None)
+        if fault is not None:
+            rec["fault"] = str(fault)
+        self._fh.write(_canon(rec) + "\n")
+        self._fh.flush()
+        self._logged.add(key)
+        self._n += 1
+
+    def record_many(self, observations) -> None:
+        for obs in observations:
+            self.record(obs)

@@ -47,20 +47,49 @@ Hot-path structure (vectorized engine):
   with the per-gene TDP/validity tables instead of decoding every draw.
 * Hypervolume convergence curves come from the incremental staircase
   (`pareto.IncrementalHV2D`), not a from-scratch recompute per step.
+
+Failure model (the crash-safe search runtime):
+
+* **Retried** — transient evaluator failures surfacing as
+  `runtime.fault.StepFailure` (the jitted perfmodel path wraps its own
+  exceptions this way; `faults.FaultyObjective` injects them in tests)
+  and non-finite objective tuples, both up to `EVAL_RETRIES` immediate
+  retries per call.  Retries are immediate, with no backoff: the
+  evaluator is pure in-process compute, so there is no external
+  resource to wait out.  Before a non-finite retry the poisoned key is
+  evicted from the objective cache so the evaluator actually reruns.
+* **Quarantined** — observations still failing after the retry budget:
+  they are recorded as infeasible (``f=None``) with a ``fault`` tag and
+  are never propagated into GP fits, EHVI scoring, NSGA-II/MO-TPE
+  sorting, `hv_history`, or the Pareto front (`_finite_f` guards every
+  aggregation, so a non-finite ``f`` smuggled in via a caller-built
+  init cannot poison the surrogates either).  Genuinely infeasible
+  verdicts are *not* retried — they are indistinguishable from real
+  infeasibility and the evaluators are deterministic.
+* **Resumed** — every searcher takes an optional ``journal``
+  (`journal.SearchJournal`): final observations append to a JSONL
+  evaluation journal and, on restart, replay into the objective cache
+  so the seeded search fast-forwards through the already-evaluated
+  prefix and continues byte-identically (see the journal module
+  docstring for the format and `docs/search_runtime.md` for the
+  operational story).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Optional
 
 import numpy as np
 
+from ...runtime.fault import StepFailure
 from ..disagg import PD_PAIR, evaluate_disagg_batch, evaluate_system_batch
 from ..perfmodel import InfeasibleConfig, evaluate, evaluate_batch
 from ..workload import ModelDims, Phase, Trace
 from . import space as sp
 from .ehvi import ehvi_2d, mc_ehvi
+from .journal import SearchJournal
 from .pareto import IncrementalHV2D, hypervolume, pareto_front, pareto_mask
 from .sobol import sobol
 
@@ -69,6 +98,11 @@ from .sobol import sobol
 # stay deterministic; 2-objective searches never draw these).
 MC_EHVI_SAMPLES = 64
 
+# Immediate-retry budget of the guarded evaluation layer (transient
+# evaluator exceptions and non-finite objective tuples); failures that
+# outlive it are quarantined as infeasible, never raised.
+EVAL_RETRIES = 3
+
 
 @dataclasses.dataclass
 class Observation:
@@ -76,6 +110,13 @@ class Observation:
     f: Optional[tuple]          # objective tuple or None if infeasible
     npu: Optional[object]       # NPUConfig, or (prefill, decode) pair
     result: Optional[object] = None   # full evaluation record (DisaggResult)
+    fault: Optional[str] = None       # quarantine tag ("non_finite", ...)
+
+
+def _finite_f(f: Optional[tuple]) -> bool:
+    """Feasible AND numerically sane: the gate every aggregation
+    (GP fit, EHVI, sorting, HV, fronts) applies to observations."""
+    return f is not None and all(math.isfinite(v) for v in f)
 
 
 @dataclasses.dataclass
@@ -84,19 +125,20 @@ class DSEResult:
     observations: list          # in evaluation order
 
     def feasible_f(self) -> np.ndarray:
-        return np.array([o.f for o in self.observations if o.f is not None],
+        return np.array([o.f for o in self.observations if _finite_f(o.f)],
                         dtype=float)
 
     def hv_history(self, ref: np.ndarray) -> np.ndarray:
         """HV of the feasible front after each evaluation (incremental
         staircase for 2 objectives; exact slicing recompute for d > 2,
-        where histories are short enough for the O(n) recomputes)."""
+        where histories are short enough for the O(n) recomputes).
+        Quarantined/non-finite observations contribute nothing."""
         ref = np.asarray(ref, dtype=float)
         if len(ref) != 2:
             out = np.empty(len(self.observations))
             hv, feas = 0.0, []
             for i, o in enumerate(self.observations):
-                if o.f is not None:
+                if _finite_f(o.f):
                     feas.append(o.f)
                     hv = hypervolume(np.asarray(feas, dtype=float), ref)
                 out[i] = hv
@@ -105,13 +147,13 @@ class DSEResult:
         out = np.empty(len(self.observations))
         hv = 0.0
         for i, o in enumerate(self.observations):
-            if o.f is not None:
+            if _finite_f(o.f):
                 hv = inc.add(o.f)
             out[i] = hv
         return out
 
     def pareto(self) -> list:
-        obs = [o for o in self.observations if o.f is not None]
+        obs = [o for o in self.observations if _finite_f(o.f)]
         if not obs:
             return []
         mask = pareto_mask(np.array([o.f for o in obs]))
@@ -128,6 +170,98 @@ def _dedup_pending(cache: dict, keys: list) -> list:
             pending.add(k)
             todo.append(k)
     return todo
+
+
+# ---------------------------------------------------------------------------
+# Guarded evaluation: retry transients, quarantine NaN/Inf, journal
+# ---------------------------------------------------------------------------
+
+def _quarantine(obs: Observation, tag: str) -> Observation:
+    """An infeasible copy of `obs` carrying the quarantine tag (the
+    original — possibly cached — observation is left untouched)."""
+    return dataclasses.replace(obs, f=None, fault=tag)
+
+
+def _evict(objective, xs) -> None:
+    """Drop poisoned keys from the objective cache so a retry actually
+    re-runs the evaluator instead of re-serving the cached value."""
+    cache = getattr(objective, "cache", None)
+    if cache is None:
+        return
+    for x in xs:
+        cache.pop(tuple(int(v) for v in x), None)
+
+
+def _eval_many(objective, xs, journal: Optional[SearchJournal]) -> list:
+    """`objective.evaluate_batch` behind the failure model of the module
+    docstring: `EVAL_RETRIES` immediate retries for transient
+    `StepFailure`s and non-finite objective tuples, quarantine-as-
+    infeasible beyond the budget, and journal append of the final
+    observations.  On the healthy path this is exactly
+    `objective.evaluate_batch(xs)` — seeded trajectories are unchanged.
+    """
+    obs: list = []
+    for attempt in range(EVAL_RETRIES + 1):
+        try:
+            obs = objective.evaluate_batch(xs)
+        except StepFailure:
+            if attempt == EVAL_RETRIES:
+                obs = [Observation(x=[int(v) for v in x], f=None, npu=None,
+                                   fault="evaluator_error") for x in xs]
+                break
+            continue
+        bad = {i for i, o in enumerate(obs)
+               if o.f is not None and not _finite_f(o.f)}
+        if not bad:
+            break
+        if attempt == EVAL_RETRIES:
+            obs = [_quarantine(o, "non_finite") if i in bad else o
+                   for i, o in enumerate(obs)]
+            break
+        _evict(objective, [xs[i] for i in bad])
+    if journal is not None:
+        journal.record_many(obs)
+    return obs
+
+
+def _eval_one(objective, x, journal: Optional[SearchJournal]) -> Observation:
+    """`objective(x)` behind the same failure model as `_eval_many`
+    (kept separate because `Objective.__call__` routes through the
+    scalar oracle while `evaluate_batch` routes through the jitted
+    path — the sha-pinned trajectories depend on that distinction)."""
+    obs = None
+    for attempt in range(EVAL_RETRIES + 1):
+        try:
+            obs = objective(x)
+        except StepFailure:
+            if attempt == EVAL_RETRIES:
+                obs = Observation(x=[int(v) for v in x], f=None, npu=None,
+                                  fault="evaluator_error")
+                break
+            continue
+        if obs.f is None or _finite_f(obs.f):
+            break
+        if attempt == EVAL_RETRIES:
+            obs = _quarantine(obs, "non_finite")
+            break
+        _evict(objective, [x])
+    if journal is not None:
+        journal.record(obs)
+    return obs
+
+
+def _begin_journal(journal: Optional[SearchJournal], objective, seed: int,
+                   method: str, init: Optional[list]) -> list:
+    """Open/replay the journal at searcher entry and return the starting
+    observation list.  Caller-provided init observations are journaled
+    too (idempotently — a `shared_init`/`system_warm_start` that ran
+    with the same journal already logged them), so the journal is a
+    self-contained record of the whole search."""
+    if journal is not None:
+        journal.begin(objective, seed, method=method)
+        if init:
+            journal.record_many(init)
+    return list(init) if init else []
 
 
 class Objective:
@@ -323,13 +457,20 @@ class DisaggObjective(SystemObjective):
         return self._role_caches[1]
 
 
-def shared_init(objective, n_init: int, seed: int) -> list:
+def shared_init(objective, n_init: int, seed: int,
+                journal: Optional[SearchJournal] = None) -> list:
     """Sobol initialization (paper: N_init = 20), skipping duplicates.
 
     Spaces with `init_filter_valid` (the paired space, whose raw-uniform
     validity is ~10-20%) additionally drop Sobol points that fail
     `valid_mask`, so the init budget is spent on decodable designs; the
-    shortfall is topped up by the space's (rejection-) sampler."""
+    shortfall is topped up by the space's (rejection-) sampler.
+
+    With a `journal`, the init evaluations are journaled (and replayed
+    on resume) like any other — `begin` here is idempotent with the
+    searcher's own `begin`, so one journal threads through both."""
+    if journal is not None:
+        journal.begin(objective, seed, method="init")
     space = objective.space
     xs: list = []
     seen = set()
@@ -353,7 +494,7 @@ def shared_init(objective, n_init: int, seed: int) -> list:
             continue
         seen.add(x)
         xs.append(x)
-    return objective.evaluate_batch(xs)
+    return _eval_many(objective, xs, journal)
 
 
 # ---------------------------------------------------------------------------
@@ -361,10 +502,11 @@ def shared_init(objective, n_init: int, seed: int) -> list:
 # ---------------------------------------------------------------------------
 
 def run_random(objective, n_total: int = 100, seed: int = 0,
-               init: Optional[list] = None) -> DSEResult:
+               init: Optional[list] = None,
+               journal: Optional[SearchJournal] = None) -> DSEResult:
     space = objective.space
     rng = np.random.default_rng(seed + 7)
-    obs = list(init) if init else []
+    obs = _begin_journal(journal, objective, seed, "Random", init)
     seen = {tuple(o.x) for o in obs}
     xs = []
     while len(obs) + len(xs) < n_total:
@@ -373,7 +515,7 @@ def run_random(objective, n_total: int = 100, seed: int = 0,
             continue
         seen.add(x)
         xs.append(x)
-    obs.extend(objective.evaluate_batch(xs))
+    obs.extend(_eval_many(objective, xs, journal))
     return DSEResult(method="Random", observations=obs)
 
 
@@ -383,22 +525,25 @@ def run_random(objective, n_total: int = 100, seed: int = 0,
 
 def run_mobo(objective, n_total: int = 100, seed: int = 0,
              init: Optional[list] = None, n_init: int = 20,
-             pool_size: int = 256) -> DSEResult:
+             pool_size: int = 256,
+             journal: Optional[SearchJournal] = None) -> DSEResult:
     """Multi-Objective Bayesian Optimization with GP surrogates + exact
     closed-form 2-D EHVI (Eq. 8) over a table-filtered candidate pool."""
     from .gp import GP
     space = objective.space
     rng = np.random.default_rng(seed + 13)
-    obs = list(init) if init else shared_init(objective, n_init, seed)
+    obs = _begin_journal(journal, objective, seed, "GP+EHVI", init)
+    if not obs:
+        obs = shared_init(objective, n_init, seed, journal=journal)
     seen = {tuple(o.x) for o in obs}
     while len(obs) < n_total:
-        feas = [o for o in obs if o.f is not None]
+        feas = [o for o in obs if _finite_f(o.f)]
         if len(feas) < 4:
             x = tuple(space.random_design(rng))
             if x in seen:
                 continue
             seen.add(x)
-            obs.append(objective(x))
+            obs.append(_eval_one(objective, x, journal))
             continue
         fs = np.array([o.f for o in feas], dtype=float)
         n_obj = fs.shape[1]
@@ -438,7 +583,7 @@ def run_mobo(objective, n_total: int = 100, seed: int = 0,
                              np.concatenate([half, -half]))
         x_best = pool[int(np.argmax(scores))]
         seen.add(x_best)
-        obs.append(objective(x_best))
+        obs.append(_eval_one(objective, x_best, journal))
     return DSEResult(method="GP+EHVI", observations=obs)
 
 
@@ -489,17 +634,19 @@ def _crowding(fs: np.ndarray, front: list) -> dict:
 
 def run_nsga2(objective, n_total: int = 100, seed: int = 0,
               init: Optional[list] = None, pop_size: int = 20,
-              p_cross: float = 0.9) -> DSEResult:
+              p_cross: float = 0.9,
+              journal: Optional[SearchJournal] = None) -> DSEResult:
     space = objective.space
     rng = np.random.default_rng(seed + 29)
-    obs = list(init) if init else []
+    obs = _begin_journal(journal, objective, seed, "NSGA-II", init)
     seen = {tuple(o.x) for o in obs}
 
     n_obj = getattr(objective, "n_obj", 2)
 
     def penal(o: Observation) -> np.ndarray:
-        # constraint-domination: infeasible points sit far below
-        return (np.array(o.f) if o.f is not None
+        # constraint-domination: infeasible AND quarantined/non-finite
+        # points sit far below (a NaN here would poison the sort)
+        return (np.array(o.f) if _finite_f(o.f)
                 else np.full(n_obj, -1e18))
 
     pop = list(obs[-pop_size:])
@@ -508,7 +655,7 @@ def run_nsga2(objective, n_total: int = 100, seed: int = 0,
         if x in seen:
             continue
         seen.add(x)
-        o = objective(x)
+        o = _eval_one(objective, x, journal)
         obs.append(o)
         pop.append(o)
 
@@ -562,9 +709,9 @@ def run_nsga2(objective, n_total: int = 100, seed: int = 0,
             if x is None:
                 break               # retry budget exhausted: stop early
             seen.add(x)
-            obs.append(objective(x))
+            obs.append(_eval_one(objective, x, journal))
             continue
-        child_obs = objective.evaluate_batch(children)
+        child_obs = _eval_many(objective, children, journal)
         obs.extend(child_obs)
         # environmental selection on parents + children
         union = pop + child_obs
@@ -589,22 +736,23 @@ def run_nsga2(objective, n_total: int = 100, seed: int = 0,
 
 def run_motpe(objective, n_total: int = 100, seed: int = 0,
               init: Optional[list] = None, gamma: float = 0.3,
-              n_candidates: int = 24) -> DSEResult:
+              n_candidates: int = 24,
+              journal: Optional[SearchJournal] = None) -> DSEResult:
     """Multi-objective TPE: split observations into good (near-Pareto) /
     bad by hypervolume-contribution ranking; per-dimension categorical
     densities l(x), g(x); propose argmax l/g."""
     space = objective.space
     rng = np.random.default_rng(seed + 43)
-    obs = list(init) if init else []
+    obs = _begin_journal(journal, objective, seed, "MO-TPE", init)
     seen = {tuple(o.x) for o in obs}
     while len(obs) < n_total:
-        feas = [o for o in obs if o.f is not None]
+        feas = [o for o in obs if _finite_f(o.f)]
         if len(feas) < 6:
             x = tuple(space.random_design(rng))
             if x in seen:
                 continue
             seen.add(x)
-            obs.append(objective(x))
+            obs.append(_eval_one(objective, x, journal))
             continue
         fs = np.array([o.f for o in feas], dtype=float)
         # rank: non-dominated first, then by scalarized distance
@@ -650,7 +798,7 @@ def run_motpe(objective, n_total: int = 100, seed: int = 0,
             if best_x is None:
                 break                   # retry budget exhausted: stop early
         seen.add(best_x)
-        obs.append(objective(best_x))
+        obs.append(_eval_one(objective, best_x, journal))
     return DSEResult(method="MO-TPE", observations=obs)
 
 
@@ -659,7 +807,8 @@ def run_motpe(objective, n_total: int = 100, seed: int = 0,
 # ---------------------------------------------------------------------------
 
 def system_warm_start(objective: SystemObjective, n_init: int, seed: int,
-                      pool: int = 256) -> list:
+                      pool: int = 256,
+                      journal: Optional[SearchJournal] = None) -> list:
     """Seed a `SystemSpace` search from per-role champions of a scored
     single-device pool.
 
@@ -673,7 +822,13 @@ def system_warm_start(objective: SystemObjective, n_init: int, seed: int,
     by the space's rejection sampler, and everything is evaluated
     through `objective.evaluate_batch` so warm starts land in the same
     caches the searchers use.
+
+    With a `journal`, the warm-start evaluations are journaled and
+    replayed on resume just like searcher evaluations (`begin` is
+    idempotent with the searcher's, so pass the same journal to both).
     """
+    if journal is not None:
+        journal.begin(objective, seed, method="warm-start")
     topo = objective.topology
     space = objective.space
     rng = np.random.default_rng(seed + 97)
@@ -713,7 +868,7 @@ def system_warm_start(objective: SystemObjective, n_init: int, seed: int,
             continue
         seen.add(x)
         starts.append(x)
-    return objective.evaluate_batch(starts)
+    return _eval_many(objective, starts, journal)
 
 
 METHODS: dict[str, Callable] = {

@@ -35,14 +35,26 @@ changes MUST land in the scalar oracle first and be mirrored in
 perfmodel_jit, never the other way around.  Set
 REPRO_PERFMODEL_SCALAR=1 (or pass `use_jit=False`) to force batch
 evaluation through the oracle.
+
+Degradation convention (the crash-safe search runtime): the jitted
+path in `evaluate_batch` runs behind `runtime.fault.RetryPolicy`
+(`JIT_RETRY`) — a transient jit failure is retried, a persistent one
+degrades per-chunk to the scalar oracle, and non-finite jit results
+are re-scored through the oracle (still non-finite -> quarantined as
+infeasible).  Every degradation emits a structured event
+(`degradation_events()`, `on_degradation` hook) instead of killing the
+search; a long DSE sweep survives evaluator trouble observably.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
+from collections import deque
 from typing import Optional
 
+from ..runtime.fault import RetryPolicy
 from .compute import (Dataflow, dataflow_traffic_multipliers, gemm_cycles,
                       vector_seconds)
 from .dataflow import ACTS, KV, WEIGHTS, Placement, place_data
@@ -428,6 +440,143 @@ def _evaluate_batch_scalar(npus, dims: ModelDims, trace: Trace,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Retry + graceful degradation around the jitted batch path
+# ---------------------------------------------------------------------------
+
+# Transient jit failures (XLA OOM burps, compile-cache races) are
+# retried immediately — the evaluator is pure in-process compute, so
+# backoff buys nothing; `sleep` is injectable for tests regardless.
+JIT_RETRY = RetryPolicy(max_retries=2, backoff_s=0.0, sleep=lambda s: None)
+
+#: chunk size of the per-chunk scalar fallback: small enough that one
+#: poisoned config cannot take down a 100k-design pool, large enough
+#: that the Python loop overhead stays irrelevant.
+FALLBACK_CHUNK = 64
+
+#: most recent degradation events (ring buffer), newest last.  Each is a
+#: dict with at least {"kind", "n_designs", "reason"}; kinds:
+#: "jit_fallback" (persistent jit failure -> scalar oracle),
+#: "nan_rescore" (non-finite jit results re-scored via the oracle),
+#: "scalar_error" (oracle itself died on a config -> infeasible),
+#: "nonfinite_quarantined" (oracle result non-finite -> infeasible).
+_DEGRADATION_LOG: deque = deque(maxlen=256)
+
+#: optional callback invoked with each degradation event dict
+on_degradation: Optional[callable] = None
+
+
+def degradation_events() -> list:
+    """Snapshot of the recent degradation events (newest last)."""
+    return list(_DEGRADATION_LOG)
+
+
+def clear_degradation_events() -> None:
+    _DEGRADATION_LOG.clear()
+
+
+def _emit_degradation(kind: str, **info) -> None:
+    event = {"kind": kind, **info}
+    _DEGRADATION_LOG.append(event)
+    if on_degradation is not None:
+        on_degradation(event)
+
+
+def _result_finite(r) -> bool:
+    return (math.isfinite(r.throughput_tps) and math.isfinite(r.avg_power_w)
+            and math.isfinite(r.latency_s)
+            and math.isfinite(r.energy_per_token_j))
+
+
+#: exception classes that are programming errors, not evaluator trouble
+#: — a malformed config or a broken call site must fail loudly, never
+#: be retried or degraded into "infeasible" (the `best_per_phase`
+#: exception-narrowing contract).
+_BUG_ERRORS = (AttributeError, TypeError, NameError)
+
+
+def _scalar_fallback(npus, dims, trace, phase, batch, context_override,
+                     reason: str) -> list:
+    """Chunked scalar-oracle scoring that cannot die on evaluator
+    trouble: unexpected per-chunk exceptions narrow to per-config,
+    per-config exceptions and non-finite results become infeasible
+    (None) + an event.  Bug-class exceptions (`_BUG_ERRORS`) still
+    propagate — a malformed config is a caller error, not a fault."""
+    out = []
+    for lo in range(0, len(npus), FALLBACK_CHUNK):
+        chunk = npus[lo:lo + FALLBACK_CHUNK]
+        try:
+            results = _evaluate_batch_scalar(chunk, dims, trace, phase,
+                                             batch=batch,
+                                             context_override=context_override)
+        except _BUG_ERRORS:
+            raise
+        except Exception as exc:       # noqa: BLE001 — degradation path
+            results = []
+            for npu in chunk:
+                try:
+                    results.extend(_evaluate_batch_scalar(
+                        [npu], dims, trace, phase, batch=batch,
+                        context_override=context_override))
+                except _BUG_ERRORS:
+                    raise
+                except Exception as exc1:  # noqa: BLE001
+                    _emit_degradation("scalar_error", n_designs=1,
+                                      reason=repr(exc1),
+                                      config=getattr(npu, "name", None))
+                    results.append(None)
+            _emit_degradation("scalar_chunk_error", n_designs=len(chunk),
+                              reason=repr(exc))
+        for i, r in enumerate(results):
+            if r is not None and not _result_finite(r):
+                _emit_degradation(
+                    "nonfinite_quarantined", n_designs=1, reason=reason,
+                    config=getattr(chunk[i], "name", None))
+                results[i] = None
+        out.extend(results)
+    return out
+
+
+def _evaluate_batch_jit_guarded(npus, dims, trace, phase, batch,
+                                context_override) -> list:
+    """The jitted fast path behind JIT_RETRY; degrades to the scalar
+    oracle per-chunk when the jit path keeps failing, and re-scores
+    non-finite jit results through the oracle.  Bug-class exceptions
+    (`_BUG_ERRORS`, e.g. AttributeError from a malformed config during
+    table construction) propagate immediately, unretried."""
+    from ..runtime.fault import StepFailure
+    from . import perfmodel_jit
+
+    def attempt():
+        try:
+            return perfmodel_jit.evaluate_batch_table(
+                perfmodel_jit.NPUTable.from_configs(npus), dims, trace,
+                phase, batch=batch, context_override=context_override)
+        except _BUG_ERRORS:
+            raise
+        except Exception as exc:       # noqa: BLE001 — retried/degraded
+            raise StepFailure(f"jit evaluator failed: {exc!r}") from exc
+
+    try:
+        results = JIT_RETRY.run(attempt)
+    except StepFailure as exc:
+        _emit_degradation("jit_fallback", n_designs=len(npus),
+                          reason=str(exc))
+        return _scalar_fallback(npus, dims, trace, phase, batch,
+                                context_override, reason="jit_fallback")
+    bad = [i for i, r in enumerate(results)
+           if r is not None and not _result_finite(r)]
+    if bad:
+        _emit_degradation("nan_rescore", n_designs=len(bad),
+                          reason="non-finite jitted results")
+        redo = _scalar_fallback([npus[i] for i in bad], dims, trace, phase,
+                                batch, context_override,
+                                reason="nan_rescore")
+        for i, r in zip(bad, redo):
+            results[i] = r
+    return results
+
+
 def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
                    batch: Optional[int] = None,
                    context_override: Optional[int] = None,
@@ -480,9 +629,8 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
     if miss:
         from . import perfmodel_jit
         if use_jit and perfmodel_jit.supports(dims, phase):
-            results = perfmodel_jit.evaluate_batch_table(
-                perfmodel_jit.NPUTable.from_configs(miss), dims, trace,
-                phase, batch=batch, context_override=context_override)
+            results = _evaluate_batch_jit_guarded(
+                miss, dims, trace, phase, batch, context_override)
         else:
             results = _evaluate_batch_scalar(
                 miss, dims, trace, phase, batch=batch,

@@ -84,6 +84,17 @@ class HeartbeatMonitor:
         self.last_beat: dict = {}
         self.quarantined: set = set()
 
+    def register(self, worker: str):
+        """Start tracking a worker before its first heartbeat.
+
+        Seeds `last_beat` with the registration time, so a worker that
+        hangs before ever beating lapses and quarantines like one that
+        went silent later — previously such a worker was invisible to
+        `check()` forever.  A no-op for already-tracked workers (the
+        registration time must not mask a lapsing heartbeat)."""
+        if worker not in self.last_beat and worker not in self.quarantined:
+            self.last_beat[worker] = self.clock()
+
     def beat(self, worker: str):
         if worker not in self.quarantined:
             self.last_beat[worker] = self.clock()

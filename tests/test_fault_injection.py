@@ -1,0 +1,321 @@
+"""Fault injection against the crash-safe search runtime.
+
+The seeded chaos layer (`core.dse.faults`) storms the evaluation path
+with transient evaluator exceptions, NaN objective corruption and
+infeasibility floods; these tests pin the runtime's robustness claims:
+
+* every searcher *completes* under every storm,
+* for retryable faults (transient exceptions, bounded NaN budgets) the
+  trajectory *converges to the failure-free run exactly* — same
+  proposals, same objective values,
+* persistent NaNs are quarantined as infeasible and never leak into
+  `feasible_f` / `hv_history` / the Pareto front,
+* the perfmodel's jitted fast path retries, degrades to the scalar
+  oracle, and re-scores NaNs — emitting structured degradation events
+  instead of killing the search,
+* the benchmark baseline merge is atomic and warns instead of
+  swallowing write failures.
+"""
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import QWEN3_32B
+from repro.core import perfmodel
+from repro.core import perfmodel_jit as pj
+from repro.core.dse import (FaultInjector, FaultSpec, FaultyObjective,
+                            Objective, SearchJournal, TransientEvalError,
+                            run_mobo, run_motpe, run_nsga2, run_random)
+from repro.core.dse import space as sp
+from repro.core.dse.runner import EVAL_RETRIES
+from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
+
+pytestmark = pytest.mark.fault
+
+SEARCHERS = {
+    "random": lambda obj, j=None: run_random(obj, n_total=12, seed=5,
+                                             journal=j),
+    "nsga2": lambda obj, j=None: run_nsga2(obj, n_total=12, seed=5,
+                                           pop_size=6, journal=j),
+    "motpe": lambda obj, j=None: run_motpe(obj, n_total=12, seed=5,
+                                           journal=j),
+    "mobo": lambda obj, j=None: run_mobo(obj, n_total=12, seed=5,
+                                         n_init=6, journal=j),
+}
+
+
+def _objective():
+    return Objective(QWEN3_32B, OSWORLD_LIBREOFFICE, Phase.DECODE,
+                     tdp_limit_w=700.0)
+
+
+def _storm(spec):
+    inj = FaultInjector(spec)
+    return FaultyObjective(_objective(), inj), inj
+
+
+# ---------------------------------------------------------------------------
+# Convergence: retryable storms leave the trajectory untouched
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SEARCHERS))
+def test_searchers_converge_under_transient_and_nan_storms(name):
+    """Summed per-mode fault budgets <= EVAL_RETRIES: retries drain
+    every fault budget even when a transient-faulted batch contains a
+    NaN-faulted key, so the faulted run reproduces the failure-free run
+    exactly (the composition bound in FaultSpec's docstring)."""
+    spec = FaultSpec(p_transient=0.3, p_nan=0.3, fault_attempts=1, seed=5)
+    assert 2 * spec.fault_attempts <= EVAL_RETRIES
+    clean = SEARCHERS[name](_objective())
+    faulty_obj, inj = _storm(spec)
+    stormy = SEARCHERS[name](faulty_obj)
+    assert inj.events, "storm never fired — the test exercised nothing"
+    assert [o.x for o in stormy.observations] == \
+        [o.x for o in clean.observations]
+    assert [o.f for o in stormy.observations] == \
+        [o.f for o in clean.observations]
+    assert np.array_equal(stormy.feasible_f(), clean.feasible_f())
+
+
+def test_storm_actually_injects_both_fault_kinds():
+    spec = FaultSpec(p_transient=0.3, p_nan=0.3, fault_attempts=1, seed=5)
+    faulty_obj, inj = _storm(spec)
+    run_mobo(faulty_obj, n_total=12, seed=5, n_init=6)
+    kinds = {e[0] for e in inj.events}
+    assert "transient" in kinds and "nan" in kinds
+
+
+@pytest.mark.parametrize("mode", ["transient", "nan"])
+def test_single_mode_storm_converges_at_full_retry_budget(mode):
+    """With one fault mode active its budget may use the whole retry
+    budget (fault_attempts == EVAL_RETRIES) and still converge."""
+    kw = {f"p_{mode}": 0.5}
+    spec = FaultSpec(fault_attempts=EVAL_RETRIES, seed=9, **kw)
+    clean = run_random(_objective(), n_total=12, seed=5)
+    faulty_obj, inj = _storm(spec)
+    stormy = run_random(faulty_obj, n_total=12, seed=5)
+    assert any(e[0] == mode for e in inj.events)
+    assert [o.f for o in stormy.observations] == \
+        [o.f for o in clean.observations]
+
+
+def test_transient_error_is_a_step_failure():
+    """The injected exception must be retryable by RetryPolicy."""
+    from repro.runtime.fault import StepFailure
+    assert issubclass(TransientEvalError, StepFailure)
+    spec = FaultSpec(p_transient=1.0, fault_attempts=1, seed=0)
+    faulty_obj, _ = _storm(spec)
+    with pytest.raises(TransientEvalError):
+        faulty_obj.evaluate_batch([[0] * faulty_obj.space.n_dims])
+
+
+# ---------------------------------------------------------------------------
+# Completion: sticky infeasibility floods, persistent NaN quarantine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SEARCHERS))
+def test_searchers_complete_under_infeasibility_flood(name):
+    """Flooded verdicts are sticky (never retried); searchers must still
+    finish their budget and keep flooded designs out of the front."""
+    faulty_obj, inj = _storm(FaultSpec(p_infeasible=0.5, seed=7))
+    res = SEARCHERS[name](faulty_obj)
+    assert len(res.observations) == 12
+    flooded = {key for kind, key in inj.events if kind == "infeasible"}
+    assert flooded, "flood never fired"
+    for o in res.pareto():
+        assert tuple(int(v) for v in o.x) not in flooded
+    assert all(math.isfinite(v) for f in res.feasible_f() for v in f)
+
+
+def test_persistent_nan_quarantined_never_in_front(tmp_path):
+    """fault_attempts > EVAL_RETRIES: the NaN outlives the retry budget,
+    so the design is quarantined — recorded infeasible with a fault tag,
+    absent from feasible_f/hv_history/pareto — and the search completes."""
+    spec = FaultSpec(p_nan=0.4, fault_attempts=EVAL_RETRIES + 5, seed=11)
+    inj = FaultInjector(spec)
+    faulty_obj = FaultyObjective(_objective(), inj)
+    jpath = tmp_path / "quarantine.jsonl"
+    res = run_random(faulty_obj, n_total=16, seed=5,
+                     journal=SearchJournal(jpath))
+    assert len(res.observations) == 16
+    quarantined = [o for o in res.observations if o.fault == "non_finite"]
+    assert quarantined, "no quarantine happened — the test is vacuous"
+    assert all(o.f is None for o in quarantined)
+    # nothing non-finite anywhere near the front or its bookkeeping
+    fs = res.feasible_f()
+    assert len(fs) and np.all(np.isfinite(fs))
+    hv = res.hv_history(fs.min(axis=0) - 1.0)
+    assert len(hv) == 16 and np.all(np.isfinite(hv))
+    assert np.all(np.diff(hv) >= -1e-9)
+    front_keys = {tuple(int(v) for v in o.x) for o in res.pareto()}
+    assert front_keys.isdisjoint(
+        {tuple(int(v) for v in o.x) for o in quarantined})
+    # the journal records the quarantine verdict durably
+    recs = [json.loads(ln) for ln in jpath.read_text().splitlines()[1:]]
+    tagged = [r for r in recs if r.get("fault") == "non_finite"]
+    assert len(tagged) == len(quarantined)
+    assert all(r["f"] is None for r in tagged)
+
+
+def test_persistent_evaluator_error_yields_infeasible_not_crash():
+    """A batch whose transient budget outlives the retries degrades to
+    infeasible observations instead of killing the searcher."""
+    spec = FaultSpec(p_transient=1.0, fault_attempts=EVAL_RETRIES + 5,
+                     seed=3)
+    faulty_obj, _ = _storm(spec)
+    res = run_random(faulty_obj, n_total=10, seed=5)
+    assert len(res.observations) == 10
+    assert all(o.fault == "evaluator_error" for o in res.observations)
+    assert len(res.feasible_f()) == 0
+
+
+# ---------------------------------------------------------------------------
+# Perfmodel: jit retry, scalar fallback, NaN re-score — with events
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def degradation_log():
+    perfmodel.clear_degradation_events()
+    yield perfmodel.degradation_events
+    perfmodel.clear_degradation_events()
+
+
+@pytest.fixture(scope="module")
+def npu_pool():
+    rng = np.random.default_rng(0)
+    xs = sp.random_designs(rng, 64)
+    xs = xs[sp.valid_mask(xs)][:12]
+    assert len(xs) == 12
+    return [sp.decode(x) for x in xs]
+
+
+def _score(npus, **kw):
+    return perfmodel.evaluate_batch(npus, QWEN3_32B, OSWORLD_LIBREOFFICE,
+                                    Phase.DECODE, **kw)
+
+
+def test_jit_transient_failure_retried_silently(npu_pool, monkeypatch,
+                                                degradation_log):
+    want = _score(npu_pool)
+    real = pj.evaluate_batch_table
+    calls = {"n": 0}
+
+    def flaky(*args, **kwargs):
+        calls["n"] += 1
+        if calls["n"] <= perfmodel.JIT_RETRY.max_retries:
+            raise RuntimeError("injected transient jit failure")
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(pj, "evaluate_batch_table", flaky)
+    got = _score(npu_pool)
+    assert calls["n"] == perfmodel.JIT_RETRY.max_retries + 1
+    assert got == want                  # retry is invisible to callers
+    assert degradation_log() == []      # ...and to the event log
+
+
+def test_jit_persistent_failure_degrades_to_scalar(npu_pool, monkeypatch,
+                                                   degradation_log):
+    oracle = _score(npu_pool, use_jit=False)
+
+    def dead(*args, **kwargs):
+        raise RuntimeError("injected persistent jit failure")
+
+    monkeypatch.setattr(pj, "evaluate_batch_table", dead)
+    got = _score(npu_pool)
+    assert [(r is None) for r in got] == [(r is None) for r in oracle]
+    for g, w in zip(got, oracle):
+        if w is not None:
+            assert g.throughput_tps == pytest.approx(w.throughput_tps)
+            assert g.avg_power_w == pytest.approx(w.avg_power_w)
+    kinds = [e["kind"] for e in degradation_log()]
+    assert "jit_fallback" in kinds
+
+
+def test_nonfinite_jit_results_rescored_through_oracle(npu_pool,
+                                                       monkeypatch,
+                                                       degradation_log):
+    real = pj.evaluate_batch_table
+
+    def corrupting(*args, **kwargs):
+        results = real(*args, **kwargs)
+        idx = next(i for i, r in enumerate(results) if r is not None)
+        results[idx] = dataclasses.replace(results[idx],
+                                           throughput_tps=math.nan)
+        return results
+
+    monkeypatch.setattr(pj, "evaluate_batch_table", corrupting)
+    got = _score(npu_pool)
+    oracle = _score(npu_pool, use_jit=False)
+    assert [(r is None) for r in got] == [(r is None) for r in oracle]
+    assert all(math.isfinite(r.throughput_tps)
+               for r in got if r is not None)
+    kinds = [e["kind"] for e in degradation_log()]
+    assert "nan_rescore" in kinds
+
+
+def test_bug_class_exceptions_propagate_unretried(npu_pool, monkeypatch,
+                                                  degradation_log):
+    """AttributeError/TypeError are caller bugs, not evaluator trouble:
+    they must escape the retry/degradation machinery immediately (the
+    best_per_phase exception-narrowing contract)."""
+    calls = {"n": 0}
+
+    def buggy(*args, **kwargs):
+        calls["n"] += 1
+        raise AttributeError("malformed config")
+
+    monkeypatch.setattr(pj, "evaluate_batch_table", buggy)
+    with pytest.raises(AttributeError):
+        _score(npu_pool)
+    assert calls["n"] == 1              # no retries
+    assert degradation_log() == []      # no silent degradation either
+
+
+def test_degradation_hook_observes_events(npu_pool, monkeypatch,
+                                          degradation_log):
+    seen = []
+    monkeypatch.setattr(perfmodel, "on_degradation", seen.append)
+    monkeypatch.setattr(pj, "evaluate_batch_table",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("boom")))
+    _score(npu_pool)
+    assert any(e["kind"] == "jit_fallback" for e in seen)
+
+
+# ---------------------------------------------------------------------------
+# Benchmark baseline merge: atomic replace + loud write failures
+# ---------------------------------------------------------------------------
+
+def test_merge_bench_json_merges_atomically(tmp_path, monkeypatch):
+    from benchmarks.common import merge_bench_json
+    target = tmp_path / "BENCH_dse.json"
+    target.write_text(json.dumps({"existing": {"v": 1}}))
+    monkeypatch.setenv("BENCH_DSE_JSON", str(target))
+    merge_bench_json("new_key", {"v": 2})
+    data = json.loads(target.read_text())
+    assert data == {"existing": {"v": 1}, "new_key": {"v": 2}}
+    leftovers = [p for p in tmp_path.iterdir() if p.suffix == ".tmp"]
+    assert leftovers == []              # no temp debris on success
+
+
+def test_merge_bench_json_warns_instead_of_swallowing(tmp_path, monkeypatch,
+                                                      capsys):
+    from benchmarks import common
+    target = tmp_path / "BENCH_dse.json"
+    target.write_text(json.dumps({"existing": {"v": 1}}))
+    monkeypatch.setenv("BENCH_DSE_JSON", str(target))
+
+    def no_disk(*args, **kwargs):
+        raise OSError("injected: disk full")
+
+    monkeypatch.setattr(common.tempfile, "mkstemp", no_disk)
+    merge = common.merge_bench_json
+    merge("new_key", {"v": 2})          # must not raise
+    err = capsys.readouterr().err
+    assert "WARNING" in err and "UNCHANGED" in err
+    # the committed baseline was left untouched, not truncated
+    assert json.loads(target.read_text()) == {"existing": {"v": 1}}

@@ -140,6 +140,28 @@ def test_heartbeat_quarantine():
     assert hb.healthy() == ["w1"]
 
 
+def test_heartbeat_register_catches_never_beating_worker():
+    """A worker that hangs before its first beat must lapse like one
+    that went silent later — register() seeds the tracking clock."""
+    clock = {"t": 0.0}
+    hb = HeartbeatMonitor(timeout_s=10.0, clock=lambda: clock["t"])
+    hb.register("w0")               # never beats
+    hb.register("w1")
+    clock["t"] = 5.0
+    hb.beat("w1")
+    # re-registration must not refresh an aging heartbeat
+    clock["t"] = 9.0
+    hb.register("w0")
+    clock["t"] = 12.0
+    assert hb.check() == ["w0"]
+    assert hb.healthy() == ["w1"]
+    # registering a quarantined worker does not resurrect it
+    hb.register("w0")
+    clock["t"] = 13.0
+    assert hb.check() == []
+    assert hb.healthy() == ["w1"]
+
+
 def test_supervisor_checkpoints_and_retries():
     saved = []
     state = {"v": 0}

@@ -38,11 +38,16 @@ pair) and the committed baseline, and the 3-role diffusion-LM fleet
 search (bench_dllm) must keep its ``dllm_system`` tokens/joule at or
 above both the hard `DLLM_TOKJ_FLOOR` (the hand-designed all-P1
 fleet) and the committed baseline — each within the timing tolerance.
+The batched-acquisition headline (bench_fleet) is gated too: the
+seeded 1000-evaluation B=16 q-EHVI search over the 102-gene 6-role
+fleet space must keep its ``fleet1000`` hypervolume at the committed
+baseline and finish under both the timing tolerance and the hard
+`FLEET1000_US_CEILING` (the single-digit-minutes claim).
 Refresh the baselines after an intentional perf change with::
 
   BENCH_DSE_JSON=benchmarks/BENCH_dse.json \\
       PYTHONPATH=src python -m benchmarks.run \\
-      --only "fig6,fig9,table7" --smoke
+      --only "fig6,fig9,table7,fleet1000" --smoke
 """
 
 import argparse
@@ -64,6 +69,7 @@ MODULES = [
     ("table7_dllm", "benchmarks.bench_dllm"),
     ("table8_moe", "benchmarks.bench_moe"),
     ("fig9_extreme_heterogeneity", "benchmarks.bench_extreme"),
+    ("fleet1000_batched_search", "benchmarks.bench_fleet"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 
@@ -86,6 +92,12 @@ EXTREME_TOKJ_FLOOR = 0.276
 # step is a full-sequence pass, so the on-chip-heavy prefill device is
 # the strongest hand-designed choice for every role).
 DLLM_TOKJ_FLOOR = 0.0034
+
+# Hard wall-clock ceiling for the fleet1000 headline search
+# (bench_fleet): the seeded 1000-evaluation batched q-EHVI sweep over
+# the 102-gene SystemSpace(6) must finish in single-digit minutes on
+# CI hardware, regardless of the committed baseline timing.
+FLEET1000_US_CEILING = 540e6
 
 
 def compare_timings(base: dict, fresh: dict, tolerance: float) -> list:
@@ -167,6 +179,34 @@ def compare_dllm(base: dict, fresh: dict, tolerance: float):
                                     DLLM_TOKJ_FLOOR, tolerance)
 
 
+def compare_fleet1000(base: dict, fresh: dict, tolerance: float):
+    """`fleet1000` verdict (the batched-acquisition headline search), or
+    None when the baseline predates it.
+
+    Returns (fresh_hv, hv_floor, fresh_us, limit_us, ok): the seeded
+    1000-evaluation q-EHVI search must keep its achieved hypervolume at
+    ~the committed baseline (seeded search: a drop means an
+    acquisition, GP, or modeling regression), and its runtime must stay
+    within both ``tolerance x`` the baseline and the hard
+    `FLEET1000_US_CEILING` (the single-digit-minutes headline).
+    Mirrors `_compare_searched_system`'s missing-entry (limit = -1) and
+    budget-mismatch (floor = -2, also raised when the batch size
+    differs) conventions."""
+    b = base.get("fleet1000")
+    if not b or not isinstance(b.get("hv"), (int, float)):
+        return None
+    g = fresh.get("fleet1000")
+    if not g or not isinstance(g.get("hv"), (int, float)):
+        return (float("nan"), float("nan"), float("nan"), -1.0, False)
+    if (b.get("n_total") != g.get("n_total")
+            or b.get("batch_size") != g.get("batch_size")):
+        return (g["hv"], -2.0, g["us_per_run"], -2.0, False)
+    floor = b["hv"] * (1 - 1e-3)
+    limit = min(b["us_per_run"] * tolerance, FLEET1000_US_CEILING)
+    ok = g["hv"] >= floor and g["us_per_run"] <= limit
+    return (g["hv"], floor, g["us_per_run"], limit, ok)
+
+
 def check_perf(baseline_path: str, tolerance: float) -> int:
     """Fresh --smoke DSE timings vs the committed baseline.
 
@@ -193,7 +233,8 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
     prev_json_path = os.environ.get("BENCH_DSE_JSON")
     os.environ["BENCH_DSE_JSON"] = fresh_path
     try:
-        from benchmarks import bench_dllm, bench_dse, bench_extreme
+        from benchmarks import (bench_dllm, bench_dse, bench_extreme,
+                                bench_fleet)
         for line in bench_dse.run(smoke=True):
             print(line)
         if base.get("extreme_system"):   # gate the system search too
@@ -201,6 +242,9 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
                 print(line)
         if base.get("dllm_system"):      # ... and the diffusion fleet
             for line in bench_dllm.run(smoke=True):
+                print(line)
+        if base.get("fleet1000"):        # ... and the batched headline
+            for line in bench_fleet.run(smoke=True):
                 print(line)
         with open(fresh_path) as f:
             fresh = json.load(f)
@@ -246,9 +290,9 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
     dll = compare_dllm(base, fresh, tolerance)
     # the refresh recipe reruns ALL baseline-writing modules: bench_dse
     # rewrites BENCH_dse.json from scratch, so refreshing one searched-
-    # system key alone would clobber the other and silently disable its
-    # gate on the next --check
-    refresh_only = "fig6,fig9,table7"
+    # system key alone would clobber the others and silently disable
+    # their gates on the next --check
+    refresh_only = "fig6,fig9,table7,fleet1000"
     for key, verdict in (("extreme_system", ext), ("dllm_system", dll)):
         if verdict is None:
             continue
@@ -274,6 +318,30 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
                     f"{key}: {got_us/1e6:.2f}s/run > "
                     f"{tolerance:g}x baseline "
                     f"{limit_us/tolerance/1e6:.2f}s/run")
+    flt = compare_fleet1000(base, fresh, tolerance)
+    if flt is not None:
+        hv, floor_hv, got_us, limit_us, ok = flt
+        if floor_hv == -2.0:
+            failures.append(
+                "fleet1000: baseline search budget/batch size differs "
+                "from the fresh --smoke run; refresh the baseline with "
+                "BENCH_DSE_JSON=benchmarks/BENCH_dse.json "
+                f"python -m benchmarks.run --only {refresh_only} --smoke")
+        elif limit_us < 0:
+            failures.append("fleet1000: missing from fresh run")
+        else:
+            print(f"check_fleet1000,{got_us:.1f},"
+                  f"hv={hv:.2f} floor={floor_hv:.2f} "
+                  f"limit_us={limit_us:.1f} {'ok' if ok else 'FAIL'}")
+            if hv < floor_hv:
+                failures.append(
+                    f"fleet1000: searched hypervolume {hv:.2f} "
+                    f"below floor {floor_hv:.2f}")
+            if got_us > limit_us:
+                failures.append(
+                    f"fleet1000: {got_us/1e6:.2f}s/run > ceiling "
+                    f"{limit_us/1e6:.2f}s/run (single-digit-minutes "
+                    f"headline / {tolerance:g}x baseline)")
     if failures:
         print("PERF REGRESSION:\n  " + "\n  ".join(failures), file=sys.stderr)
         return 1
@@ -282,6 +350,7 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
           + (", jit_pool above floor" if jit is not None else "")
           + (", extreme_system above floor" if ext is not None else "")
           + (", dllm_system above floor" if dll is not None else "")
+          + (", fleet1000 above floor" if flt is not None else "")
           + ")")
     return 0
 

@@ -16,15 +16,22 @@
 #    seeded fault-injection convergence and byte-identical journal
 #    resume — gate every run visibly even if tier-1 marker selection
 #    ever changes.
-# 3. perf gate: benchmarks/run.py --smoke --check reruns the smoke DSE
+# 3. acquisition microbench: the `bench`-marked suite (also part of
+#    tier-1) is rerun by itself so the per-call acquisition bounds —
+#    exact 3-D EHVI pool scoring and jitted GP batched predict
+#    (tests/test_acquisition_bench.py) — and the compare_* verdict
+#    plumbing gate every run visibly.
+# 4. perf gate: benchmarks/run.py --smoke --check reruns the smoke DSE
 #    bench and fails when any search method exceeds --tolerance x its
 #    committed baseline (benchmarks/BENCH_dse.json), when the jitted
 #    perfmodel's pool-scoring speedup over the scalar oracle drops
 #    below the 10x floor (or 1/tolerance of the baseline speedup),
 #    when the jitted path diverges from the oracle on the bench sample,
-#    or when a seeded searched-system sweep (bench_extreme's
+#    when a seeded searched-system sweep (bench_extreme's
 #    extreme_system, bench_dllm's dllm_system) falls below its
-#    committed tokens/joule baseline / hard floor.
+#    committed tokens/joule baseline / hard floor, or when the
+#    fleet1000 batched headline search (bench_fleet) loses hypervolume
+#    or blows past the single-digit-minutes wall-clock ceiling.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -45,6 +52,9 @@ fi
 
 echo "== fault-injection + interrupt/resume smoke =="
 python -m pytest -q -m fault
+
+echo "== acquisition microbench (per-call bounds) =="
+python -m pytest -q -m bench
 
 echo "== benchmark smoke + perf-regression check =="
 python -m benchmarks.run --smoke --check

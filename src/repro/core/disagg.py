@@ -213,6 +213,21 @@ DLLM_3ROLE = SystemTopology("dllm-3role", (
     Role("denoise-late", Phase.DECODE, ctx_frac=(3, 4), gen_frac=0.5),
 ))
 
+# Fleet-scale topology for the batched-acquisition benchmark: layer-group
+# prefill split plus a four-way decode-phase split at the octile context
+# points.  Six roles put `SystemSpace(6)` at 102 genes — the 100+-gene
+# regime the ROADMAP's replication/placement work will live in — which
+# is what the `fleet1000` bench row (1000-eval seeded q-EHVI search)
+# exercises end-to-end.
+FLEET_6ROLE = SystemTopology("fleet-6role", (
+    Role("prefill-attn", Phase.PREFILL, groups="attn"),
+    Role("prefill-ffn", Phase.PREFILL, groups="ffn"),
+    Role("decode-p1", Phase.DECODE, ctx_frac=(1, 8), gen_frac=0.25),
+    Role("decode-p2", Phase.DECODE, ctx_frac=(3, 8), gen_frac=0.25),
+    Role("decode-p3", Phase.DECODE, ctx_frac=(5, 8), gen_frac=0.25),
+    Role("decode-p4", Phase.DECODE, ctx_frac=(7, 8), gen_frac=0.25),
+))
+
 
 @dataclasses.dataclass(frozen=True)
 class SystemResult:

@@ -8,9 +8,11 @@ space   Table 2 encoding <-> NPUConfig (+ vectorized validity/TDP tables)
 sobol   quasi-random initialization (N_init = 20)
 gp      GP surrogates (JAX, MLE-fit RBF-ARD, bucketed jit cache)
 pareto  dominance / front / exact 2-D hypervolume (Eq. 7), sweep-based,
-        + nd slicing hypervolume for d > 2 objective counts
-ehvi    exact closed-form 2-D EHVI (Eq. 8) + quasi-MC estimator (test
-        oracle, and the d > 2 acquisition fallback)
+        + nd slicing hypervolume and incremental nd HV histories
+        (IncrementalHV2D staircase, IncrementalHVND clipped-front gain)
+ehvi    exact closed-form EHVI: 2-D strips (Eq. 8) + 3-D box
+        decomposition, vectorized over the candidate pool; quasi-MC
+        estimator (test oracle, and the d > 3 acquisition fallback)
 runner  GP+EHVI MOBO + NSGA-II / MO-TPE / Random baselines (batched),
         generic over any DesignSpace; Objective (single device),
         SystemObjective (K-role systems over a disagg.SystemTopology)
@@ -24,17 +26,18 @@ faults  seeded fault injection (transient exceptions, NaN storms,
 """
 
 from . import space
-from .ehvi import ehvi_2d, mc_ehvi
+from .ehvi import ehvi_2d, ehvi_3d, mc_ehvi
 from .faults import FaultInjector, FaultSpec, FaultyObjective, \
     TransientEvalError
 from .journal import (JournalError, JournalMismatch, SearchJournal,
                       objective_identity)
-from .pareto import (IncrementalHV2D, dominates, hv_contributions_2d,
-                     hv_history, hypervolume, hypervolume_2d, pareto_front,
-                     pareto_mask, reference_point)
+from .pareto import (IncrementalHV2D, IncrementalHVND, dominates,
+                     hv_contributions_2d, hv_history, hypervolume,
+                     hypervolume_2d, pareto_front, pareto_mask,
+                     reference_point)
 from .runner import (METHODS, DisaggObjective, DSEResult, Objective,
                      Observation, SystemObjective, run_mobo, run_motpe,
                      run_nsga2, run_random, shared_init, system_warm_start)
-from .sobol import sobol
+from .sobol import max_dims, sobol
 from .space import (DesignSpace, GeneTie, PairedSpace, SingleDeviceSpace,
                     SystemSpace, kv_quant_tie)

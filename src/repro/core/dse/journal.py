@@ -212,13 +212,12 @@ class SearchJournal:
 
     # -- recording ---------------------------------------------------------
 
-    def record(self, obs) -> None:
-        """Append one observation (no-op for already-journaled keys)."""
-        if self._fh is None:
-            raise JournalError("journal not begun")
+    def _line(self, obs) -> Optional[str]:
+        """Serialized record line for `obs`, or None if already logged
+        (bumps the record counter and the logged-key set)."""
         key = tuple(int(v) for v in obs.x)
         if key in self._logged:
-            return
+            return None
         rec = {"kind": "eval", "i": self._n, "x": list(key),
                "f": None if obs.f is None else [float(v) for v in obs.f]}
         bneck = getattr(obs.result, "bottleneck", None)
@@ -227,11 +226,30 @@ class SearchJournal:
         fault = getattr(obs, "fault", None)
         if fault is not None:
             rec["fault"] = str(fault)
-        self._fh.write(_canon(rec) + "\n")
-        self._fh.flush()
         self._logged.add(key)
         self._n += 1
+        return _canon(rec) + "\n"
+
+    def record(self, obs) -> None:
+        """Append one observation (no-op for already-journaled keys)."""
+        if self._fh is None:
+            raise JournalError("journal not begun")
+        line = self._line(obs)
+        if line is None:
+            return
+        self._fh.write(line)
+        self._fh.flush()
 
     def record_many(self, observations) -> None:
-        for obs in observations:
-            self.record(obs)
+        """Append a batch of observations as one write + flush (bytes
+        identical to per-record appends; a crash mid-batch leaves a
+        clean record prefix — plus at most one torn line, which `begin`
+        truncates — so a resumed search replays the completed records
+        and re-proposes only the missing ones)."""
+        if self._fh is None:
+            raise JournalError("journal not begun")
+        lines = [line for line in map(self._line, observations)
+                 if line is not None]
+        if lines:
+            self._fh.write("".join(lines))
+            self._fh.flush()

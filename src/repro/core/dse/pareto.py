@@ -241,11 +241,54 @@ class IncrementalHV2D:
             else np.empty((0, 2))
 
 
+class IncrementalHVND:
+    """Incremental exact hypervolume for d >= 3 maximized objectives.
+
+    Dominated, duplicate, and below-reference points are O(|front| * d)
+    mask checks and cost nothing; an improving point pays exactly one
+    clipped-front hypervolume — its exclusive gain is
+    vol(box(ref, y)) - HV(min(front, y), ref), since a point p <= y is
+    already covered iff it is covered by the front clipped into y's
+    box.  A history over n points therefore pays one nd-hypervolume per
+    front *change* instead of a full recompute per prefix (2-D keeps
+    the O(log n) staircase in `IncrementalHV2D`).
+    """
+
+    def __init__(self, ref) -> None:
+        self.ref = np.asarray(ref, dtype=float)
+        self._front = np.empty((0, len(self.ref)))
+        self.hv = 0.0
+
+    def add(self, point) -> float:
+        """Insert one point; returns the updated hypervolume."""
+        y = np.asarray(point, dtype=float)
+        if not np.all(y > self.ref):
+            return self.hv
+        f = self._front
+        if len(f) and bool(np.any(np.all(f >= y, axis=1))):
+            return self.hv              # duplicate-or-dominated: no gain
+        box = float(np.prod(y - self.ref))
+        covered = hypervolume(np.minimum(f, y), self.ref) if len(f) else 0.0
+        self.hv += max(0.0, box - covered)
+        keep = ~np.all(y >= f, axis=1)  # evict points y now dominates
+        self._front = np.vstack([f[keep], y[None, :]])
+        return self.hv
+
+    def front(self) -> np.ndarray:
+        return self._front.copy()
+
+
 def hv_history(ys: np.ndarray, ref: np.ndarray) -> np.ndarray:
-    """Hypervolume of the first k points, for every k (incremental)."""
+    """Hypervolume of the first k points, for every k (incremental;
+    exact for any d — the 2-D staircase or the nd clipped-front gain)."""
     ys = np.asarray(ys, dtype=float)
     out = np.empty(len(ys))
-    inc = IncrementalHV2D(ref)
+    if len(ys) == 0:
+        return out
+    if ys.shape[1] == 2:
+        inc = IncrementalHV2D(ref)
+    else:
+        inc = IncrementalHVND(ref)
     for k, y in enumerate(ys):
         out[k] = inc.add(y)
     return out

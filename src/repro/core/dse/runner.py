@@ -18,8 +18,9 @@ The objective wrappers share one informal protocol (`.space`,
   `PairedSpace` (the paper's Fig. 8 co-design, Section 5.3);
   byte-identical to the pre-SystemObjective pair implementation.
 
-All methods maximize f (2 objectives by default; d > 2 routes MOBO's
-acquisition to the quasi-MC EHVI fallback), share the same
+All methods maximize f (2 objectives by default; d = 3 routes MOBO's
+acquisition to the exact 3-D box decomposition, d > 3 to the quasi-MC
+EHVI fallback), share the same
 Sobol/random initialization, and report their evaluation history so
 hypervolume-convergence curves can be drawn against a common reference
 point.  The searchers read every space-specific operation (sampling,
@@ -42,11 +43,17 @@ Hot-path structure (vectorized engine):
   by one `jax.jit` call (scalar `perfmodel.evaluate` remains the
   reference oracle); 100k-design pools score in ~1 s
   (`benchmarks/bench_dse.py --pool 100000`).
-* MOBO scores its candidate pool with the exact closed-form 2-D EHVI
-  (`ehvi.ehvi_2d`) instead of a quasi-MC estimate, and filters the pool
-  with the per-gene TDP/validity tables instead of decoding every draw.
+* MOBO scores its candidate pool with the exact closed-form EHVI
+  (`ehvi.ehvi_2d` strips / `ehvi.ehvi_3d` boxes) instead of a quasi-MC
+  estimate, and filters the pool with the per-gene TDP/validity tables
+  instead of decoding every draw.  With `batch_size=B > 1` it proposes
+  B points per GP fit (kriging-believer q-EHVI) so every GP iteration
+  amortizes over one jitted B-design evaluation, and the GP fit/predict
+  hot path itself runs on `jax.jit` (`gp.GP.fit(use_jit=True)` /
+  `predict_batch`).
 * Hypervolume convergence curves come from the incremental staircase
-  (`pareto.IncrementalHV2D`), not a from-scratch recompute per step.
+  (`pareto.IncrementalHV2D`) or the nd clipped-front gain
+  (`pareto.IncrementalHVND`), not a from-scratch recompute per step.
 
 Failure model (the crash-safe search runtime):
 
@@ -88,14 +95,16 @@ from ..disagg import PD_PAIR, evaluate_disagg_batch, evaluate_system_batch
 from ..perfmodel import InfeasibleConfig, evaluate, evaluate_batch
 from ..workload import ModelDims, Phase, Trace
 from . import space as sp
-from .ehvi import ehvi_2d, mc_ehvi
+from .ehvi import ehvi_2d, ehvi_3d, mc_ehvi
 from .journal import SearchJournal
-from .pareto import IncrementalHV2D, hypervolume, pareto_front, pareto_mask
+from .pareto import (IncrementalHV2D, IncrementalHVND, pareto_front,
+                     pareto_mask)
 from .sobol import sobol
 
-# Quasi-MC sample count for the d > 2 EHVI acquisition fallback
+# Quasi-MC sample count for the d > 3 EHVI acquisition fallback
 # (antithetic pairs, drawn from the method RNG so seeded trajectories
-# stay deterministic; 2-objective searches never draw these).
+# stay deterministic; 2- and 3-objective searches never draw these —
+# d = 3 routes through the exact box decomposition `ehvi.ehvi_3d`).
 MC_EHVI_SAMPLES = 64
 
 # Immediate-retry budget of the guarded evaluation layer (transient
@@ -130,20 +139,13 @@ class DSEResult:
 
     def hv_history(self, ref: np.ndarray) -> np.ndarray:
         """HV of the feasible front after each evaluation (incremental
-        staircase for 2 objectives; exact slicing recompute for d > 2,
-        where histories are short enough for the O(n) recomputes).
-        Quarantined/non-finite observations contribute nothing."""
+        for any d: the 2-D staircase, or the nd clipped-front gain —
+        dominated points are mask checks, only front *changes* pay an
+        exact nd hypervolume).  Quarantined/non-finite observations
+        contribute nothing."""
         ref = np.asarray(ref, dtype=float)
-        if len(ref) != 2:
-            out = np.empty(len(self.observations))
-            hv, feas = 0.0, []
-            for i, o in enumerate(self.observations):
-                if _finite_f(o.f):
-                    feas.append(o.f)
-                    hv = hypervolume(np.asarray(feas, dtype=float), ref)
-                out[i] = hv
-            return out
-        inc = IncrementalHV2D(ref)
+        inc = IncrementalHV2D(ref) if len(ref) == 2 \
+            else IncrementalHVND(ref)
         out = np.empty(len(self.observations))
         hv = 0.0
         for i, o in enumerate(self.observations):
@@ -351,8 +353,7 @@ class SystemObjective:
 
     With `ttft_objective=True` the cap is dropped and -TTFT becomes a
     third maximized objective; MOBO's acquisition then routes through
-    the quasi-MC EHVI fallback (`ehvi.mc_ehvi`), since the exact
-    closed form is 2-D only.
+    the exact 3-D box decomposition (`ehvi.ehvi_3d`).
 
     Batched evaluation dedups the K 17-gene halves across systems and
     memoizes their per-(role, phase) results across generations
@@ -523,15 +524,45 @@ def run_random(objective, n_total: int = 100, seed: int = 0,
 # GP + EHVI (ours)
 # ---------------------------------------------------------------------------
 
+def _ehvi_scores(front: np.ndarray, ref: np.ndarray, mu: np.ndarray,
+                 sd: np.ndarray, n_obj: int, rng) -> np.ndarray:
+    """Acquisition scores for a candidate pool: exact box decomposition
+    for 2 and 3 objectives, antithetic quasi-MC beyond (drawn from the
+    method RNG, so seeded exact-path trajectories never change)."""
+    if n_obj == 2:
+        return ehvi_2d(front, ref, mu, sd)
+    if n_obj == 3:
+        return ehvi_3d(front, ref, mu, sd)
+    half = rng.standard_normal((MC_EHVI_SAMPLES // 2, n_obj))
+    return mc_ehvi(front, ref, mu, sd, np.concatenate([half, -half]))
+
+
 def run_mobo(objective, n_total: int = 100, seed: int = 0,
              init: Optional[list] = None, n_init: int = 20,
-             pool_size: int = 256,
+             pool_size: int = 256, batch_size: int = 1,
+             gp_jit: Optional[bool] = None,
              journal: Optional[SearchJournal] = None) -> DSEResult:
     """Multi-Objective Bayesian Optimization with GP surrogates + exact
-    closed-form 2-D EHVI (Eq. 8) over a table-filtered candidate pool."""
+    closed-form EHVI (2-D strips / 3-D box decomposition) over a
+    table-filtered candidate pool.
+
+    `batch_size=B > 1` turns on batched q-EHVI acquisition: each GP fit
+    proposes B points by kriging-believer (constant-liar) — pick the
+    EHVI argmax, hallucinate its outcome as the GP posterior mean,
+    augment the incumbent front with that lie, re-score the remaining
+    pool, repeat — then evaluates all B designs through the jitted
+    `objective.evaluate_batch` in one call and journals them as one
+    batch.  The GP hot path itself moves onto `jax.jit`
+    (`gp_jit=None` means "jit iff B > 1"): padded-bucket fit
+    factorization + batched posterior predict.  B=1 keeps the original
+    sequential loop byte-identical (scalar-oracle evaluation, NumPy
+    GP), so the sha-pinned trajectories are unchanged.
+    """
     from .gp import GP
     space = objective.space
     rng = np.random.default_rng(seed + 13)
+    if gp_jit is None:
+        gp_jit = batch_size > 1
     obs = _begin_journal(journal, objective, seed, "GP+EHVI", init)
     if not obs:
         obs = shared_init(objective, n_init, seed, journal=journal)
@@ -547,7 +578,8 @@ def run_mobo(objective, n_total: int = 100, seed: int = 0,
             continue
         fs = np.array([o.f for o in feas], dtype=float)
         n_obj = fs.shape[1]
-        gps = [GP.fit_design(space, [o.x for o in feas], fs[:, m])
+        gps = [GP.fit_design(space, [o.x for o in feas], fs[:, m],
+                             use_jit=gp_jit)
                for m in range(n_obj)]
         front = pareto_front(fs)
         ref = fs.min(axis=0) - 0.05 * (fs.max(axis=0) - fs.min(axis=0) + 1e-9)
@@ -569,21 +601,31 @@ def run_mobo(objective, n_total: int = 100, seed: int = 0,
         if not pool:
             break
         xq = space.normalize_batch(pool)
-        mus, sds = zip(*(g.predict(xq) for g in gps))
+        mus, sds = zip(*((g.predict_batch(xq) if gp_jit else g.predict(xq))
+                         for g in gps))
         mu = np.stack(mus, axis=1)
         sd = np.stack(sds, axis=1)
-        if n_obj == 2:
-            scores = ehvi_2d(front, ref, mu, sd)
-        else:
-            # d > 2: exact box decomposition is 2-D only — fall back to
-            # the antithetic quasi-MC estimator (drawn from the method
-            # RNG, so 2-objective seeded trajectories never change).
-            half = rng.standard_normal((MC_EHVI_SAMPLES // 2, n_obj))
-            scores = mc_ehvi(front, ref, mu, sd,
-                             np.concatenate([half, -half]))
-        x_best = pool[int(np.argmax(scores))]
-        seen.add(x_best)
-        obs.append(_eval_one(objective, x_best, journal))
+        scores = _ehvi_scores(front, ref, mu, sd, n_obj, rng)
+        if batch_size <= 1:
+            x_best = pool[int(np.argmax(scores))]
+            seen.add(x_best)
+            obs.append(_eval_one(objective, x_best, journal))
+            continue
+        # q-EHVI via kriging believer: greedily build the batch,
+        # treating each pick's posterior mean as its observed outcome
+        b_max = min(batch_size, n_total - len(obs), len(pool))
+        avail = np.ones(len(pool), dtype=bool)
+        liar_front = front
+        picked = []
+        for b in range(b_max):
+            idx = int(np.argmax(np.where(avail, scores, -np.inf)))
+            avail[idx] = False
+            picked.append(pool[idx])
+            seen.add(pool[idx])
+            if b + 1 < b_max:
+                liar_front = np.vstack([liar_front, mu[idx][None, :]])
+                scores = _ehvi_scores(liar_front, ref, mu, sd, n_obj, rng)
+        obs.extend(_eval_many(objective, picked, journal))
     return DSEResult(method="GP+EHVI", observations=obs)
 
 

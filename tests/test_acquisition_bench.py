@@ -1,0 +1,85 @@
+"""Acquisition microbench: per-call bounds on the MOBO hot path.
+
+`bench`-marked acceptance bounds for the two per-iteration costs the
+batched fleet-scale search (benchmarks/bench_fleet.py) multiplies by
+B x n_iterations: exact 3-D EHVI scoring of a full candidate pool and
+the jitted GP batched posterior predict.  The bounds are ~10x the
+measured per-call times on CI hardware — they catch an accidental
+re-quadratization (per-candidate Python loops, per-call recompilation),
+not machine noise.  scripts/ci.sh runs these as its acquisition
+microbench stage (`pytest -m bench`).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.dse import ehvi_2d, ehvi_3d
+from repro.core.dse.gp import GP
+
+POOL = 256                   # the run_mobo default candidate pool
+FRONT = 60                   # a deep-search incumbent front
+
+EHVI3D_MS_PER_CALL = 100.0
+EHVI2D_MS_PER_CALL = 20.0
+GP_PREDICT_MS_PER_CALL = 50.0
+
+
+def _best_of(fn, repeat=5):
+    """Best-of-N wall time in ms (robust to one-off scheduler noise)."""
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+@pytest.mark.bench
+def test_exact_ehvi_3d_per_call_bound():
+    """Scoring a 256-candidate pool against a 60-point 3-D front stays
+    a handful of vectorized array ops (O(m^2) boxes, one [n_cand,
+    n_box] pass per objective) — not a per-candidate Python loop."""
+    rng = np.random.default_rng(41)
+    front = rng.normal(size=(FRONT, 3)) * 2.0
+    ref = front.min(axis=0) - 1.0
+    mu = rng.normal(size=(POOL, 3)) * 2.0
+    sd = rng.uniform(0.3, 1.5, size=(POOL, 3))
+    ehvi_3d(front, ref, mu, sd)                 # warm-up
+    ms = _best_of(lambda: ehvi_3d(front, ref, mu, sd))
+    assert ms < EHVI3D_MS_PER_CALL, f"ehvi_3d {ms:.1f} ms/call"
+
+
+@pytest.mark.bench
+def test_exact_ehvi_2d_per_call_bound():
+    rng = np.random.default_rng(42)
+    front = rng.normal(size=(FRONT, 2)) * 2.0
+    ref = front.min(axis=0) - 1.0
+    mu = rng.normal(size=(POOL, 2)) * 2.0
+    sd = rng.uniform(0.3, 1.5, size=(POOL, 2))
+    ehvi_2d(front, ref, mu, sd)                 # warm-up
+    ms = _best_of(lambda: ehvi_2d(front, ref, mu, sd))
+    assert ms < EHVI2D_MS_PER_CALL, f"ehvi_2d {ms:.1f} ms/call"
+
+
+@pytest.mark.bench
+def test_gp_jit_predict_batch_per_call_bound():
+    """Batched jitted posterior predict on a fitted 64-point GP over a
+    256-query pool: after the first (compiling) call, the per-call cost
+    is one jitted kernel dispatch, and repeated calls at the same
+    bucketed shape must not retrace."""
+    rng = np.random.default_rng(43)
+    x = rng.uniform(size=(64, 16))
+    y = np.sin(3.0 * x[:, 0]) + rng.normal(size=64) * 0.1
+    gp = GP.fit(x, y, use_jit=True)
+    xq = rng.uniform(size=(POOL, 16))
+    gp.predict_batch(xq)                        # compile + warm-up
+    ms = _best_of(lambda: gp.predict_batch(xq))
+    assert ms < GP_PREDICT_MS_PER_CALL, f"predict_batch {ms:.1f} ms/call"
+    # parity spot-check rides along: the jitted batch path matches the
+    # NumPy oracle on the same queries
+    mu0, sd0 = gp.predict(xq)
+    mu1, sd1 = gp.predict_batch(xq)
+    assert np.allclose(mu1, mu0, rtol=0, atol=1e-9)
+    assert np.allclose(sd1, sd0, rtol=0, atol=1e-9)

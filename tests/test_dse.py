@@ -5,10 +5,11 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.dse import (Objective, ehvi_2d, hv_contributions_2d,
-                            hv_history, hypervolume_2d, mc_ehvi,
-                            pareto_front, pareto_mask, run_mobo, run_motpe,
-                            run_nsga2, run_random, shared_init, sobol)
+from repro.core.dse import (IncrementalHVND, Objective, ehvi_2d, ehvi_3d,
+                            hv_contributions_2d, hv_history, hypervolume,
+                            hypervolume_2d, max_dims, mc_ehvi, pareto_front,
+                            pareto_mask, run_mobo, run_motpe, run_nsga2,
+                            run_random, shared_init, sobol)
 from repro.core.dse import space as sp
 from repro.core.dse.gp import GP
 from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
@@ -51,6 +52,25 @@ def test_sobol_properties():
     assert np.allclose(pts.mean(axis=0), 0.5, atol=0.08)
     # first point of the (unskipped) sequence is 0
     assert np.allclose(sobol(1, 4)[0], 0.0)
+
+
+def test_sobol_high_dim_direction_coverage():
+    """The direction-number table covers 100+-gene SystemSpaces: the
+    6-role fleet space (102 genes) draws distinct, strictly in-bounds,
+    non-degenerate init points, and requesting a dimension beyond the
+    table raises instead of silently recycling direction numbers."""
+    dims = sp.SystemSpace(6).n_dims
+    assert dims >= 100
+    assert dims <= max_dims()
+    u = sobol(128, dims, skip=7)
+    assert u.shape == (128, dims)
+    assert np.all((u >= 0) & (u < 1))
+    assert len({tuple(row) for row in u.tolist()}) == 128
+    # every dimension actually varies (a zeroed/duplicated direction
+    # column would collapse a gene to one value)
+    assert np.all(u.std(axis=0) > 0.05)
+    with pytest.raises(ValueError, match="direction-number table"):
+        sobol(4, max_dims() + 1)
 
 
 def test_space_roundtrip():
@@ -174,6 +194,54 @@ def test_sanitize_params_replaces_nonfinite():
     assert np.allclose(fixed["ls"], -0.5)   # optimizer init values
     assert fixed["sf"] == 0.0
     assert fixed["sn"] == -1.0              # finite entries kept
+
+
+# ---------------------------------------------------------------------------
+# Jitted GP hot path: fit/predict parity against the NumPy oracle
+# ---------------------------------------------------------------------------
+
+def test_gp_jit_fit_predict_parity():
+    """`fit(use_jit=True)` + `predict_batch` must match the NumPy
+    fit/predict oracle to <= 1e-9 across bucket-padding sizes (the
+    padded block-diagonal factorization is the same factor as the
+    unpadded one, so this is near machine precision in practice)."""
+    rng = np.random.default_rng(27)
+    for n in (5, 8, 17, 40):
+        x = rng.uniform(size=(n, 4))
+        y = np.sin(3.0 * x[:, 0]) + x[:, 1] ** 2
+        xq = rng.uniform(size=(9, 4))
+        g_np = GP.fit(x, y)
+        g_jit = GP.fit(x, y, use_jit=True)
+        mu0, sd0 = g_np.predict(xq)
+        for g in (g_np, g_jit):          # all four fit x predict combos
+            mu1, sd1 = g.predict(xq)
+            mu2, sd2 = g.predict_batch(xq)
+            for mu, sd in ((mu1, sd1), (mu2, sd2)):
+                assert np.allclose(mu, mu0, rtol=0, atol=1e-9), n
+                assert np.allclose(sd, sd0, rtol=0, atol=1e-9), n
+
+
+def test_gp_jit_parity_degenerate():
+    """The jitted factorization preserves the PR 6 hardening: duplicate
+    rows, constant targets, and 1e-12 clusters still match the NumPy
+    oracle (same jitter-escalation ladder) with finite posteriors."""
+    rng = np.random.default_rng(28)
+    base = rng.uniform(size=(6, 3))
+    cases = [
+        (np.tile(base, (3, 1)), np.tile(rng.normal(size=6), 3)),
+        (rng.uniform(size=(12, 3)), np.full(12, 3.7)),
+        (0.5 + 1e-12 * rng.standard_normal((14, 3)), rng.normal(size=14)),
+    ]
+    xq = rng.uniform(size=(7, 3))
+    for x, y in cases:
+        g_np = GP.fit(x, y)
+        g_jit = GP.fit(x, y, use_jit=True)
+        mu0, sd0 = g_np.predict(xq)
+        mu1, sd1 = g_jit.predict_batch(xq)
+        assert np.all(np.isfinite(mu1)) and np.all(np.isfinite(sd1))
+        assert np.all(sd1 >= 0)
+        assert np.allclose(mu1, mu0, rtol=0, atol=1e-9)
+        assert np.allclose(sd1, sd0, rtol=0, atol=1e-9)
 
 
 @pytest.fixture(scope="module")
@@ -335,6 +403,103 @@ def test_exact_ehvi_deterministic_limit():
 
 
 # ---------------------------------------------------------------------------
+# Exact 3-D EHVI (box decomposition) vs its oracles
+# ---------------------------------------------------------------------------
+
+def test_ehvi_3d_box_partition_identity():
+    """The box decomposition tiles the non-dominated region exactly:
+    clipping every box to a bounding cube and summing volumes must give
+    cube volume minus the front's dominated hypervolume."""
+    from repro.core.dse.ehvi import _boxes_3d
+    rng = np.random.default_rng(24)
+    cap = 6.0
+    for _ in range(20):
+        m = int(rng.integers(1, 10))
+        front = rng.uniform(0.0, 4.0, size=(m, 3))
+        ref = np.zeros(3)
+        lo, hi = _boxes_3d(front, ref)
+        vols = np.prod(np.clip(np.minimum(hi, cap) - lo, 0.0, None), axis=1)
+        assert np.sum(vols) == pytest.approx(
+            cap ** 3 - hypervolume(front, ref), rel=1e-9), front
+
+
+def test_exact_ehvi_3d_deterministic_limit():
+    """sd -> 0 collapses 3-D EHVI to the hypervolume improvement (the
+    m = 0 draws also cover the empty-front single-box path)."""
+    rng = np.random.default_rng(23)
+    for _ in range(20):
+        m = int(rng.integers(0, 8))
+        front = rng.uniform(0.0, 4.0, size=(m, 3))
+        ref = np.zeros(3)
+        base = hypervolume(front, ref) if m else 0.0
+        mu = rng.uniform(-0.5, 4.5, size=(5, 3))
+        sd = np.full_like(mu, 1e-9)
+        want = [max(0.0, hypervolume(np.vstack([front, p[None]]), ref)
+                    - base) for p in mu]
+        got = ehvi_3d(front, ref, mu, sd)
+        assert np.allclose(got, want, atol=1e-6), (front, mu, got, want)
+
+
+def test_exact_ehvi_3d_matches_qmc_oracle():
+    rng = np.random.default_rng(22)
+    for trial in range(4):
+        m = int(rng.integers(0, 7))
+        front = rng.normal(size=(m, 3)) * 2.0
+        ref = (front.min(axis=0) - 1.0) if m else np.array([-2.0] * 3)
+        mu = rng.normal(size=(3, 3)) * 2.0
+        sd = rng.uniform(0.3, 1.5, size=(3, 3))
+        exact = ehvi_3d(front, ref, mu, sd)
+        h = rng.standard_normal((2000, 3))
+        est = mc_ehvi(front, ref, mu, sd, np.vstack([h, -h]))
+        assert np.allclose(exact, est, rtol=0.15, atol=0.03), \
+            (trial, exact, est)
+        assert np.all(exact >= 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Incremental nd hypervolume (the d >= 3 hv_history path)
+# ---------------------------------------------------------------------------
+
+def test_incremental_hvnd_matches_bruteforce():
+    """Every prefix hypervolume from `IncrementalHVND.add` equals the
+    from-scratch nd slicing recompute — including duplicate points,
+    dominated points, integer ties, and points below the reference."""
+    rng = np.random.default_rng(25)
+    for d in (3, 4):
+        for trial in range(10):
+            n = int(rng.integers(1, 18))
+            if trial % 2:
+                ys = rng.integers(0, 4, size=(n, d)).astype(float)
+                ref = np.full(d, -0.5)
+            else:
+                ys = rng.uniform(-1.0, 4.0, size=(n, d))
+                ref = np.zeros(d)        # some draws fall below ref
+            inc = IncrementalHVND(ref)
+            for k in range(n):
+                got = inc.add(ys[k])
+                want = hypervolume(ys[:k + 1], ref)
+                assert got == pytest.approx(want, rel=1e-9, abs=1e-12), \
+                    (d, ys[:k + 1], ref)
+            # the maintained front matches the true one
+            assert inc.hv == pytest.approx(
+                hypervolume(inc.front(), ref), rel=1e-9, abs=1e-12)
+
+
+def test_hv_history_nd_matches_prefix_recompute():
+    rng = np.random.default_rng(26)
+    for d in (3, 4):
+        for _ in range(8):
+            n = int(rng.integers(1, 14))
+            ys = rng.uniform(-1.0, 4.0, size=(n, d))
+            ref = np.zeros(d)
+            got = hv_history(ys, ref)
+            want = np.array([hypervolume(ys[:k + 1], ref)
+                             for k in range(n)])
+            assert np.allclose(got, want, atol=1e-9), (d, ys)
+            assert np.all(np.diff(got) >= -1e-12)
+
+
+# ---------------------------------------------------------------------------
 # Vectorized space tables + batched objective evaluation
 # ---------------------------------------------------------------------------
 
@@ -390,3 +555,42 @@ def test_searchers_seeded_deterministic(objective):
         f1 = [o.f for o in r1.pareto()]
         f2 = [o.f for o in r2.pareto()]
         assert f1 == f2, runner.__name__
+
+
+# ---------------------------------------------------------------------------
+# Batched q-EHVI acquisition (run_mobo batch_size > 1)
+# ---------------------------------------------------------------------------
+
+def test_mobo_batched_respects_budget_and_is_deterministic(objective):
+    """B = 4 proposes distinct designs, trims the final batch to land
+    exactly on n_total, and is seeded-deterministic."""
+    init = shared_init(objective, 8, seed=5)
+    r1 = run_mobo(objective, n_total=21, seed=5, init=list(init),
+                  batch_size=4)
+    assert len(r1.observations) == 21   # 8 init + 4+4+4+1 proposals
+    xs = [tuple(o.x) for o in r1.observations]
+    assert len(set(xs)) == 21           # no duplicate proposals in a batch
+    r2 = run_mobo(objective, n_total=21, seed=5, init=list(init),
+                  batch_size=4)
+    assert [o.x for o in r1.observations] == [o.x for o in r2.observations]
+    fs = r1.feasible_f()
+    if len(fs):
+        hv = r1.hv_history(fs.min(axis=0) - 1.0)
+        assert np.all(np.diff(hv) >= -1e-9)
+
+
+def test_mobo_batched_matches_serial_objective_values(objective):
+    """Batched acquisition changes WHICH designs get picked (the liar
+    front diverges from true observations) but every picked design's
+    objective value must agree with the scalar oracle."""
+    init = shared_init(objective, 8, seed=6)
+    res = run_mobo(objective, n_total=18, seed=6, init=list(init),
+                   batch_size=5)
+    oracle = Objective(objective.dims, objective.trace, objective.phase,
+                       tdp_limit_w=objective.tdp_limit_w)
+    for o in res.observations:
+        want = oracle(tuple(o.x))
+        if want.f is None:
+            assert o.f is None, o.x
+        else:
+            assert o.f == pytest.approx(want.f, rel=1e-9), o.x

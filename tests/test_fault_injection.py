@@ -81,6 +81,31 @@ def test_searchers_converge_under_transient_and_nan_storms(name):
     assert np.array_equal(stormy.feasible_f(), clean.feasible_f())
 
 
+def test_batched_mobo_converges_under_storm():
+    """Batched q-EHVI (B = 4) under a transient+NaN storm within the
+    retry-budget composition bound: whole B-point batches fail and
+    retry through `_eval_many`, yet the stormy run reproduces the
+    failure-free batched trajectory (proposals AND objective values)
+    exactly, with nothing quarantined."""
+    spec = FaultSpec(p_transient=0.3, p_nan=0.3, fault_attempts=1, seed=5)
+    assert 2 * spec.fault_attempts <= EVAL_RETRIES
+
+    def batched(obj):
+        return run_mobo(obj, n_total=14, seed=5, n_init=6, batch_size=4)
+
+    clean = batched(_objective())
+    faulty_obj, inj = _storm(spec)
+    stormy = batched(faulty_obj)
+    assert inj.events, "storm never fired — the test exercised nothing"
+    assert len(stormy.observations) == 14
+    assert [o.x for o in stormy.observations] == \
+        [o.x for o in clean.observations]
+    assert [o.f for o in stormy.observations] == \
+        [o.f for o in clean.observations]
+    assert all(o.fault is None for o in stormy.observations)
+    assert np.array_equal(stormy.feasible_f(), clean.feasible_f())
+
+
 def test_storm_actually_injects_both_fault_kinds():
     spec = FaultSpec(p_transient=0.3, p_nan=0.3, fault_attempts=1, seed=5)
     faulty_obj, inj = _storm(spec)

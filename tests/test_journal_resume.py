@@ -67,6 +67,47 @@ def test_mobo_resume_every_boundary_byte_identical(tmp_path):
     assert _traj_sha(r3) == _PINNED_MOBO_SHA
 
 
+@pytest.mark.slow
+def test_mobo_batched_resume_every_boundary_byte_identical(tmp_path):
+    """Batched q-EHVI (B = 4) interrupted at EVERY journal boundary —
+    i.e. including prefixes that end in the middle of a B-point batch,
+    where only part of one `record_many` block survived — and with a
+    torn mid-record tail inside a batch, resumes byte-identically.
+    `record_many` journals a batch as one write of per-record lines, so
+    a crash can strand any prefix of a batch; on resume the stranded
+    records replay as cache hits and the missing remainder of the batch
+    re-evaluates and re-journals without duplicating the prefix."""
+    def search(journal):
+        return run_mobo(_objective(), n_total=14, seed=2, n_init=6,
+                        batch_size=4, journal=journal)
+
+    base = tmp_path / "batched.jsonl"
+    res = search(SearchJournal(base))
+    assert len(res.observations) == 14
+    ref = base.read_bytes()
+    lines = ref.split(b"\n")[:-1]
+    assert len(lines) == 15             # header + one line per eval
+
+    for i in range(len(lines)):         # header-only .. fully complete
+        part = tmp_path / f"resume_{i}.jsonl"
+        part.write_bytes(b"\n".join(lines[:i + 1]) + b"\n")
+        r2 = search(SearchJournal(part))
+        assert part.read_bytes() == ref, f"boundary {i}"
+        assert [o.x for o in r2.observations] == \
+            [o.x for o in res.observations], f"boundary {i}"
+        assert [o.f for o in r2.observations] == \
+            [o.f for o in res.observations], f"boundary {i}"
+
+    # crash mid-write inside the first proposed batch (records 6..9):
+    # the torn record is dropped and recomputed
+    torn = tmp_path / "torn_batch.jsonl"
+    torn.write_bytes(b"\n".join(lines[:9]) + b"\n" + lines[9][:17])
+    r3 = search(SearchJournal(torn))
+    assert torn.read_bytes() == ref
+    assert [o.x for o in r3.observations] == \
+        [o.x for o in res.observations]
+
+
 def test_other_searchers_resume_midpoint(tmp_path):
     """Random/NSGA-II/MO-TPE resumed from a mid-run journal prefix."""
     for runner in (run_random, run_nsga2, run_motpe):

@@ -617,3 +617,44 @@ def test_bench_check_compare_dllm():
     assert compare_dllm({"methods": {}}, {}, 5.0) is None
     missing = compare_dllm(base, {}, 5.0)
     assert missing[3] < 0 and not missing[-1]
+
+
+@pytest.mark.bench
+def test_bench_check_compare_fleet1000():
+    """The `fleet1000` gate: committed-baseline hypervolume floor,
+    timing limit capped by the hard single-digit-minutes ceiling,
+    budget/batch-size-mismatch sentinel, missing-entry regression."""
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.run import FLEET1000_US_CEILING, compare_fleet1000
+    base = {"fleet1000": {"hv": 1000.0, "us_per_run": 100e6,
+                          "n_total": 1000, "batch_size": 16}}
+    ok = compare_fleet1000(base, {"fleet1000": {
+        "hv": 1000.0, "us_per_run": 120e6,
+        "n_total": 1000, "batch_size": 16}}, 5.0)
+    assert ok[-1]
+    # hypervolume below the committed baseline -> regression
+    drop = compare_fleet1000(base, {"fleet1000": {
+        "hv": 900.0, "us_per_run": 100e6,
+        "n_total": 1000, "batch_size": 16}}, 5.0)
+    assert not drop[-1]
+    # the timing limit is tolerance x baseline, hard-capped by the
+    # single-digit-minutes ceiling
+    slow = compare_fleet1000(base, {"fleet1000": {
+        "hv": 1000.0, "us_per_run": FLEET1000_US_CEILING + 1,
+        "n_total": 1000, "batch_size": 16}}, 10.0)
+    assert slow[3] == FLEET1000_US_CEILING and not slow[-1]
+    # a baseline captured at a different budget or batch size is
+    # flagged (floor = -2), not compared apples-to-oranges
+    for fresh in ({"n_total": 500, "batch_size": 16},
+                  {"n_total": 1000, "batch_size": 8}):
+        mismatch = compare_fleet1000(base, {"fleet1000": {
+            "hv": 1000.0, "us_per_run": 100e6, **fresh}}, 5.0)
+        assert mismatch[1] == -2.0 and not mismatch[-1]
+    # pre-fleet baselines skip the gate; missing fresh entry regresses
+    assert compare_fleet1000({"methods": {}}, {}, 5.0) is None
+    missing = compare_fleet1000(base, {}, 5.0)
+    assert missing[3] < 0 and not missing[-1]

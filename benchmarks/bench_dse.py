@@ -27,7 +27,7 @@ from repro.configs.paper_models import QWEN3_32B
 from repro.core.dse import (METHODS, Objective, shared_init)
 from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
 
-from .common import row, timed
+from .common import atomic_write_json, row, timed
 
 N_TOTAL = 60
 N_INIT = 20
@@ -164,11 +164,11 @@ def run(smoke: bool = False) -> list:
         "winner": best,
         "total_us": sum(us_total.values()),
     }
-    try:
-        with open(json_path, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-    except OSError:
-        pass                        # read-only working dir: CSV rows suffice
+    # bench_dse rewrites the whole file fresh (the searched-system
+    # benches then merge their keys in); atomic_write_json stages to a
+    # temp file + os.replace and warns loudly on failure, so a killed
+    # or read-only run can't leave a truncated baseline behind
+    atomic_write_json(json_path, payload)
     return out
 
 

@@ -11,6 +11,34 @@ import time
 DEFAULT_BENCH_JSON = "BENCH_dse.json"
 
 
+def atomic_write_json(json_path: str, data: dict) -> None:
+    """Write ``data`` to ``json_path`` atomically (temp file in the
+    same directory + ``os.replace``), warning loudly on failure instead
+    of swallowing it.  Every writer of a shared ``BENCH_*.json``
+    artifact must go through here (or :func:`merge_bench_json`) so a
+    killed bench run can never leave a truncated baseline behind — the
+    ``nonatomic-artifact-write`` lint rule enforces this."""
+    tmp_name = None
+    try:
+        fd, tmp_name = tempfile.mkstemp(
+            dir=os.path.dirname(json_path) or ".",
+            prefix=os.path.basename(json_path) + ".", suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp_name, json_path)
+        tmp_name = None
+    except OSError as exc:
+        print(f"WARNING: could not update {json_path} ({exc}); the "
+              f"committed baseline is UNCHANGED — --check will gate "
+              f"against stale numbers", file=sys.stderr)
+    finally:
+        if tmp_name is not None:
+            try:
+                os.unlink(tmp_name)
+            except OSError:
+                pass
+
+
 def merge_bench_json(key: str, payload: dict) -> None:
     """Merge one top-level entry into the (possibly existing) machine-
     readable benchmark JSON (``BENCH_DSE_JSON`` env var, default
@@ -33,25 +61,7 @@ def merge_bench_json(key: str, payload: dict) -> None:
     except (OSError, ValueError):
         pass                        # no/unreadable file: start fresh
     data[key] = payload
-    tmp_name = None
-    try:
-        fd, tmp_name = tempfile.mkstemp(
-            dir=os.path.dirname(json_path) or ".",
-            prefix=os.path.basename(json_path) + ".", suffix=".tmp")
-        with os.fdopen(fd, "w") as f:
-            json.dump(data, f, indent=1, sort_keys=True)
-        os.replace(tmp_name, json_path)
-        tmp_name = None
-    except OSError as exc:
-        print(f"WARNING: could not update {json_path} ({exc}); the "
-              f"committed baseline is UNCHANGED — --check will gate "
-              f"against stale numbers", file=sys.stderr)
-    finally:
-        if tmp_name is not None:
-            try:
-                os.unlink(tmp_name)
-            except OSError:
-                pass
+    atomic_write_json(json_path, data)
 
 
 def timed(fn, *args, repeat: int = 1, **kwargs):

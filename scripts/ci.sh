@@ -11,17 +11,24 @@
 #    opt-out, printed loudly below.  COV_FLOOR can be overridden per
 #    invocation (e.g. COV_FLOOR=0 scripts/ci.sh to skip the floor while
 #    keeping the report).
-# 2. fault/resume gate: the `fault`-marked suite (already part of
+# 2. invariant lint: `python -m repro.analysis` checks the
+#    source-level conventions the headline guarantees rest on
+#    (seeded RNG only, no wall clock, canonical record bytes, jit
+#    purity, atomic artifact writes, fault-tagged broad excepts) and
+#    fails on any finding not in the committed
+#    .repro-lint-baseline.json, printing per-rule counts so a
+#    regression is attributable at a glance (docs/static_analysis.md).
+# 3. fault/resume gate: the `fault`-marked suite (already part of
 #    tier-1) is rerun by itself so the crash-safe-search guarantees —
 #    seeded fault-injection convergence and byte-identical journal
 #    resume — gate every run visibly even if tier-1 marker selection
 #    ever changes.
-# 3. acquisition microbench: the `bench`-marked suite (also part of
+# 4. acquisition microbench: the `bench`-marked suite (also part of
 #    tier-1) is rerun by itself so the per-call acquisition bounds —
 #    exact 3-D EHVI pool scoring and jitted GP batched predict
 #    (tests/test_acquisition_bench.py) — and the compare_* verdict
 #    plumbing gate every run visibly.
-# 4. perf gate: benchmarks/run.py --smoke --check reruns the smoke DSE
+# 5. perf gate: benchmarks/run.py --smoke --check reruns the smoke DSE
 #    bench and fails when any search method exceeds --tolerance x its
 #    committed baseline (benchmarks/BENCH_dse.json), when the jitted
 #    perfmodel's pool-scoring speedup over the scalar oracle drops
@@ -49,6 +56,9 @@ else
          "restore it)"
     python -m pytest -x -q
 fi
+
+echo "== static-analysis invariant lint =="
+python -m repro.analysis src scripts benchmarks
 
 echo "== fault-injection + interrupt/resume smoke =="
 python -m pytest -q -m fault

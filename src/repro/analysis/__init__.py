@@ -1,0 +1,35 @@
+"""`repro.analysis` — AST invariant linter for the reproduction repo.
+
+Machine-checks the source-level conventions every headline guarantee
+rests on: seeded-search determinism (no global-state RNG, no wall
+clock, canonical record bytes), jit purity (no Python side effects or
+forced concretization under `jax.jit`/`vmap`, no process-global x64
+flips), crash safety (atomic writes for shared JSON artifacts) and
+exception hygiene (no silent broad excepts in the guarded core).
+
+Run it as a CLI (the `scripts/ci.sh` lint stage does exactly this)::
+
+    python -m repro.analysis [paths] [--baseline FILE] [--write-baseline]
+
+or programmatically via :func:`lint_paths`.  Per-line suppressions use
+``# repro-lint: disable=rule-id`` comments; grandfathered findings live
+in the committed ``.repro-lint-baseline.json``.  Rule catalogue and
+workflow: ``docs/static_analysis.md``.
+"""
+
+from .engine import (  # noqa: F401
+    DEFAULT_BASELINE,
+    DEFAULT_PATHS,
+    RULES,
+    Baseline,
+    Finding,
+    LintResult,
+    ModuleContext,
+    Rule,
+    format_report,
+    iter_py_files,
+    lint_file,
+    lint_paths,
+    register,
+)
+from .engine import _load_rules as load_rules  # noqa: F401

@@ -1,0 +1,77 @@
+"""CLI for the repro invariant linter.
+
+    python -m repro.analysis [paths...] [options]
+
+Exit codes: 0 — clean (or every finding baselined/suppressed);
+1 — at least one new finding or parse error; 2 — usage/IO error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from .engine import (DEFAULT_BASELINE, DEFAULT_PATHS, RULES, Baseline,
+                     _load_rules, format_report, lint_paths)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST invariant linter: determinism, jit purity, "
+                    "crash safety, exception hygiene.")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files/directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", default=".",
+                    help="repo root paths are resolved against "
+                         "(default: cwd)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE, metavar="FILE",
+                    help="baseline of grandfathered findings "
+                         f"(default: {DEFAULT_BASELINE}; missing file "
+                         "= empty baseline)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file: report everything")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the current findings to the baseline "
+                         "file and exit 0")
+    ap.add_argument("--show-baselined", action="store_true",
+                    help="also print grandfathered findings")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        _load_rules()
+        for rid, rule in sorted(RULES.items()):
+            print(f"{rid}: {rule.summary}")
+            print(f"    protects: {rule.invariant}")
+            if rule.paths:
+                print(f"    scoped to: {', '.join(rule.paths)}")
+            if rule.exempt:
+                print(f"    exempt: {', '.join(rule.exempt)}")
+        return 0
+
+    baseline_path = (args.baseline if os.path.isabs(args.baseline)
+                     else os.path.join(args.root, args.baseline))
+    baseline = Baseline() if (args.no_baseline or args.write_baseline) \
+        else Baseline.load(baseline_path)
+    try:
+        result = lint_paths(args.paths, root=args.root, baseline=baseline)
+    except FileNotFoundError as exc:
+        print(f"repro-lint: {exc}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        Baseline.from_findings(result.findings).write(baseline_path)
+        print(f"repro-lint: wrote {len(result.findings)} finding(s) to "
+              f"{baseline_path}")
+        return 0
+
+    print(format_report(result, show_baselined=args.show_baselined))
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

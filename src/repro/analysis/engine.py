@@ -1,0 +1,401 @@
+"""Reusable AST lint engine for the repo's reproducibility invariants.
+
+Every headline guarantee this repo makes — sha-pinned seeded search
+trajectories, byte-identical journal resume, jit-vs-scalar perfmodel
+parity — rests on *source-level* conventions (no global-state RNG in
+core paths, no wall clock in journaled records, no Python side effects
+under `jax.jit`, atomic writes for shared artifacts).  The regression
+tests catch a broken guarantee after the fact; this engine catches the
+offending *line* before it merges.
+
+Architecture
+------------
+* **Rules** subclass :class:`Rule` and register with :func:`register`.
+  A rule declares an id (kebab-case, used in suppressions and the
+  baseline), the invariant it protects, optional path scoping
+  (``paths`` prefixes / ``exempt`` suffixes, matched against the
+  lint-root-relative posix path), and implements ``check(ctx)``
+  returning :class:`Finding`\\ s.
+* **ModuleContext** parses a file once and shares the AST, the raw
+  lines, the import-alias table (so ``np.random.randint`` resolves to
+  ``numpy.random.randint`` whatever the import spelling), and the
+  per-line suppression map across all rules.
+* **Suppressions** — ``# repro-lint: disable=rule-id[,rule-id...]`` (or
+  ``disable=all``) on the flagged line, or alone on the line directly
+  above it, silences the named rules for that line.  Suppressed
+  findings are still counted and reported in the summary so silent
+  rot stays visible.
+* **Baseline** — grandfathered findings live in a committed JSON file
+  (:data:`DEFAULT_BASELINE`).  Findings are keyed by
+  ``(relpath, rule, stripped source line)`` with a count, so line
+  drift does not resurrect them but editing the offending line does.
+  ``--write-baseline`` regenerates the file from the current findings.
+
+The engine is dependency-free (stdlib ``ast`` only) so it can run as a
+CI stage before any heavyweight import.
+"""
+
+from __future__ import annotations
+
+import ast
+import io
+import json
+import os
+import re
+import tokenize
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+DEFAULT_PATHS: Tuple[str, ...] = ("src", "scripts", "benchmarks")
+DEFAULT_BASELINE = ".repro-lint-baseline.json"
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Za-z0-9_\-]+(?:\s*,\s*[A-Za-z0-9_\-]+)*)")
+
+
+# --------------------------------------------------------------------------
+# findings
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    path: str            # lint-root-relative posix path
+    line: int            # 1-based
+    col: int             # 0-based
+    rule: str            # rule id, e.g. "unseeded-rng"
+    message: str
+    text: str = ""       # stripped source line — the baseline key
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity: stable under pure line movement."""
+        return (self.path, self.rule, self.text)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+# --------------------------------------------------------------------------
+# module context
+# --------------------------------------------------------------------------
+
+class ModuleContext:
+    """Parsed module shared by every rule: AST, lines, import aliases,
+    suppression map."""
+
+    def __init__(self, path: str, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.aliases = _collect_aliases(self.tree)
+        self.suppressions = _collect_suppressions(source)
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted path of a Name/Attribute chain with import aliases
+        substituted at the root (``np.random.randint`` ->
+        ``numpy.random.randint``); None for anything unresolvable
+        (calls, subscripts, literals)."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(self.aliases.get(node.id, node.id))
+        return ".".join(reversed(parts))
+
+    def resolves_from_import(self, node: ast.AST) -> bool:
+        """True when the chain's root name is a tracked import alias —
+        distinguishes the stdlib ``random`` module from a local object
+        that happens to be named ``random``."""
+        while isinstance(node, ast.Attribute):
+            node = node.value
+        return isinstance(node, ast.Name) and node.id in self.aliases
+
+    def finding(self, node: ast.AST, rule: str, message: str) -> Finding:
+        lineno = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return Finding(path=self.rel, line=lineno, col=col, rule=rule,
+                       message=message, text=self.line_text(lineno))
+
+
+def _collect_aliases(tree: ast.Module) -> Dict[str, str]:
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _collect_suppressions(source: str) -> Dict[int, set]:
+    """line -> set of rule ids disabled on that line.  A suppression
+    comment covers its own line; a comment-only line also covers the
+    next line (for statements too long to share a line with it)."""
+    out: Dict[int, set] = {}
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return out
+    lines = source.splitlines()
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        lineno = tok.start[0]
+        out.setdefault(lineno, set()).update(rules)
+        line = lines[lineno - 1] if lineno <= len(lines) else ""
+        if line.strip().startswith("#"):        # comment-only line
+            out.setdefault(lineno + 1, set()).update(rules)
+    return out
+
+
+# --------------------------------------------------------------------------
+# rules
+# --------------------------------------------------------------------------
+
+class Rule:
+    """Base class for lint rules.  Subclass, set the class attributes,
+    implement ``check``, and decorate with :func:`register`."""
+
+    id: str = ""
+    summary: str = ""          # one-line: what the rule flags
+    invariant: str = ""        # the repo guarantee it protects
+    paths: Tuple[str, ...] = ()    # rel-path prefixes; empty = everywhere
+    exempt: Tuple[str, ...] = ()   # rel-path suffixes exempt from the rule
+
+    def applies_to(self, rel: str) -> bool:
+        rel = rel.replace(os.sep, "/")
+        if any(rel.endswith(suf) for suf in self.exempt):
+            return False
+        if self.paths and not any(rel.startswith(p) for p in self.paths):
+            return False
+        return True
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator adding a rule (instance) to the global registry."""
+    inst = cls()
+    if not inst.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if inst.id in RULES:
+        raise ValueError(f"duplicate rule id {inst.id!r}")
+    RULES[inst.id] = inst
+    return cls
+
+
+def _load_rules() -> None:
+    """Import the rule modules (idempotent — registration is by id)."""
+    from . import rules_determinism, rules_io, rules_jit  # noqa: F401
+
+
+# --------------------------------------------------------------------------
+# baseline
+# --------------------------------------------------------------------------
+
+class Baseline:
+    """Grandfathered findings: ``(path, rule, line text) -> count``."""
+
+    def __init__(self, counts: Optional[Dict[Tuple[str, str, str], int]] = None):
+        self.counts: Dict[Tuple[str, str, str], int] = dict(counts or {})
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            return cls()
+        counts: Dict[Tuple[str, str, str], int] = {}
+        for row in doc.get("findings", []):
+            key = (row["path"], row["rule"], row.get("text", ""))
+            counts[key] = counts.get(key, 0) + int(row.get("count", 1))
+        return cls(counts)
+
+    @classmethod
+    def from_findings(cls, findings: Iterable[Finding]) -> "Baseline":
+        counts: Dict[Tuple[str, str, str], int] = {}
+        for f in findings:
+            counts[f.key] = counts.get(f.key, 0) + 1
+        return cls(counts)
+
+    def to_doc(self) -> dict:
+        rows = [{"path": p, "rule": r, "text": t, "count": c}
+                for (p, r, t), c in sorted(self.counts.items())]
+        return {"version": 1, "findings": rows}
+
+    def write(self, path: str) -> None:
+        """Atomic write (temp file + os.replace) — the baseline is a
+        shared artifact and obeys the same rule it enforces."""
+        import tempfile
+        doc = self.to_doc()
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                                   prefix=os.path.basename(path) + ".",
+                                   suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+
+    def split(self, findings: Sequence[Finding]
+              ) -> Tuple[List[Finding], List[Finding]]:
+        """(new, grandfathered) — consumes baseline counts in order."""
+        budget = dict(self.counts)
+        new: List[Finding] = []
+        old: List[Finding] = []
+        for f in findings:
+            if budget.get(f.key, 0) > 0:
+                budget[f.key] -= 1
+                old.append(f)
+            else:
+                new.append(f)
+        return new, old
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+@dataclass
+class LintResult:
+    findings: List[Finding] = field(default_factory=list)     # actionable
+    baselined: List[Finding] = field(default_factory=list)
+    suppressed: List[Finding] = field(default_factory=list)
+    errors: List[Finding] = field(default_factory=list)       # parse failures
+    n_files: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.errors
+
+    def rule_counts(self) -> Dict[str, Dict[str, int]]:
+        counts = {rid: {"new": 0, "baselined": 0, "suppressed": 0}
+                  for rid in sorted(RULES)}
+        for bucket, name in ((self.findings, "new"),
+                             (self.baselined, "baselined"),
+                             (self.suppressed, "suppressed")):
+            for f in bucket:
+                counts.setdefault(
+                    f.rule, {"new": 0, "baselined": 0, "suppressed": 0}
+                )[name] += 1
+        return counts
+
+
+def iter_py_files(paths: Sequence[str], root: str = ".") -> List[str]:
+    """Expand files/directories into a sorted list of .py files
+    (lint-root-relative)."""
+    out = []
+    for p in paths:
+        full = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(full):
+            out.append(os.path.relpath(full, root))
+        elif os.path.isdir(full):
+            for dirpath, dirnames, filenames in os.walk(full):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in ("__pycache__",))
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.append(os.path.relpath(
+                            os.path.join(dirpath, fn), root))
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p}")
+    return sorted(set(out))
+
+
+def lint_file(path: str, root: str = ".") -> Tuple[List[Finding], List[Finding]]:
+    """Lint one file: (findings, suppressed).  Parse failures surface
+    as a single ``parse-error`` finding (a file the engine cannot see
+    is a file the invariants cannot protect)."""
+    rel = os.path.relpath(path if os.path.isabs(path)
+                          else os.path.join(root, path), root)
+    rel = rel.replace(os.sep, "/")
+    full = os.path.join(root, rel)
+    with open(full, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        ctx = ModuleContext(full, rel, source)
+    except SyntaxError as exc:
+        return [Finding(path=rel, line=exc.lineno or 1, col=0,
+                        rule="parse-error",
+                        message=f"cannot parse: {exc.msg}")], []
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    for rule in RULES.values():
+        if not rule.applies_to(rel):
+            continue
+        for f in rule.check(ctx):
+            disabled = ctx.suppressions.get(f.line, set())
+            if "all" in disabled or f.rule in disabled:
+                suppressed.append(f)
+            else:
+                findings.append(f)
+    order = lambda f: (f.path, f.line, f.col, f.rule)  # noqa: E731
+    return sorted(findings, key=order), sorted(suppressed, key=order)
+
+
+def lint_paths(paths: Sequence[str] = DEFAULT_PATHS, root: str = ".",
+               baseline: Optional[Baseline] = None) -> LintResult:
+    """Lint every .py file under ``paths`` (relative to ``root``)."""
+    _load_rules()
+    baseline = baseline or Baseline()
+    result = LintResult()
+    all_findings: List[Finding] = []
+    for rel in iter_py_files(paths, root):
+        findings, suppressed = lint_file(rel, root)
+        result.n_files += 1
+        result.suppressed.extend(suppressed)
+        for f in findings:
+            (result.errors if f.rule == "parse-error"
+             else all_findings).append(f)
+    result.findings, result.baselined = baseline.split(all_findings)
+    return result
+
+
+def format_report(result: LintResult, show_baselined: bool = False) -> str:
+    """Human-readable report: one line per actionable finding, then the
+    per-rule count table (new / baselined / suppressed) so regressions
+    are attributable at a glance."""
+    lines: List[str] = []
+    for f in result.errors + result.findings:
+        lines.append(f.format())
+    if show_baselined:
+        for f in result.baselined:
+            lines.append(f"{f.format()} (baselined)")
+    counts = result.rule_counts()
+    width = max(len(r) for r in counts) if counts else 10
+    lines.append(f"repro-lint: {result.n_files} file(s), "
+                 f"{len(result.findings)} new finding(s), "
+                 f"{len(result.baselined)} baselined, "
+                 f"{len(result.suppressed)} suppressed, "
+                 f"{len(result.errors)} parse error(s)")
+    lines.append(f"  {'rule'.ljust(width)}  new  baselined  suppressed")
+    for rid, c in counts.items():
+        lines.append(f"  {rid.ljust(width)}  "
+                     f"{str(c['new']).rjust(3)}  "
+                     f"{str(c['baselined']).rjust(9)}  "
+                     f"{str(c['suppressed']).rjust(10)}")
+    return "\n".join(lines)

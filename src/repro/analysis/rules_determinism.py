@@ -1,0 +1,168 @@
+"""Determinism rules: seeded RNG, no wall clock, canonical record bytes.
+
+The sha-pinned search trajectories (tests/test_disagg_dse.py and
+friends) and the byte-identical journal resume guarantee
+(docs/search_runtime.md) only hold if every random draw is threaded
+through an explicitly seeded generator and no journaled or benched
+record depends on wall-clock time or hash/set iteration order.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .engine import Finding, ModuleContext, Rule, register
+
+# numpy.random module-level (global-state) draw/seed functions.  The
+# seeded Generator API (np.random.default_rng / Generator /
+# SeedSequence / Philox / PCG64) is the sanctioned alternative and is
+# deliberately NOT in this set.
+_NP_GLOBAL_FNS = frozenset({
+    "seed", "get_state", "set_state", "rand", "randn", "randint",
+    "random", "random_sample", "ranf", "sample", "bytes", "choice",
+    "shuffle", "permutation", "uniform", "normal", "standard_normal",
+    "standard_cauchy", "standard_exponential", "standard_gamma",
+    "standard_t", "beta", "binomial", "chisquare", "dirichlet",
+    "exponential", "f", "gamma", "geometric", "gumbel",
+    "hypergeometric", "laplace", "logistic", "lognormal", "logseries",
+    "multinomial", "multivariate_normal", "negative_binomial",
+    "noncentral_chisquare", "noncentral_f", "pareto", "poisson",
+    "power", "rayleigh", "triangular", "vonmises", "wald", "weibull",
+    "zipf",
+})
+
+# stdlib `random` module-level functions (the hidden global Mersenne
+# Twister).  `random.Random(seed)` instances are fine.
+_PY_RANDOM_FNS = frozenset({
+    "seed", "getstate", "setstate", "getrandbits", "random", "randint",
+    "randrange", "randbytes", "choice", "choices", "shuffle", "sample",
+    "uniform", "gauss", "normalvariate", "lognormvariate",
+    "expovariate", "vonmisesvariate", "gammavariate", "betavariate",
+    "paretovariate", "weibullvariate", "triangular",
+})
+
+_WALL_CLOCK = frozenset({
+    "time.time", "time.time_ns", "time.ctime", "time.localtime",
+    "time.gmtime", "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+})
+
+
+@register
+class UnseededRng(Rule):
+    id = "unseeded-rng"
+    summary = ("call to a global-state RNG function (numpy.random.* "
+               "module level, stdlib random.*)")
+    invariant = ("seeded-search determinism: every draw must come from "
+                 "an explicitly seeded np.random.Generator / "
+                 "random.Random threaded from the caller")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = ctx.resolve(node.func)
+            if dotted is None or not ctx.resolves_from_import(node.func):
+                continue
+            fn = dotted.rsplit(".", 1)[-1]
+            if (dotted == f"numpy.random.{fn}" and fn in _NP_GLOBAL_FNS) or \
+               (dotted == f"random.{fn}" and fn in _PY_RANDOM_FNS):
+                out.append(ctx.finding(
+                    node, self.id,
+                    f"global-state RNG call `{dotted}`: thread a seeded "
+                    f"generator (np.random.default_rng(seed) / "
+                    f"random.Random(seed)) instead"))
+        return out
+
+
+@register
+class WallClock(Rule):
+    id = "wall-clock"
+    summary = "wall-clock read (time.time, datetime.now, ...)"
+    invariant = ("byte-identical journal resume and reproducible bench "
+                 "records: no timestamp may reach a persisted record; "
+                 "use time.perf_counter() for duration measurement")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = ctx.resolve(node.func)
+            if dotted in _WALL_CLOCK and ctx.resolves_from_import(node.func):
+                out.append(ctx.finding(
+                    node, self.id,
+                    f"wall-clock call `{dotted}`: journaled/benched "
+                    f"records must not embed host time — use "
+                    f"time.perf_counter() for durations"))
+        return out
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("set", "frozenset"))
+
+
+@register
+class SetIteration(Rule):
+    id = "set-iteration"
+    summary = "iteration over a set in unspecified (hash) order"
+    invariant = ("record-byte determinism: anything feeding a journal "
+                 "or bench record must iterate in a defined order — "
+                 "wrap the set in sorted(...)")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out = []
+        for node in ast.walk(ctx.tree):
+            iters = []
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters.append(node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters.extend(g.iter for g in node.generators)
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Name)
+                  and node.func.id in ("list", "tuple", "enumerate")):
+                iters.extend(a for a in node.args)
+            for it in iters:
+                if _is_set_expr(it):
+                    out.append(ctx.finding(
+                        it, self.id,
+                        "iterating a set in hash order is "
+                        "nondeterministic across processes — wrap in "
+                        "sorted(...)"))
+        return out
+
+
+@register
+class JsonSortKeys(Rule):
+    id = "json-sort-keys"
+    summary = "json.dump/json.dumps without sort_keys=True"
+    invariant = ("canonical record bytes: the journal and every bench "
+                 "artifact serialize with sorted keys so identical "
+                 "state produces identical bytes")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = ctx.resolve(node.func)
+            if dotted not in ("json.dump", "json.dumps"):
+                continue
+            sort_kw = next((kw for kw in node.keywords
+                            if kw.arg == "sort_keys"), None)
+            ok = sort_kw is not None and not (
+                isinstance(sort_kw.value, ast.Constant)
+                and sort_kw.value.value is False)
+            if not ok:
+                out.append(ctx.finding(
+                    node, self.id,
+                    f"`{dotted}` without sort_keys=True: dict order is "
+                    f"insertion order, not canonical — records differ "
+                    f"across code paths producing the same state"))
+        return out

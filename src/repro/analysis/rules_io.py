@@ -1,0 +1,163 @@
+"""Crash-safety and exception-hygiene rules.
+
+* Shared JSON artifacts (``BENCH_*.json`` baselines, journal files,
+  checkpoint manifests) must never be written in place: a process
+  killed mid-``json.dump`` leaves a truncated file that poisons every
+  later ``--check`` gate or resume.  The sanctioned patterns are
+  ``benchmarks.common.merge_bench_json`` / an explicit temp file +
+  ``os.replace`` (checkpointing renames a staged directory).
+* The guarded evaluation layer in ``repro.core`` is allowed broad
+  excepts *only* where it re-raises or converts the failure into a
+  structured fault/degradation event — a silent ``except Exception:
+  pass`` swallows the very signals the fault-injection suite pins.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from .engine import Finding, ModuleContext, Rule, register
+
+_WRITE_MODES = ("w", "wt", "w+", "wb", "w+b", "x", "xt", "xb")
+
+# a broad handler is sanctioned when it re-raises or routes the failure
+# into the structured fault machinery — matched on called-name
+# substrings (e.g. _emit_degradation, record_fault, quarantine_design)
+_FAULT_SINKS = ("degrad", "fault", "quarantine", "warn")
+
+
+def _open_write_mode(node: ast.AST) -> Optional[str]:
+    """Mode string when ``node`` is a plain ``open(path, "w"...)``
+    call in a write (not append) mode, else None."""
+    if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id == "open"):
+        return None
+    mode = None
+    if len(node.args) >= 2 and isinstance(node.args[1], ast.Constant):
+        mode = node.args[1].value
+    for kw in node.keywords:
+        if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+            mode = kw.value.value
+    return mode if isinstance(mode, str) and mode in _WRITE_MODES else None
+
+
+@register
+class NonatomicArtifactWrite(Rule):
+    id = "nonatomic-artifact-write"
+    summary = ("json.dump through a bare open(..., 'w') with no atomic "
+               "rename in scope")
+    invariant = ("crash safety of shared artifacts: a kill mid-write "
+                 "must never truncate a BENCH_*.json baseline, journal "
+                 "or manifest — stage to a temp file and os.replace, "
+                 "or go through benchmarks.common.merge_bench_json")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out: List[Finding] = []
+        fn_types = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+        def walk_scope(body):
+            """Yield nodes of one scope, not descending into nested
+            function scopes (each function is scanned on its own —
+            atomicity is judged per enclosing function)."""
+            stack = list(body)
+            while stack:
+                node = stack.pop()
+                if isinstance(node, fn_types + (ast.Lambda,)):
+                    continue        # inner scope: scanned on its own
+                yield node
+                stack.extend(ast.iter_child_nodes(node))
+
+        def scan(body):
+            atomic = any(
+                isinstance(n, ast.Call) and ctx.resolve(n.func) in (
+                    "os.replace", "os.rename", "shutil.move")
+                for n in walk_scope(body))
+            handles = set()          # with-alias names bound to open(w)
+            for node in walk_scope(body):
+                if isinstance(node, (ast.With, ast.AsyncWith)):
+                    for item in node.items:
+                        if (_open_write_mode(item.context_expr) is not None
+                                and isinstance(item.optional_vars, ast.Name)):
+                            handles.add(item.optional_vars.id)
+                if not (isinstance(node, ast.Call)
+                        and ctx.resolve(node.func) == "json.dump"):
+                    continue
+                fobj = node.args[1] if len(node.args) >= 2 else None
+                bare = (isinstance(fobj, ast.Name) and fobj.id in handles) \
+                    or _open_write_mode(fobj) is not None
+                if bare and not atomic:
+                    out.append(ctx.finding(
+                        node, self.id,
+                        "json.dump to a plain open(..., 'w') handle "
+                        "with no os.replace in this function: a crash "
+                        "mid-write truncates the artifact — stage to a "
+                        "temp file + os.replace (see "
+                        "benchmarks.common.merge_bench_json)"))
+
+        scan(ctx.tree.body)          # module-level statements (scripts)
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, fn_types):
+                scan(node.body)
+        return out
+
+
+@register
+class BroadExcept(Rule):
+    id = "broad-except"
+    summary = ("bare `except:` anywhere; `except Exception` in "
+               "repro.core that neither re-raises nor emits a "
+               "structured fault/degradation event")
+    invariant = ("fault attribution: the guarded evaluation layer "
+                 "converts failures into tagged events the "
+                 "fault-injection suite can pin; a silent broad except "
+                 "erases them")
+    # the Exception-breadth check is scoped to the analytical core +
+    # search stack, where the structured-fault contract holds
+    core_paths = ("src/repro/core",)
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out = []
+        in_core = any(ctx.rel.startswith(p) for p in self.core_paths)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                out.append(ctx.finding(
+                    node, self.id,
+                    "bare `except:` catches KeyboardInterrupt/"
+                    "SystemExit and hides the failure class — name the "
+                    "exception types"))
+                continue
+            if not in_core:
+                continue
+            names = []
+            types = (node.type.elts if isinstance(node.type, ast.Tuple)
+                     else [node.type])
+            for t in types:
+                dotted = ctx.resolve(t)
+                if dotted:
+                    names.append(dotted.rsplit(".", 1)[-1])
+            if not any(n in ("Exception", "BaseException") for n in names):
+                continue
+            if self._sanctioned(node, ctx):
+                continue
+            out.append(ctx.finding(
+                node, self.id,
+                "over-broad `except Exception` in repro.core that "
+                "neither re-raises nor emits a structured fault/"
+                "degradation event — narrow to the documented "
+                "exception types or tag the failure"))
+        return out
+
+    @staticmethod
+    def _sanctioned(handler: ast.ExceptHandler, ctx: ModuleContext) -> bool:
+        for node in ast.walk(handler):
+            if isinstance(node, ast.Raise):
+                return True
+            if isinstance(node, ast.Call):
+                dotted = ctx.resolve(node.func) or ""
+                leaf = dotted.rsplit(".", 1)[-1].lower()
+                if any(s in leaf for s in _FAULT_SINKS):
+                    return True
+        return False

@@ -1,0 +1,246 @@
+"""Jit-purity rules: no Python side effects under `jax.jit`/`vmap`.
+
+The jitted perfmodel (`core/perfmodel_jit.py`), the GP hot path
+(`core/dse/gp.py`) and the Pallas kernel wrappers rely on traced
+functions being *pure*: a `print` traces once and then lies, `.item()`
+or `float()` on a traced value either breaks the trace
+(ConcretizationTypeError) or silently forces a host sync, and mutating
+a closure container leaks trace-time state into runtime.  The x64
+precision contract additionally requires `jax.experimental.enable_x64`
+*scoped* contexts, never the process-global flag flip — a global flip
+changes every caller's dtypes and breaks the jit-vs-scalar parity
+tests.
+
+Detection is intentionally static and conservative:
+
+* A function is a **jit entry** when it is decorated with
+  `jax.jit`/`jax.vmap`/`jax.pmap` (directly, as a call, or via
+  `functools.partial(jax.jit, ...)`), or passed by name/lambda to one
+  of those transforms anywhere in the module.
+* The checked **closure** is the entry body plus every same-module
+  function reachable from it through direct-name calls (memoized,
+  cycle-safe).  `print` and `.item()` are flagged anywhere in the
+  closure; `float()`/`int()`/`bool()` are flagged only on expressions
+  rooted at the *entry* function's own parameters (minus
+  `static_argnames`, which are concrete by contract) — deeper
+  traced-ness is undecidable statically and would drown the signal in
+  false positives.
+* Mutation is flagged for `.append`/`.extend`/... on names the
+  function neither binds locally nor takes as a parameter (a local
+  accumulator unrolls fine at trace time; a closure one is a leak).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .engine import Finding, ModuleContext, Rule, register
+
+_TRANSFORMS = ("jax.jit", "jax.vmap", "jax.pmap")
+_MUTATORS = frozenset({"append", "extend", "insert", "pop", "remove",
+                       "clear", "add", "discard", "update", "setdefault",
+                       "popitem"})
+
+_FnNode = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                return {e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)}
+            if isinstance(kw.value, ast.Constant) and isinstance(
+                    kw.value.value, str):
+                return {kw.value.value}
+    return set()
+
+
+def _transform_call(ctx: ModuleContext, node: ast.Call
+                    ) -> Optional[Set[str]]:
+    """If ``node`` is a call to a jit-like transform (possibly through
+    functools.partial), return its static argnames, else None."""
+    dotted = ctx.resolve(node.func)
+    if dotted in _TRANSFORMS:
+        return _static_argnames(node)
+    if dotted == "functools.partial" and node.args:
+        inner = ctx.resolve(node.args[0])
+        if inner in _TRANSFORMS:
+            return _static_argnames(node)
+    return None
+
+
+def _params(fn) -> Set[str]:
+    if isinstance(fn, ast.Lambda):
+        a = fn.args
+    else:
+        a = fn.args
+    names = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    return names
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _local_bindings(fn) -> Set[str]:
+    """Names assigned anywhere inside ``fn`` (incl. for/with targets)."""
+    out: Set[str] = set()
+
+    def bind(target):
+        for n in ast.walk(target):
+            if isinstance(n, ast.Name):
+                out.add(n.id)
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                bind(t)
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            bind(node.target)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            bind(node.target)
+        elif isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                if item.optional_vars:
+                    bind(item.optional_vars)
+        elif isinstance(node, ast.comprehension):
+            bind(node.target)
+        elif isinstance(node, _FnNode):
+            out.add(node.name)
+    return out
+
+
+@register
+class JitImpurity(Rule):
+    id = "jit-impurity"
+    summary = ("Python side effect or host sync inside a function "
+               "traced by jax.jit/vmap/pmap")
+    invariant = ("trace purity: jitted code runs the Python body once; "
+                 "prints/mutation/forced concretization diverge from "
+                 "the compiled computation")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        # function name -> def nodes (same-module resolution target)
+        defs: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, _FnNode):
+                defs.setdefault(node.name, []).append(node)
+
+        # (entry node, static argnames) from decorators and call sites
+        entries: List[Tuple[ast.AST, Set[str]]] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, _FnNode):
+                for dec in node.decorator_list:
+                    if ctx.resolve(dec) in _TRANSFORMS:
+                        entries.append((node, set()))
+                    elif isinstance(dec, ast.Call):
+                        static = _transform_call(ctx, dec)
+                        if static is not None:
+                            entries.append((node, static))
+            elif isinstance(node, ast.Call):
+                static = _transform_call(ctx, node)
+                if static is None or not node.args:
+                    continue
+                target = node.args[0]
+                if ctx.resolve(node.func) == "functools.partial":
+                    if len(node.args) < 2:
+                        continue        # bare partial(jax.jit, ...) factory
+                    target = node.args[1]
+                if isinstance(target, ast.Lambda):
+                    entries.append((target, static))
+                elif isinstance(target, ast.Name):
+                    for d in defs.get(target.id, []):
+                        entries.append((d, static))
+
+        out: List[Finding] = []
+        flagged: Set[Tuple[int, int, str]] = set()
+
+        def emit(node, message):
+            key = (node.lineno, node.col_offset, message)
+            if key not in flagged:
+                flagged.add(key)
+                out.append(ctx.finding(node, self.id, message))
+
+        def check_fn(fn, traced_params: Set[str], seen: Set[ast.AST]):
+            if fn in seen:
+                return
+            seen.add(fn)
+            local = _local_bindings(fn) if not isinstance(
+                fn, ast.Lambda) else set()
+            params = _params(fn)
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                func = node.func
+                if isinstance(func, ast.Name) and func.id == "print":
+                    emit(node, "print() under jit traces once and then "
+                               "never again — use jax.debug.print")
+                elif (isinstance(func, ast.Attribute)
+                      and func.attr == "item" and not node.args):
+                    emit(node, ".item() under jit forces host "
+                               "concretization of a traced value")
+                elif (isinstance(func, ast.Name)
+                      and func.id in ("float", "int", "bool")
+                      and node.args):
+                    root = _root_name(node.args[0])
+                    if root is not None and root in traced_params:
+                        emit(node, f"{func.id}() on traced argument "
+                                   f"`{root}` breaks the trace "
+                                   f"(ConcretizationTypeError)")
+                elif (isinstance(func, ast.Attribute)
+                      and func.attr in _MUTATORS):
+                    root = _root_name(func.value)
+                    if (root is not None and root not in local
+                            and root not in params):
+                        emit(node, f"mutating closure object `{root}."
+                                   f"{func.attr}(...)` under jit leaks "
+                                   f"trace-time state")
+                elif isinstance(func, ast.Name) and func.id in defs:
+                    for d in defs[func.id]:
+                        # deeper frames: param traced-ness unknowable,
+                        # so only closure-wide checks apply there
+                        check_fn(d, set(), seen)
+
+        for fn, static in entries:
+            check_fn(fn, _params(fn) - static, set())
+        return out
+
+
+@register
+class GlobalX64Toggle(Rule):
+    id = "global-x64"
+    summary = 'process-global jax.config.update("jax_enable_x64", ...)'
+    invariant = ("jit-vs-scalar parity: float64 sections run under the "
+                 "scoped jax.experimental.enable_x64 helpers in "
+                 "perfmodel_jit.py/gp.py; a global flip changes every "
+                 "caller's dtypes")
+    # the sanctioned scoped helpers live here (they use the
+    # enable_x64() context manager; the files stay exempt so the
+    # sanctioned pattern can evolve without lint churn)
+    exempt = ("repro/core/perfmodel_jit.py", "repro/core/dse/gp.py")
+
+    def check(self, ctx: ModuleContext) -> List[Finding]:
+        out = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if ctx.resolve(node.func) != "jax.config.update":
+                continue
+            if (node.args and isinstance(node.args[0], ast.Constant)
+                    and node.args[0].value == "jax_enable_x64"):
+                out.append(ctx.finding(
+                    node, self.id,
+                    'global jax.config.update("jax_enable_x64") flips '
+                    "dtypes for the whole process — use the scoped "
+                    "`with jax.experimental.enable_x64():` pattern "
+                    "(see perfmodel_jit.py / gp.py)"))
+        return out

@@ -42,7 +42,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     if not ok:
         return {**base, "status": "skip", "reason": why}
     mesh = make_production_mesh(multi_pod=multi_pod)
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         spec = build_lowering(arch, shape, mesh,
                               unroll_layers=unroll_layers,
@@ -54,10 +54,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
                      donate_argnums=spec.donate)
         with mesh:
             lowered = jf.lower(*spec.args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
     except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
         return {**base, "status": "error",
                 "error": f"{type(e).__name__}: {e}",
@@ -157,7 +157,7 @@ def main():
                 print(f"[{arch} x {shape}] SKIP: {row['reason']}")
             if args.out:
                 with open(args.out, "a") as f:
-                    f.write(json.dumps(row) + "\n")
+                    f.write(json.dumps(row, sort_keys=True) + "\n")
     n_err = sum(r["status"] == "error" for r in rows)
     n_ok = sum(r["status"] == "ok" for r in rows)
     n_skip = sum(r["status"] == "skip" for r in rows)

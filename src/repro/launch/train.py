@@ -86,7 +86,7 @@ def main():
     sup = TrainSupervisor(retry=RetryPolicy(), straggler=StragglerDetector(),
                           checkpoint_every=args.ckpt_every,
                           checkpoint_fn=save)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for i in range(start_step, args.steps):
         frames = args.seq if cfg.family == "encdec" else 0
         raw = batch_for_step(dc, i, with_frames=frames, d_model=cfg.d_model)
@@ -104,7 +104,7 @@ def main():
 
         loss, gnorm = sup.run_step(i, one, batch)
         if i % 10 == 0 or i == args.steps - 1:
-            rate = (i - start_step + 1) / (time.time() - t0)
+            rate = (i - start_step + 1) / (time.perf_counter() - t0)
             print(f"step {i:5d}  loss={loss:7.4f}  gnorm={gnorm:7.3f}  "
                   f"{rate:5.2f} it/s  median={sup.straggler.median()*1e3:.0f}ms")
     print("done.")

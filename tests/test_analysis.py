@@ -1,0 +1,407 @@
+"""Tests for `repro.analysis` — the AST invariant linter.
+
+Three layers, mirroring the guarantees the linter itself makes:
+
+* **fixture-based rule tests** — for every shipped rule, at least one
+  positive snippet (the rule fires, and *only* that rule) and one
+  negative snippet (the sanctioned alternative stays clean: seeded
+  Generators, perf_counter, sorted(set), scoped enable_x64, temp-file
+  + os.replace, re-raising/fault-tagged handlers);
+* **suppression + baseline** — `# repro-lint: disable=...` comments
+  (same line, line above, wrong rule, `all`) and the write/load/split
+  baseline round trip, including the line-drift-tolerant keying;
+* **meta-tests** — the repo itself lints clean against the committed
+  baseline, and the CLI (the exact entry point `scripts/ci.sh` runs)
+  exits 1 when a determinism or jit-purity violation is deliberately
+  introduced and 0 once it is baselined.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Baseline, lint_paths, load_rules, RULES)
+
+pytestmark = pytest.mark.lint
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+load_rules()
+
+ALL_RULES = ("unseeded-rng", "wall-clock", "set-iteration",
+             "json-sort-keys", "jit-impurity", "global-x64",
+             "nonatomic-artifact-write", "broad-except")
+
+
+def run_lint(tmp_path: Path, source: str,
+             rel: str = "src/repro/core/mod.py",
+             baseline: Baseline = None):
+    """Write one module under a scratch lint root and lint it."""
+    target = tmp_path / rel
+    target.parent.mkdir(parents=True, exist_ok=True)
+    target.write_text(source)
+    return lint_paths([rel], root=str(tmp_path), baseline=baseline)
+
+
+def fired(result) -> set:
+    return {f.rule for f in result.findings}
+
+
+# --------------------------------------------------------------------------
+# rule registry
+# --------------------------------------------------------------------------
+
+def test_registry_ships_all_rules():
+    assert set(ALL_RULES) <= set(RULES)
+    for rule in RULES.values():
+        assert rule.summary and rule.invariant
+
+
+# --------------------------------------------------------------------------
+# fixture-based rule tests: one positive + one negative per rule
+# --------------------------------------------------------------------------
+
+POSITIVE = [
+    ("unseeded-rng",
+     "import numpy as np\nx = np.random.randint(0, 5)\n"),
+    ("unseeded-rng",
+     "import random\nrandom.seed(1234)\nv = random.choice([1, 2])\n"),
+    ("unseeded-rng",
+     # alias-resolved spelling: from numpy import random
+     "from numpy import random\nx = random.shuffle([1, 2])\n"),
+    ("wall-clock",
+     "import time\nt = time.time()\n"),
+    ("wall-clock",
+     "from datetime import datetime\nstamp = datetime.now()\n"),
+    ("set-iteration",
+     "total = 0\nfor x in set([3, 1, 2]):\n    total += x\n"),
+    ("set-iteration",
+     "ys = [y for y in {1, 2, 3}]\n"),
+    ("set-iteration",
+     "names = list({'b', 'a'})\n"),
+    ("json-sort-keys",
+     "import json\ns = json.dumps({'b': 1, 'a': 2})\n"),
+    ("json-sort-keys",
+     "import json\n\ndef w(f, d):\n    json.dump(d, f, indent=1)\n"),
+    ("jit-impurity",
+     "import jax\n\n@jax.jit\ndef f(x):\n    print(x)\n    return x\n"),
+    ("jit-impurity",
+     "import jax\n\ndef g(x):\n    return x.item()\n\ng2 = jax.jit(g)\n"),
+    ("jit-impurity",
+     "import jax\n\n@jax.jit\ndef f(x):\n    return float(x) * 2.0\n"),
+    ("jit-impurity",
+     # mutation of a closure accumulator leaks trace-time state
+     "import jax\nacc = []\n\n@jax.jit\ndef f(x):\n    acc.append(x)\n"
+     "    return x\n"),
+    ("jit-impurity",
+     # reachable through a vmapped lambda -> same-module helper
+     "import jax\n\ndef helper(x):\n    print(x)\n    return x\n\n"
+     "def run(xs):\n    return jax.vmap(lambda x: helper(x))(xs)\n"),
+    ("global-x64",
+     "import jax\njax.config.update('jax_enable_x64', True)\n"),
+    ("nonatomic-artifact-write",
+     "import json\n\ndef w(path, data):\n    with open(path, 'w') as f:\n"
+     "        json.dump(data, f, sort_keys=True)\n"),
+    ("nonatomic-artifact-write",
+     # direct open() argument, at module level (script-style)
+     "import json\njson.dump({}, open('BENCH_x.json', 'w'), "
+     "sort_keys=True)\n"),
+    ("broad-except",
+     "def f():\n    try:\n        return 1\n    except:\n"
+     "        return None\n"),
+    ("broad-except",
+     "def f():\n    try:\n        return 1\n    except Exception:\n"
+     "        return None\n"),
+]
+
+NEGATIVE = [
+    ("unseeded-rng",
+     "import numpy as np\nrng = np.random.default_rng(\n"
+     "    np.random.SeedSequence([1, 2]))\nx = rng.integers(0, 5)\n"),
+    ("unseeded-rng",
+     "import random\nr = random.Random(0)\nv = r.choice([1, 2])\n"),
+    ("unseeded-rng",
+     # a local object that happens to be called `random` is not the
+     # stdlib module
+     "def f(random):\n    return random.choice([1])\n"),
+    ("wall-clock",
+     "import time\nt0 = time.perf_counter()\ndt = time.perf_counter() "
+     "- t0\n"),
+    ("set-iteration",
+     "for x in sorted(set([3, 1, 2])):\n    pass\n"),
+    ("json-sort-keys",
+     "import json\ns = json.dumps({'b': 1}, sort_keys=True)\n"),
+    ("jit-impurity",
+     "import jax\nimport jax.numpy as jnp\n\n@jax.jit\ndef f(x):\n"
+     "    return jnp.sum(x) * 2\n"),
+    ("jit-impurity",
+     # static_argnames args are concrete by contract
+     "import functools\nimport jax\n\n"
+     "@functools.partial(jax.jit, static_argnames=('n',))\n"
+     "def f(x, n):\n    return x * float(n)\n"),
+    ("jit-impurity",
+     # print in a plain (untraced) function is fine
+     "def report(x):\n    print(x)\n    return x\n"),
+    ("jit-impurity",
+     # local accumulator unrolls at trace time — not a leak
+     "import jax\n\n@jax.jit\ndef f(x):\n    parts = []\n"
+     "    for i in range(4):\n        parts.append(x * i)\n"
+     "    return parts\n"),
+    ("global-x64",
+     "import jax\njax.config.update('jax_platform_name', 'cpu')\n"),
+    ("nonatomic-artifact-write",
+     "import json\nimport os\nimport tempfile\n\n"
+     "def w(path, data):\n    fd, tmp = tempfile.mkstemp()\n"
+     "    with os.fdopen(fd, 'w') as f:\n        json.dump(data, f)\n"
+     "    os.replace(tmp, path)\n"),
+    ("nonatomic-artifact-write",
+     # append-only JSONL (journal-style) is the sanctioned log pattern
+     "import json\n\ndef log(path, rec):\n    with open(path, 'a') as f:\n"
+     "        f.write(json.dumps(rec, sort_keys=True) + '\\n')\n"),
+    ("broad-except",
+     # re-raising broad handler is the documented degradation shape
+     "def f():\n    try:\n        return 1\n    except Exception:\n"
+     "        raise\n"),
+    ("broad-except",
+     # ... as is converting the failure into a structured event
+     "def _emit_degradation(**kw):\n    pass\n\ndef f():\n    try:\n"
+     "        return 1\n    except Exception as exc:\n"
+     "        _emit_degradation(kind='x', reason=repr(exc))\n"
+     "        return None\n"),
+]
+
+
+@pytest.mark.parametrize("rule,source", POSITIVE,
+                         ids=[f"{r}-{i}" for i, (r, _) in enumerate(POSITIVE)])
+def test_positive_fixture_fires(tmp_path, rule, source):
+    result = run_lint(tmp_path, source)
+    assert fired(result) == {rule}, (
+        f"expected exactly {{{rule}}}, got {fired(result)}:\n"
+        + "\n".join(f.format() for f in result.findings))
+
+
+@pytest.mark.parametrize("rule,source", NEGATIVE,
+                         ids=[f"{r}-{i}" for i, (r, _) in enumerate(NEGATIVE)])
+def test_negative_fixture_clean(tmp_path, rule, source):
+    result = run_lint(tmp_path, source)
+    assert rule not in fired(result), "\n".join(
+        f.format() for f in result.findings)
+
+
+def test_broad_except_scoped_to_core(tmp_path):
+    """`except Exception` is only policed inside repro.core; the bare
+    `except:` check applies everywhere."""
+    src = ("def f():\n    try:\n        return 1\n"
+           "    except Exception:\n        return None\n")
+    assert "broad-except" in fired(
+        run_lint(tmp_path, src, rel="src/repro/core/dse/x.py"))
+    assert "broad-except" not in fired(
+        run_lint(tmp_path, src, rel="src/repro/launch/x.py"))
+    bare = "try:\n    pass\nexcept:\n    pass\n"
+    assert "broad-except" in fired(
+        run_lint(tmp_path, bare, rel="src/repro/launch/x.py"))
+
+
+def test_global_x64_exempts_sanctioned_helpers(tmp_path):
+    src = "import jax\njax.config.update('jax_enable_x64', True)\n"
+    assert "global-x64" in fired(
+        run_lint(tmp_path, src, rel="src/repro/core/npu.py"))
+    assert "global-x64" not in fired(
+        run_lint(tmp_path, src, rel="src/repro/core/dse/gp.py"))
+    assert "global-x64" not in fired(
+        run_lint(tmp_path, src, rel="src/repro/core/perfmodel_jit.py"))
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    result = run_lint(tmp_path, "def broken(:\n")
+    assert result.errors and result.errors[0].rule == "parse-error"
+    assert not result.ok
+
+
+# --------------------------------------------------------------------------
+# suppressions
+# --------------------------------------------------------------------------
+
+def test_suppression_same_line(tmp_path):
+    src = ("import time\n"
+           "t = time.time()  # repro-lint: disable=wall-clock\n")
+    result = run_lint(tmp_path, src)
+    assert not result.findings
+    assert [f.rule for f in result.suppressed] == ["wall-clock"]
+
+
+def test_suppression_line_above(tmp_path):
+    src = ("import time\n"
+           "# repro-lint: disable=wall-clock\n"
+           "t = time.time()\n")
+    result = run_lint(tmp_path, src)
+    assert not result.findings
+    assert [f.rule for f in result.suppressed] == ["wall-clock"]
+
+
+def test_suppression_wrong_rule_does_not_silence(tmp_path):
+    src = ("import time\n"
+           "t = time.time()  # repro-lint: disable=unseeded-rng\n")
+    result = run_lint(tmp_path, src)
+    assert fired(result) == {"wall-clock"}
+
+
+def test_suppression_all(tmp_path):
+    src = ("import time\nimport json\n"
+           "# repro-lint: disable=all\n"
+           "s = json.dumps({'t': time.time()})\n")
+    result = run_lint(tmp_path, src)
+    assert not result.findings
+    assert {f.rule for f in result.suppressed} == {"wall-clock",
+                                                   "json-sort-keys"}
+
+
+def test_suppression_multiple_rules_one_comment(tmp_path):
+    src = ("import time\nimport json\n"
+           "s = json.dumps({'t': time.time()})"
+           "  # repro-lint: disable=wall-clock, json-sort-keys\n")
+    result = run_lint(tmp_path, src)
+    assert not result.findings
+    assert len(result.suppressed) == 2
+
+
+# --------------------------------------------------------------------------
+# baseline round trip
+# --------------------------------------------------------------------------
+
+VIOLATION = "import time\n\n\ndef stamp():\n    return time.time()\n"
+
+
+def test_baseline_round_trip(tmp_path):
+    first = run_lint(tmp_path, VIOLATION)
+    assert fired(first) == {"wall-clock"}
+
+    bl_path = tmp_path / ".repro-lint-baseline.json"
+    Baseline.from_findings(first.findings).write(str(bl_path))
+    doc = json.loads(bl_path.read_text())
+    assert doc["version"] == 1 and len(doc["findings"]) == 1
+
+    again = run_lint(tmp_path, VIOLATION,
+                     baseline=Baseline.load(str(bl_path)))
+    assert not again.findings and len(again.baselined) == 1
+    assert again.ok
+
+
+def test_baseline_survives_line_drift_not_edits(tmp_path):
+    first = run_lint(tmp_path, VIOLATION)
+    baseline = Baseline.from_findings(first.findings)
+
+    drifted = "import time\n# a new comment shifting lines\n" + \
+        VIOLATION.split("\n", 1)[1]
+    moved = run_lint(tmp_path, drifted, baseline=baseline)
+    assert not moved.findings, "pure line movement must stay baselined"
+
+    edited = VIOLATION.replace("return time.time()",
+                               "return 1.0 + time.time()")
+    changed = run_lint(tmp_path, edited, baseline=baseline)
+    assert fired(changed) == {"wall-clock"}, \
+        "editing the offending line must resurface the finding"
+
+
+def test_baseline_counts_cap_duplicates(tmp_path):
+    two = ("import time\n\n\ndef stamp():\n    return time.time()\n\n\n"
+           "def stamp2():\n    return time.time()\n")
+    # both findings share the key (same stripped text): baseline one
+    # occurrence only -> the second stays actionable
+    one = run_lint(tmp_path, VIOLATION)
+    baseline = Baseline.from_findings(one.findings)
+    result = run_lint(tmp_path, two, baseline=baseline)
+    assert len(result.baselined) == 1
+    assert len(result.findings) == 1
+
+
+def test_missing_baseline_file_is_empty():
+    assert Baseline.load("/nonexistent/baseline.json").counts == {}
+
+
+# --------------------------------------------------------------------------
+# meta: the repo itself + the CLI entry point ci.sh runs
+# --------------------------------------------------------------------------
+
+def test_repo_lints_clean_against_committed_baseline():
+    baseline = Baseline.load(str(REPO_ROOT / ".repro-lint-baseline.json"))
+    result = lint_paths(["src", "scripts", "benchmarks"],
+                        root=str(REPO_ROOT), baseline=baseline)
+    assert result.ok, "\n".join(
+        f.format() for f in result.errors + result.findings)
+
+
+def _cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+def test_cli_fails_on_deliberate_violations(tmp_path):
+    """The property the ci.sh lint stage relies on: introducing a
+    seeded-determinism or jit-purity violation makes the lint exit
+    nonzero, at the offending line."""
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "bad.py").write_text(
+        "import numpy as np\nimport jax\n\n\n"
+        "def init_pop(n):\n"
+        "    return np.random.randint(0, 7, size=n)\n\n\n"
+        "@jax.jit\n"
+        "def score(x):\n"
+        "    print(x)\n"
+        "    return x\n")
+    proc = _cli(["src"], cwd=tmp_path)
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "unseeded-rng" in proc.stdout
+    assert "jit-impurity" in proc.stdout
+    assert "bad.py:6" in proc.stdout
+
+    # per-rule counts are printed so regressions are attributable
+    assert "unseeded-rng" in proc.stdout.splitlines()[-8:][0] or \
+        any("unseeded-rng" in ln for ln in proc.stdout.splitlines()[-10:])
+
+
+def test_cli_write_baseline_then_clean(tmp_path):
+    pkg = tmp_path / "src"
+    pkg.mkdir()
+    (pkg / "legacy.py").write_text("import time\nT0 = time.time()\n")
+    assert _cli(["src"], cwd=tmp_path).returncode == 1
+
+    wrote = _cli(["src", "--write-baseline"], cwd=tmp_path)
+    assert wrote.returncode == 0, wrote.stdout + wrote.stderr
+    assert (tmp_path / ".repro-lint-baseline.json").exists()
+
+    clean = _cli(["src"], cwd=tmp_path)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    assert "1 baselined" in clean.stdout
+
+    # --no-baseline reports everything again
+    assert _cli(["src", "--no-baseline"], cwd=tmp_path).returncode == 1
+
+
+def test_cli_list_rules():
+    proc = _cli(["--list-rules"], cwd=REPO_ROOT)
+    assert proc.returncode == 0
+    for rule in ALL_RULES:
+        assert rule in proc.stdout
+
+
+def test_cli_missing_path_is_usage_error(tmp_path):
+    proc = _cli(["no_such_dir"], cwd=tmp_path)
+    assert proc.returncode == 2
+
+
+def test_docs_catalogue_every_rule():
+    doc = (REPO_ROOT / "docs" / "static_analysis.md").read_text()
+    for rule in ALL_RULES:
+        assert f"`{rule}`" in doc, f"docs/static_analysis.md missing {rule}"

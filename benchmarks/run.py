@@ -42,12 +42,18 @@ The batched-acquisition headline (bench_fleet) is gated too: the
 seeded 1000-evaluation B=16 q-EHVI search over the 102-gene 6-role
 fleet space must keep its ``fleet1000`` hypervolume at the committed
 baseline and finish under both the timing tolerance and the hard
-`FLEET1000_US_CEILING` (the single-digit-minutes claim).
+`FLEET1000_US_CEILING` (the single-digit-minutes claim).  The
+``serving`` row (bench_serving) gates the SLO-constrained fleet
+search: the seeded searched fleet's tokens/joule must beat BOTH the
+committed baseline and a fresh naive replication of the hand-designed
+system at the same power budget/rates/SLOs, and the jitted
+fleet-pool scoring must stay under `SERVING_POOL_S_CEILING` seconds
+and `SERVING_OVERHEAD_MAX` x the bare system path.
 Refresh the baselines after an intentional perf change with::
 
   BENCH_DSE_JSON=benchmarks/BENCH_dse.json \\
       PYTHONPATH=src python -m benchmarks.run \\
-      --only "fig6,fig9,table7,fleet1000" --smoke
+      --only "fig6,fig9,table7,fleet1000,serving" --smoke
 """
 
 import argparse
@@ -70,6 +76,7 @@ MODULES = [
     ("table8_moe", "benchmarks.bench_moe"),
     ("fig9_extreme_heterogeneity", "benchmarks.bench_extreme"),
     ("fleet1000_batched_search", "benchmarks.bench_fleet"),
+    ("serving_fleet_search", "benchmarks.bench_serving"),
     ("roofline", "benchmarks.bench_roofline"),
 ]
 
@@ -98,6 +105,15 @@ DLLM_TOKJ_FLOOR = 0.0034
 # the 102-gene SystemSpace(6) must finish in single-digit minutes on
 # CI hardware, regardless of the committed baseline timing.
 FLEET1000_US_CEILING = 540e6
+
+# Hard ceilings for the serving-fleet bench (bench_serving): scoring
+# its 16384-design serving pool through the jitted FleetEvaluator
+# (fresh caches, post-compile) must finish inside the wall-clock
+# ceiling AND cost at most SERVING_OVERHEAD_MAX x the bare
+# evaluate_system_batch path on the same device halves — the queueing
+# layer may not re-quadratize pool scoring.
+SERVING_POOL_S_CEILING = 2.0
+SERVING_OVERHEAD_MAX = 1.2
 
 
 def compare_timings(base: dict, fresh: dict, tolerance: float) -> list:
@@ -207,6 +223,51 @@ def compare_fleet1000(base: dict, fresh: dict, tolerance: float):
     return (g["hv"], floor, g["us_per_run"], limit, ok)
 
 
+def compare_serving(base: dict, fresh: dict, tolerance: float):
+    """`serving` verdict (the SLO-constrained fleet search +
+    fleet-pool microbench), or None when the baseline predates it.
+
+    Returns (fresh_tokj, tokj_floor, pool_s, overhead, fresh_us,
+    limit_us, ok).  The seeded searched fleet's aggregate tokens/joule
+    must reach both the committed baseline (seeded search: a drop
+    means a queueing-model or search regression) and the FRESH naive-
+    replication tokens/joule — searched must beat cloning the best
+    hand system at the same power budget, rates and SLO caps, every
+    run.  The pool microbench must stay under `SERVING_POOL_S_CEILING`
+    seconds and `SERVING_OVERHEAD_MAX` x the bare system path, and the
+    search runtime within ``tolerance x`` baseline.  Mirrors
+    `_compare_searched_system`'s missing-entry (limit = -1) and
+    budget-mismatch (floor = -2) conventions."""
+    b = base.get("serving")
+    if not b or not isinstance(b.get("tokens_per_joule"), (int, float)):
+        return None
+    g = fresh.get("serving")
+    if not g or not isinstance(g.get("tokens_per_joule"), (int, float)):
+        return (float("nan"), float("nan"), float("nan"), float("nan"),
+                float("nan"), -1.0, False)
+    if (b.get("n_total") != g.get("n_total")
+            or b.get("batch_size") != g.get("batch_size")):
+        return (g["tokens_per_joule"], -2.0, float("nan"), float("nan"),
+                g["us_per_run"], -2.0, False)
+    floor = b["tokens_per_joule"] * (1 - 1e-3)
+    naive = g.get("naive_tokens_per_joule")
+    if isinstance(naive, (int, float)):
+        floor = max(floor, naive)
+    pool_s = g.get("pool_s")
+    overhead = g.get("overhead_ratio")
+    limit = b["us_per_run"] * tolerance
+    ok = (g["tokens_per_joule"] >= floor
+          and isinstance(pool_s, (int, float))
+          and isinstance(overhead, (int, float))
+          and pool_s <= SERVING_POOL_S_CEILING
+          and overhead <= SERVING_OVERHEAD_MAX
+          and g["us_per_run"] <= limit)
+    return (g["tokens_per_joule"], floor,
+            float("nan") if pool_s is None else pool_s,
+            float("nan") if overhead is None else overhead,
+            g["us_per_run"], limit, ok)
+
+
 def check_perf(baseline_path: str, tolerance: float) -> int:
     """Fresh --smoke DSE timings vs the committed baseline.
 
@@ -234,7 +295,7 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
     os.environ["BENCH_DSE_JSON"] = fresh_path
     try:
         from benchmarks import (bench_dllm, bench_dse, bench_extreme,
-                                bench_fleet)
+                                bench_fleet, bench_serving)
         for line in bench_dse.run(smoke=True):
             print(line)
         if base.get("extreme_system"):   # gate the system search too
@@ -245,6 +306,9 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
                 print(line)
         if base.get("fleet1000"):        # ... and the batched headline
             for line in bench_fleet.run(smoke=True):
+                print(line)
+        if base.get("serving"):          # ... and the serving fleet
+            for line in bench_serving.run(smoke=True):
                 print(line)
         with open(fresh_path) as f:
             fresh = json.load(f)
@@ -292,7 +356,7 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
     # rewrites BENCH_dse.json from scratch, so refreshing one searched-
     # system key alone would clobber the others and silently disable
     # their gates on the next --check
-    refresh_only = "fig6,fig9,table7,fleet1000"
+    refresh_only = "fig6,fig9,table7,fleet1000,serving"
     for key, verdict in (("extreme_system", ext), ("dllm_system", dll)):
         if verdict is None:
             continue
@@ -342,6 +406,39 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
                     f"fleet1000: {got_us/1e6:.2f}s/run > ceiling "
                     f"{limit_us/1e6:.2f}s/run (single-digit-minutes "
                     f"headline / {tolerance:g}x baseline)")
+    srv = compare_serving(base, fresh, tolerance)
+    if srv is not None:
+        tokj, floor_tokj, pool_s, overhead, got_us, limit_us, ok = srv
+        if floor_tokj == -2.0:
+            failures.append(
+                "serving: baseline search budget/batch size differs "
+                "from the fresh --smoke run; refresh the baseline with "
+                "BENCH_DSE_JSON=benchmarks/BENCH_dse.json "
+                f"python -m benchmarks.run --only {refresh_only} --smoke")
+        elif limit_us < 0:
+            failures.append("serving: missing from fresh run")
+        else:
+            print(f"check_serving,{got_us:.1f},"
+                  f"tokJ={tokj:.4f} floor={floor_tokj:.4f} "
+                  f"pool_s={pool_s:.2f} overhead={overhead:.2f} "
+                  f"limit_us={limit_us:.1f} {'ok' if ok else 'FAIL'}")
+            if tokj < floor_tokj:
+                failures.append(
+                    f"serving: searched tokens/joule {tokj:.4f} below "
+                    f"floor {floor_tokj:.4f} (max of naive replication "
+                    f"and the committed baseline)")
+            if not (pool_s <= SERVING_POOL_S_CEILING):
+                failures.append(
+                    f"serving: 16k-pool scoring {pool_s:.2f}s over the "
+                    f"{SERVING_POOL_S_CEILING:g}s ceiling")
+            if not (overhead <= SERVING_OVERHEAD_MAX):
+                failures.append(
+                    f"serving: queueing-layer overhead {overhead:.2f}x "
+                    f"over the {SERVING_OVERHEAD_MAX:g}x bare-path cap")
+            if got_us > limit_us:
+                failures.append(
+                    f"serving: {got_us/1e6:.2f}s/run > {tolerance:g}x "
+                    f"baseline {limit_us/tolerance/1e6:.2f}s/run")
     if failures:
         print("PERF REGRESSION:\n  " + "\n  ".join(failures), file=sys.stderr)
         return 1
@@ -351,6 +448,7 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
           + (", extreme_system above floor" if ext is not None else "")
           + (", dllm_system above floor" if dll is not None else "")
           + (", fleet1000 above floor" if flt is not None else "")
+          + (", serving above floor" if srv is not None else "")
           + ")")
     return 0
 

@@ -1,0 +1,97 @@
+"""SLO-constrained fleet-serving DSE: co-search devices, replica
+counts and traffic routing for a datacenter serving a real traffic
+mix (docs/serving.md).
+
+Three request classes share one `EXTREME_4ROLE` fleet: an interactive
+chat stream with a tight p99 TTFT SLO plus two long-context agentic
+streams (OSWorld, BFCL web-search) with loose ones.  The searched
+genes are the 4 x 17 device genes, one replica-count gene per role and
+one routing-weight gene per (class, decode role) — 78 genes total —
+and the objectives are aggregate tokens/joule and fleet power, under
+the datacenter power budget with per-class p99 SLOs as feasibility.
+
+The naive alternative printed first is what you get WITHOUT the
+serving genes: clone the best hand-designed single system uniformly
+until every queue drains (`serving.naive_replication`).  The seeded
+warm-started GP+EHVI sweep then searches heterogeneous replication
+and routing directly.
+
+    PYTHONPATH=src python examples/explore_serving.py [--evals 96]
+"""
+
+import argparse
+
+from repro.configs.paper_models import LLAMA33_70B
+from repro.core import d1_npu, p1_npu
+from repro.core.disagg import EXTREME_4ROLE
+from repro.core.dse import ServingObjective, run_mobo, serving_warm_start
+from repro.core.serving import RequestClass, TrafficMix, naive_replication
+from repro.core.workload import (BFCL_WEB_SEARCH, CHATBOT,
+                                 OSWORLD_LIBREOFFICE)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--evals", type=int, default=96)
+    ap.add_argument("--budget", type=float, default=12000.0,
+                    help="datacenter power budget (provisioned peak W)")
+    ap.add_argument("--chat-rps", type=float, default=4.0,
+                    help="chatbot arrival rate (requests/s)")
+    args = ap.parse_args()
+
+    mix = TrafficMix("agentic-3class", (
+        RequestClass(CHATBOT, rate_rps=args.chat_rps, ttft_p99_slo_s=6.0),
+        RequestClass(OSWORLD_LIBREOFFICE, rate_rps=0.02,
+                     ttft_p99_slo_s=90.0),
+        RequestClass(BFCL_WEB_SEARCH, rate_rps=0.01, ttft_p99_slo_s=120.0),
+    ))
+    print(f"== serving {mix.name} on {EXTREME_4ROLE.name}, "
+          f"{args.budget:.0f} W budget ==")
+    for c in mix.classes:
+        print(f"  {c.trace.name:22s} {c.rate_rps:6.2f} req/s "
+              f"({c.trace.prompt_tokens}/{c.trace.gen_tokens} tokens, "
+              f"p99 TTFT <= {c.ttft_p99_slo_s:.0f}s)")
+
+    naive = naive_replication([p1_npu(), p1_npu(), d1_npu(), d1_npu()],
+                              EXTREME_4ROLE, LLAMA33_70B, mix, args.budget)
+    if naive is None:
+        print("naive replication of the hand system is infeasible at "
+              "this budget — raise --budget or lower --chat-rps")
+    else:
+        print(f"\nnaive replication (hand P1/P1/D1/D1 x uniform): "
+              f"tokJ={naive.tokens_per_joule:.4f} reps={naive.replicas} "
+              f"P={naive.fleet_power_w:.0f}W "
+              f"ttft99={'/'.join(f'{t:.1f}' for t in naive.ttft_p99_s)}s")
+
+    obj = ServingObjective(LLAMA33_70B, mix, topology=EXTREME_4ROLE,
+                           power_budget_w=args.budget)
+    print(f"\nseeded GP+EHVI sweep: {obj.space.n_dims} genes, "
+          f"{args.evals} evals, B=16, warm-started")
+    init = serving_warm_start(obj, 24, seed=0)
+    res = run_mobo(obj, n_total=args.evals, seed=0, init=list(init),
+                   batch_size=16)
+    feas = [o for o in res.observations if o.f is not None]
+    best = max(feas, key=lambda o: o.f[0], default=None)
+    if best is None:
+        print("no SLO-feasible fleet found — loosen the SLOs or budget")
+        return
+    r = best.result
+    design = obj.design(best.x)
+    ratio = ("" if naive is None else
+             f" ({r.tokens_per_joule / naive.tokens_per_joule:.2f}x naive)")
+    print(f"\nbest searched fleet: tokJ={r.tokens_per_joule:.4f}{ratio} "
+          f"P={r.fleet_power_w:.0f}W "
+          f"ttft99={'/'.join(f'{t:.1f}' for t in r.ttft_p99_s)}s")
+    for i, (role, cfg) in enumerate(zip(EXTREME_4ROLE.roles, design.npus)):
+        print(f"  {role.name:13s} x{r.replicas[i]:<2d} "
+              f"rho={r.rho[i]:.2f}  {cfg.describe()}")
+    dec = [EXTREME_4ROLE.roles[j].name
+           for j in EXTREME_4ROLE.decode_indices()]
+    print("decode routing (class -> " + ", ".join(dec) + "):")
+    for c, row_phi in zip(mix.classes, r.phi):
+        print(f"  {c.trace.name:22s} "
+              + "  ".join(f"{p:.2f}" for p in row_phi))
+
+
+if __name__ == "__main__":
+    main()

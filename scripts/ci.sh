@@ -36,9 +36,13 @@
 #    when the jitted path diverges from the oracle on the bench sample,
 #    when a seeded searched-system sweep (bench_extreme's
 #    extreme_system, bench_dllm's dllm_system) falls below its
-#    committed tokens/joule baseline / hard floor, or when the
+#    committed tokens/joule baseline / hard floor, when the
 #    fleet1000 batched headline search (bench_fleet) loses hypervolume
-#    or blows past the single-digit-minutes wall-clock ceiling.
+#    or blows past the single-digit-minutes wall-clock ceiling, or
+#    when the serving-fleet search (bench_serving) stops beating naive
+#    replication on tokens/joule at the same p99 SLO caps / power
+#    budget, or its jitted fleet-pool scoring exceeds the wall-clock /
+#    bare-path-overhead ceilings.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -3,8 +3,10 @@
 space   Table 2 encoding <-> NPUConfig (+ vectorized validity/TDP tables)
         and the DesignSpace protocol: SingleDeviceSpace (17 genes),
         SystemSpace (K concatenated halves + GeneTie cross-half
-        constraints) and PairedSpace (its K=2 prefill/decode
-        specialization with the KV-quant tie)
+        constraints), PairedSpace (its K=2 prefill/decode
+        specialization with the KV-quant tie) and ServingSpace
+        (SystemSpace + per-role replica genes + per-class decode
+        routing genes for the fleet-serving search)
 sobol   quasi-random initialization (N_init = 20)
 gp      GP surrogates (JAX, MLE-fit RBF-ARD, bucketed jit cache)
 pareto  dominance / front / exact 2-D hypervolume (Eq. 7), sweep-based,
@@ -36,8 +38,10 @@ from .pareto import (IncrementalHV2D, IncrementalHVND, dominates,
                      hypervolume_2d, pareto_front, pareto_mask,
                      reference_point)
 from .runner import (METHODS, DisaggObjective, DSEResult, Objective,
-                     Observation, SystemObjective, run_mobo, run_motpe,
-                     run_nsga2, run_random, shared_init, system_warm_start)
+                     Observation, ServingObjective, SystemObjective,
+                     run_mobo, run_motpe, run_nsga2, run_random,
+                     serving_warm_start, shared_init, system_warm_start)
 from .sobol import max_dims, sobol
-from .space import (DesignSpace, GeneTie, PairedSpace, SingleDeviceSpace,
-                    SystemSpace, kv_quant_tie)
+from .space import (DesignSpace, GeneTie, PairedSpace, ServingDesign,
+                    ServingSpace, SingleDeviceSpace, SystemSpace,
+                    kv_quant_tie)

@@ -89,6 +89,13 @@ def objective_identity(objective, seed: Optional[int] = None) -> dict:
     ttft = getattr(obj, "ttft_cap_s", None)
     if ttft is not None:
         ident["ttft_cap_s"] = float(ttft)
+    # serving searches additionally pin the traffic mix (class traces,
+    # arrival rates, per-class SLO caps): a journal must never resume
+    # against different traffic, which would silently re-interpret
+    # every cached (design -> objectives) record
+    mix = getattr(obj, "mix", None)
+    if mix is not None:
+        ident["mix"] = mix.identity()
     if seed is not None:
         ident["seed"] = int(seed)
     return ident

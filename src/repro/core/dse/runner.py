@@ -17,6 +17,12 @@ The objective wrappers share one informal protocol (`.space`,
 * `DisaggObjective` — the K=2 prefill/decode specialization on
   `PairedSpace` (the paper's Fig. 8 co-design, Section 5.3);
   byte-identical to the pre-SystemObjective pair implementation.
+* `ServingObjective` — datacenter fleet search on `ServingSpace`
+  (devices + per-role replica counts + per-class routing) against a
+  `serving.TrafficMix`: f(x) = (fleet tokens/joule, -fleet power)
+  under a provisioned-peak power budget and per-class p99 TTFT/TPOT
+  SLOs from the jitted queueing model (docs/serving.md);
+  `serving_warm_start` is its champion-composition seeder.
 
 All methods maximize f (2 objectives by default; d = 3 routes MOBO's
 acquisition to the exact 3-D box decomposition, d > 3 to the quasi-MC
@@ -456,6 +462,105 @@ class DisaggObjective(SystemObjective):
     @property
     def _dec_results(self) -> dict:    # decode-half name -> PhaseResult|None
         return self._role_caches[1]
+
+
+class ServingObjective:
+    """Fleet-serving search on `space.ServingSpace` (devices + replica
+    counts + routing co-searched against a `serving.TrafficMix`).
+
+    f(x) = (fleet tokens/joule, -utilization-aware fleet power),
+    subject to
+
+      * a datacenter power budget (`tdp_limit_w`, default four 700 W
+        sockets per role): *provisioned peak* power — every replica of
+        a role draws from the budget whether busy or not
+        (`ServingSpace.tdp_w_batch`), enforced pre-evaluation;
+      * queueing stability (rho < 1 on every role) and the mix's
+        per-class p99 TTFT/TPOT SLOs under the serving queueing model
+        (`serving.FleetEvaluator`; see docs/serving.md).
+
+    The hot path never decodes candidates into objects: valid gene
+    rows go straight through the fleet evaluator's cached per-role
+    metric rows and one jitted queueing fold, so scoring cost tracks
+    *distinct device halves*, not candidates — replica/routing sweeps
+    are pure cache hits.  The journal identity pins the mix
+    (`TrafficMix.identity` via `journal.objective_identity`), so a
+    serving journal can never resume against different traffic.
+    """
+
+    def __init__(self, dims: ModelDims, mix, topology=PD_PAIR,
+                 power_budget_w: Optional[float] = None,
+                 space: Optional[sp.ServingSpace] = None):
+        from ..serving import FleetEvaluator
+        self.topology = topology
+        self.dims = dims
+        self.mix = mix
+        self.space = (space if space is not None
+                      else sp.ServingSpace.for_mix(topology, mix))
+        self.tdp_limit_w = (power_budget_w if power_budget_w is not None
+                            else 2800.0 * topology.k)
+        self.n_obj = 2
+        self.cache: dict = {}
+        self.n_evals = 0
+        self.fleet = FleetEvaluator(topology, dims, mix)
+
+    def _result(self, key: tuple, out: dict, i: int):
+        from ..serving import ServingResult
+        arr = np.asarray([key], dtype=np.int64)
+        return ServingResult(
+            feasible=bool(out["feasible"][i]),
+            slo_ok=bool(out["slo_ok"][i]),
+            tokens_per_joule=float(out["tokens_per_joule"][i]),
+            fleet_power_w=float(out["fleet_power_w"][i]),
+            busy_power_w=float(out["busy_power_w"][i]),
+            token_rate_tps=float(self.mix.token_rate_tps),
+            ttft_p99_s=tuple(float(v) for v in out["ttft_p99_s"][i]),
+            tpot_p99_s=tuple(float(v) for v in out["tpot_p99_s"][i]),
+            ttft0_s=tuple(float(v) for v in out["ttft0_s"][i]),
+            tpot0_s=tuple(float(v) for v in out["tpot0_s"][i]),
+            rho=tuple(float(v) for v in out["rho"][i]),
+            wq_s=tuple(float(v) for v in out["wq_s"][i]),
+            replicas=tuple(int(v)
+                           for v in self.space.replica_counts(arr)[0]),
+            phi=tuple(tuple(float(v) for v in row)
+                      for row in self.space.routing(arr)[0]),
+            topology=self.topology, mix=self.mix)
+
+    def design(self, x) -> sp.ServingDesign:
+        """Decode one candidate for reporting (off the hot path)."""
+        return self.space.decode(x)
+
+    def __call__(self, x) -> Observation:
+        key = tuple(int(v) for v in x)
+        if key in self.cache:
+            return self.cache[key]
+        return self.evaluate_batch([key])[0]
+
+    def evaluate_batch(self, xs) -> list:
+        keys = [tuple(int(v) for v in x) for x in xs]
+        todo = _dedup_pending(self.cache, keys)
+        if todo:
+            arr = np.asarray(todo, dtype=np.int64)
+            valid = self.space.valid_mask(arr)
+            tdp = self.space.tdp_w_batch(arr)
+            run_keys = []
+            for k, ok, p in zip(todo, valid, tdp):
+                self.n_evals += 1
+                self.cache[k] = Observation(x=list(k), f=None, npu=None)
+                if ok and p <= self.tdp_limit_w:
+                    run_keys.append(k)
+            if run_keys:
+                out = self.fleet.evaluate_genes(
+                    np.asarray(run_keys, dtype=np.int64))
+                for i, k in enumerate(run_keys):
+                    if not out["feasible"][i]:
+                        continue
+                    obs = self.cache[k]
+                    obs.result = self._result(k, out, i)
+                    if out["slo_ok"][i]:
+                        obs.f = (float(out["tokens_per_joule"][i]),
+                                 -float(out["fleet_power_w"][i]))
+        return [self.cache[k] for k in keys]
 
 
 def shared_init(objective, n_init: int, seed: int,
@@ -901,6 +1006,79 @@ def system_warm_start(objective: SystemObjective, n_init: int, seed: int,
         for order in per_role_order:
             genes.extend(int(v) for v in xs[order[i]])
         x = tuple(space.repair(genes))
+        if x not in seen:
+            seen.add(x)
+            starts.append(x)
+    while len(starts) < n_init:
+        x = tuple(space.random_design(rng))
+        if x in seen:
+            continue
+        seen.add(x)
+        starts.append(x)
+    return _eval_many(objective, starts, journal)
+
+
+def serving_warm_start(objective: ServingObjective, n_init: int, seed: int,
+                       pool: int = 256,
+                       journal: Optional[SearchJournal] = None) -> list:
+    """Seed a `ServingSpace` search from per-role single-device
+    champions at maximal uniform replication.
+
+    Device halves follow the `system_warm_start` recipe — a valid
+    single-device pool, TDP-prefiltered to one *unreplicated* role's
+    share of the budget, scored per (role, class) through the batched
+    evaluator — but ranked by the mix's token-rate-weighted
+    tokens/joule (a half infeasible on any class is out).  Each start
+    composes the i-th best half per role with topology-default routing
+    genes and the LARGEST uniform replica level whose provisioned peak
+    power fits the budget: tokens/joule is replica-invariant while
+    queueing feasibility only improves with replicas, so maximal
+    replication is the right warm-start prior for SLO-capped mixes.
+    """
+    if journal is not None:
+        journal.begin(objective, seed, method="warm-start")
+    topo = objective.topology
+    space = objective.space
+    mix = objective.mix
+    rng = np.random.default_rng(seed + 97)
+    xs = np.empty((0, sp.N_DIMS), dtype=np.int64)
+    for _ in range(8):
+        if len(xs) >= pool:
+            break
+        draw = sp.random_designs(rng, pool)
+        draw = draw[sp.valid_mask(draw)]
+        draw = draw[sp.tdp_w_batch(draw)
+                    <= objective.tdp_limit_w / topo.k]
+        xs = np.concatenate([xs, draw])
+    xs = xs[:pool]
+    configs = [sp.decode(x) for x in xs]
+    weights = [rc.rate_rps * rc.trace.gen_tokens for rc in mix.classes]
+    per_role_order = []
+    for role in topo.roles:
+        score = np.zeros(len(xs))
+        for wc, rc in zip(weights, mix.classes):
+            results = evaluate_batch(
+                configs, role.dims_for(objective.dims), rc.trace,
+                role.phase, context_override=role.context_for(rc.trace))
+            tokj = np.array([-np.inf if r is None else r.tokens_per_joule
+                             for r in results])
+            score = score + wc * tokj
+        per_role_order.append(np.argsort(-score, kind="stable"))
+    n_route = space.n_classes * space.n_decode
+    seen = set()
+    starts = []
+    for i in range(min(n_init, len(xs))):
+        genes = []
+        for order in per_role_order:
+            genes.extend(int(v) for v in xs[order[i]])
+        genes = space.repair(genes + [0] * space.k + [0] * n_route)
+        for rep_idx in reversed(range(len(sp.REPLICA_CHOICES))):
+            for r in range(space.k):
+                genes[space.dev_genes + r] = rep_idx
+            if space.tdp_w_batch(np.asarray([genes], dtype=np.int64))[0] \
+                    <= objective.tdp_limit_w:
+                break
+        x = tuple(genes)
         if x not in seen:
             seen.add(x)
             starts.append(x)

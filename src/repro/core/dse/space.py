@@ -468,6 +468,27 @@ class SingleDeviceSpace(DesignSpace):
 KV_GENE = 12
 
 
+def check_sobol_capacity(space: DesignSpace) -> None:
+    """Fail construction loudly when a space outgrows the Sobol
+    direction-number table.
+
+    Without this, the first symptom is a deep `ValueError` out of
+    `sobol.sobol` inside `shared_init` — long after the space was
+    built, with no hint of the fix.  Serving genes (replicas + routing)
+    push large-topology spaces toward the table edge, so the check runs
+    at construction time and names the remedy."""
+    from .sobol import max_dims
+    if space.n_dims > max_dims():
+        raise ValueError(
+            f"space {space.name!r} has {space.n_dims} genes but the Sobol "
+            f"direction-number table covers only {max_dims()} dimensions, "
+            f"so Sobol initialization (dse.runner.shared_init) cannot map "
+            f"it.  Fix: regenerate a larger table with "
+            f"scripts/gen_sobol_directions.py and update the _JOE_KUO "
+            f"rows in src/repro/core/dse/sobol.py, or search a smaller "
+            f"space (fewer roles/request classes).")
+
+
 @dataclasses.dataclass(frozen=True)
 class GeneTie:
     """Declarative cross-half equality constraint of a `SystemSpace`.
@@ -551,6 +572,7 @@ class SystemSpace(DesignSpace):
             for h in tie.resolve(k):
                 if not (0 <= h < k):
                     raise ValueError(f"tie half {h} out of range for K={k}")
+        check_sobol_capacity(self)
 
     @classmethod
     def for_topology(cls, topology) -> "SystemSpace":
@@ -673,3 +695,147 @@ class PairedSpace(SystemSpace):
         """34-gene pair -> (prefill 17-gene half, decode 17-gene half)."""
         x = list(x)
         return x[:N_DIMS], x[N_DIMS:]
+
+
+# ---------------------------------------------------------------------------
+# Serving extension: replica counts + traffic routing as appended genes.
+# ---------------------------------------------------------------------------
+
+# Per-role replica-count vocabulary (datacenter provisioning ladder).
+REPLICA_CHOICES = (1, 2, 3, 4, 6, 8, 12, 16)
+
+# Routing weight vocabulary: a class's decode routing fractions are its
+# normalized weights, so every decode role keeps a strictly positive
+# share and the simplex is searched through ordinary categorical genes.
+ROUTE_WEIGHT_CHOICES = (1, 2, 3, 4, 5, 6, 7, 8)
+
+
+def routing_fractions(route_genes: np.ndarray) -> np.ndarray:
+    """Routing genes [..., D] -> decode routing fractions (simplex rows).
+
+    Genes index `ROUTE_WEIGHT_CHOICES`; fractions are the weights
+    normalized per row.  Equal genes reproduce the uniform splits of
+    every shipped topology exactly (1/1, 1/2, 1/4 are binary
+    fractions), so topology-default routing is representable without
+    rounding error — the serving parity tests depend on that."""
+    w = np.asarray(ROUTE_WEIGHT_CHOICES, dtype=np.float64)[
+        np.asarray(route_genes, dtype=np.int64)]
+    return w / w.sum(axis=-1, keepdims=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingDesign:
+    """Decoded `ServingSpace` point: K devices, per-role replica counts,
+    and per-class decode routing fractions."""
+
+    npus: tuple                 # one NPUConfig per topology role
+    replicas: tuple             # int per role
+    phi: tuple                  # [n_classes][n_decode_roles] fractions
+
+
+class ServingSpace(SystemSpace):
+    """`SystemSpace` plus fleet-serving genes: per-role replica counts
+    and per-class decode routing fractions (the ROADMAP's "replication
+    counts per role and traffic routing fractions as genes").
+
+    Gene layout (all categorical, so the generic `DesignSpace`
+    Sobol/GP machinery applies unchanged)::
+
+        [K x 17 device genes][K replica genes][C x D routing genes]
+
+    with K topology roles, C request classes and D decode roles.
+    Replica genes index `REPLICA_CHOICES`; routing genes index
+    `ROUTE_WEIGHT_CHOICES` and decode per class to normalized simplex
+    fractions (`routing_fractions`).  Device-gene semantics, `GeneTie`
+    constraints, and the rejection samplers are inherited verbatim —
+    serving genes are purely additive, so existing `SystemSpace`
+    searches and their sha-pinned trajectories are untouched."""
+
+    def __init__(self, topology, n_classes: int, ties: Optional[tuple] = None,
+                 name: Optional[str] = None):
+        if n_classes < 1:
+            raise ValueError("ServingSpace needs at least one request class")
+        self.topology = topology
+        self.n_classes = int(n_classes)
+        self.n_decode = len(topology.decode_indices())
+        if ties is None:
+            ties = (kv_quant_tie(),)
+        super().__init__(topology.k, ties=ties,
+                         name=(name if name is not None
+                               else f"serving-{topology.name}-"
+                                    f"{n_classes}cls"))
+        self.dev_genes = self.k * N_DIMS
+        self.cardinalities = (
+            list(CARDINALITIES) * self.k
+            + [len(REPLICA_CHOICES)] * self.k
+            + [len(ROUTE_WEIGHT_CHOICES)] * (self.n_classes * self.n_decode))
+        check_sobol_capacity(self)
+
+    @classmethod
+    def for_topology(cls, topology) -> "SystemSpace":
+        raise TypeError(
+            "ServingSpace needs a class count: use "
+            "ServingSpace(topology, n_classes) or ServingSpace.for_mix()")
+
+    @classmethod
+    def for_mix(cls, topology, mix) -> "ServingSpace":
+        """One space per (topology, `serving.TrafficMix`) pair."""
+        return cls(topology, len(mix.classes))
+
+    # -- serving-gene views -------------------------------------------------
+
+    def replica_counts(self, xs: np.ndarray) -> np.ndarray:
+        """[n, K] replica counts (decoded, not gene indices)."""
+        xs = np.asarray(xs, dtype=np.int64)
+        return np.asarray(REPLICA_CHOICES, dtype=np.int64)[
+            xs[..., self.dev_genes:self.dev_genes + self.k]]
+
+    def routing(self, xs: np.ndarray) -> np.ndarray:
+        """[n, C, D] decode routing fractions."""
+        xs = np.asarray(xs, dtype=np.int64)
+        genes = xs[..., self.dev_genes + self.k:]
+        shape = genes.shape[:-1] + (self.n_classes, self.n_decode)
+        return routing_fractions(genes.reshape(shape))
+
+    # -- DesignSpace protocol ----------------------------------------------
+
+    def decode(self, x) -> ServingDesign:
+        x = [int(v) for v in x]
+        if len(x) != self.n_dims:
+            raise InvalidDesign(f"need {self.n_dims} genes, got {len(x)}")
+        for v, c in zip(x[self.dev_genes:],
+                        self.cardinalities[self.dev_genes:]):
+            if not (0 <= v < c):
+                raise InvalidDesign(f"serving gene out of range: {x}")
+        npus = super().decode(x[:self.dev_genes])
+        arr = np.asarray([x], dtype=np.int64)
+        return ServingDesign(
+            npus=npus,
+            replicas=tuple(int(v) for v in self.replica_counts(arr)[0]),
+            phi=tuple(tuple(float(v) for v in row)
+                      for row in self.routing(arr)[0]))
+
+    def valid_mask(self, xs: np.ndarray) -> np.ndarray:
+        xs = np.asarray(xs, dtype=np.int64)
+        m = super().valid_mask(xs)      # device halves + ties
+        extra = xs[:, self.dev_genes:]
+        cards = np.asarray(self.cardinalities[self.dev_genes:],
+                           dtype=np.int64)
+        return m & np.all((extra >= 0) & (extra < cards), axis=1)
+
+    def tdp_w_batch(self, xs: np.ndarray) -> np.ndarray:
+        """Provisioned fleet peak power: every replica of a role draws
+        from the datacenter budget, busy or not."""
+        xs = np.asarray(xs, dtype=np.int64)
+        rep = self.replica_counts(xs).astype(np.float64)
+        out = np.zeros(len(xs))
+        for i in range(self.k):
+            out += rep[:, i] * tdp_w_batch(
+                xs[:, i * N_DIMS:(i + 1) * N_DIMS])
+        return out
+
+    def decode_batch(self, xs: np.ndarray) -> tuple:
+        """(per-half NPUTable tuple, [n, K] replicas, [n, C, D] routing)."""
+        xs = np.asarray(xs, dtype=np.int64)
+        return (super().decode_batch(xs[:, :self.dev_genes]),
+                self.replica_counts(xs), self.routing(xs))

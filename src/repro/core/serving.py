@@ -1,0 +1,652 @@
+"""Datacenter serving layer: traffic mixes, queueing delay, p99 SLOs.
+
+The single-system evaluators (`disagg.evaluate_system*`) report
+steady-state tokens/joule of ONE system instance on ONE static request
+class.  Production serving is provisioned differently: a *traffic mix*
+of heterogeneous request classes arrives at given rates, each role is
+*replicated* `n_r` times, decode traffic is *routed* across the decode
+roles, and the fleet must meet tail-latency SLOs — p99 TTFT/TPOT per
+class — inside a datacenter power budget.  This module turns the
+per-role throughput numbers of `perfmodel_jit` into those fleet-level
+metrics, twice:
+
+* `evaluate_serving` — the scalar reference oracle (pure Python over
+  `perfmodel.evaluate`, mirrors `disagg._combine_system` per class);
+* `FleetEvaluator` — the batched/jitted hot path: per-role metric rows
+  are computed once per *distinct device half* (replica and routing
+  genes never change a role's hierarchy, so they are cache keys, not
+  rebuild triggers) and a single `jax.jit` program folds a whole
+  [n-designs] fleet pool into p99/efficiency arrays.
+
+Queueing model (documented closed forms, so the whole thing stays
+jit/vmap-friendly — see docs/serving.md for the derivations):
+
+* Each role is an M/M/n_r station.  A class-c request occupies a
+  replica of role r for ``occ[r][c]`` seconds (prefill: its share of
+  one batched pass, ``latency_s / batch``; decode: its routed share of
+  the generation, ``phi[c][j] * gen_c / throughput_tps``).  Utilization
+  ``rho_r = sum_c lam_c * occ[r][c] / n_r`` must stay < 1.
+* Mean queueing wait is Sakasegawa's (1977) M/M/n approximation
+  ``Wq_r = tau_r * rho_r**(sqrt(2*(n_r+1)) - 1) / (n_r * (1 - rho_r))``
+  with ``tau_r`` the arrival-weighted mean occupancy; at n_r = 1 this
+  is exactly the M/M/1 ``rho * tau / (1 - rho)``.  The p99 wait uses
+  the exponential-tail factor ``ln(100) * Wq``.
+* ``TTFT_p99[c] = TTFT_0[c] + ln(100) * sum(prefill Wq)`` where
+  TTFT_0 is the zero-load prefill chain + hand-offs (identical
+  arithmetic to `_combine_system`); ``TPOT_p99[c]`` inflates each
+  decode step by the processor-sharing factor ``1 / (1 - rho_r)`` —
+  it diverges monotonically as any routed decode role saturates.
+* Tokens/joule is per unit of *work* and therefore load-independent:
+  at any stable utilization the fleet spends the same marginal energy
+  per generated token, so the zero-load limit equals the single-system
+  steady-state number exactly (`tests/test_serving.py` pins this).
+  Fleet power is utilization-aware: every provisioned replica pays its
+  static power, dynamic power scales with carried load.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from .disagg import (NVLINK_GBPS, NVLINK_PJ_PER_BIT, SystemTopology,
+                     _act_handoff_bytes, _link_seconds, kv_transfer_seconds)
+from .perfmodel import InfeasibleConfig, evaluate
+from .perfmodel_jit import NPUTable, evaluate_batch_arrays
+from .workload import Family, ModelDims, Trace
+
+# p99 of an exponential residual-wait tail: P(W > t) = exp(-t / Wq)
+LN100 = math.log(100.0)
+
+
+# ---------------------------------------------------------------------------
+# Traffic mixes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RequestClass:
+    """One request class of a traffic mix: a `Trace` arriving at
+    `rate_rps` requests/second under optional per-class p99 SLO caps
+    (heterogeneous prompts need heterogeneous TTFT budgets — a 1.4k
+    chatbot turn and a 114k agent context cannot share one cap)."""
+
+    trace: Trace
+    rate_rps: float
+    ttft_p99_slo_s: Optional[float] = None
+    tpot_p99_slo_s: Optional[float] = None
+
+    def __post_init__(self):
+        if not self.rate_rps > 0.0:
+            raise ValueError(f"request class {self.trace.name!r} needs a "
+                             f"positive arrival rate, got {self.rate_rps}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMix:
+    """A named tuple of `RequestClass`es — the serving workload unit.
+
+    The mix is part of a serving search's identity: resuming a journal
+    against a different mix must be refused, so `identity()` feeds
+    `dse.journal.objective_identity`.
+    """
+
+    name: str
+    classes: tuple
+
+    def __post_init__(self):
+        if not self.classes:
+            raise ValueError("a TrafficMix needs at least one request class")
+
+    @property
+    def total_rate_rps(self) -> float:
+        return sum(c.rate_rps for c in self.classes)
+
+    @property
+    def token_rate_tps(self) -> float:
+        """Generated tokens/second the mix demands at full service."""
+        return sum(c.rate_rps * c.trace.gen_tokens for c in self.classes)
+
+    def identity(self) -> dict:
+        return {
+            "name": self.name,
+            "classes": [{
+                "trace": c.trace.name,
+                "prompt_tokens": int(c.trace.prompt_tokens),
+                "gen_tokens": int(c.trace.gen_tokens),
+                "rate_rps": float(c.rate_rps),
+                "ttft_p99_slo_s": None if c.ttft_p99_slo_s is None
+                else float(c.ttft_p99_slo_s),
+                "tpot_p99_slo_s": None if c.tpot_p99_slo_s is None
+                else float(c.tpot_p99_slo_s),
+            } for c in self.classes],
+        }
+
+
+def topology_routing(topology: SystemTopology, n_classes: int) -> tuple:
+    """The topology's static decode split as per-class routing rows —
+    what a serving evaluation of an unrouted system uses."""
+    row = tuple(topology.roles[i].gen_frac
+                for i in topology.decode_indices())
+    return tuple(row for _ in range(n_classes))
+
+
+# ---------------------------------------------------------------------------
+# Queueing primitives (scalar forms; the jitted program mirrors them)
+# ---------------------------------------------------------------------------
+
+def mm_n_wait_s(tau_s: float, rho: float, n: int) -> float:
+    """Sakasegawa M/M/n mean queueing wait (seconds); inf at rho >= 1."""
+    if rho >= 1.0:
+        return math.inf
+    return (tau_s * rho ** (math.sqrt(2.0 * (n + 1.0)) - 1.0)
+            / (n * (1.0 - rho)))
+
+
+def _ps_inflation(rho: float) -> float:
+    """Processor-sharing latency inflation of a decode step; inf at
+    saturation (the monotone divergence the SLO gate rides on)."""
+    if rho >= 1.0:
+        return math.inf
+    return 1.0 / (1.0 - rho)
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServingResult:
+    """Fleet-level metrics of one (devices, replicas, routing) design on
+    a traffic mix.  Per-class tuples are ordered like `mix.classes`,
+    per-role tuples like `topology.roles`."""
+
+    feasible: bool              # every (role, class) runs AND rho < 1
+    slo_ok: bool                # feasible AND every per-class p99 cap met
+    tokens_per_joule: float     # fleet work efficiency (load-independent)
+    fleet_power_w: float        # static per provisioned replica + dynamic
+    busy_power_w: float         # all-replicas-busy (100% utilization) power
+    token_rate_tps: float       # generated tokens/s the mix demands
+    ttft_p99_s: tuple
+    tpot_p99_s: tuple
+    ttft0_s: tuple              # zero-load TTFT (the `_combine_system` chain)
+    tpot0_s: tuple
+    rho: tuple                  # per-role utilization
+    wq_s: tuple                 # per-role mean queueing wait
+    replicas: tuple
+    phi: tuple                  # per-class decode routing fractions
+    topology: SystemTopology
+    mix: TrafficMix
+
+
+def _infeasible_result(topology: SystemTopology, mix: TrafficMix,
+                       replicas: tuple, phi: tuple) -> ServingResult:
+    c = len(mix.classes)
+    return ServingResult(
+        feasible=False, slo_ok=False, tokens_per_joule=0.0,
+        fleet_power_w=0.0, busy_power_w=0.0,
+        token_rate_tps=mix.token_rate_tps,
+        ttft_p99_s=(math.inf,) * c, tpot_p99_s=(math.inf,) * c,
+        ttft0_s=(math.inf,) * c, tpot0_s=(math.inf,) * c,
+        rho=(math.inf,) * topology.k, wq_s=(math.inf,) * topology.k,
+        replicas=tuple(replicas), phi=tuple(phi),
+        topology=topology, mix=mix)
+
+
+# ---------------------------------------------------------------------------
+# Scalar reference path
+# ---------------------------------------------------------------------------
+
+def _check_phi(phi, n_classes: int, n_decode: int) -> list:
+    phi = [[float(v) for v in row] for row in phi]
+    if len(phi) != n_classes or any(len(row) != n_decode for row in phi):
+        raise ValueError(f"routing needs [{n_classes} x {n_decode}] "
+                         f"fractions")
+    for row in phi:
+        if abs(sum(row) - 1.0) > 1e-9 or any(v < 0.0 for v in row):
+            raise ValueError(f"routing row {row} is not a simplex point")
+    return phi
+
+
+def _serving_from_results(topo: SystemTopology, res: list, quants: list,
+                          static_w: list, dims: ModelDims, mix: TrafficMix,
+                          replicas, phi) -> ServingResult:
+    """Fold per-(role, class) PhaseResults + queueing into a
+    ServingResult.  The per-class zero-load chain is line-for-line
+    `disagg._combine_system` with the routing fractions `phi[c]` in
+    place of the topology's static `gen_frac` — a single-class mix with
+    the topology routing reproduces `SystemResult` exactly."""
+    pre_idx = topo.prefill_indices()
+    dec_idx = topo.decode_indices()
+    n_cls = len(mix.classes)
+    replicas = [int(v) for v in replicas]
+    phi = _check_phi(phi, n_cls, len(dec_idx))
+    if any(r < 1 for r in replicas) or len(replicas) != topo.k:
+        raise ValueError(f"{topo.name} needs {topo.k} replica counts >= 1")
+    if any(res[r][c] is None for r in range(topo.k) for c in range(n_cls)):
+        return _infeasible_result(topo, mix, tuple(replicas),
+                                  tuple(map(tuple, phi)))
+
+    # --- occupancy (seconds of one replica per request) and utilization ---
+    occ = [[0.0] * n_cls for _ in range(topo.k)]
+    for c, rc in enumerate(mix.classes):
+        for r in pre_idx:
+            p = res[r][c]
+            occ[r][c] = p.latency_s / p.batch
+        for j, r in enumerate(dec_idx):
+            d = res[r][c]
+            occ[r][c] = phi[c][j] * rc.trace.gen_tokens / d.throughput_tps
+    lam = [rc.rate_rps for rc in mix.classes]
+    lam_tot = sum(lam)
+    rho, wq = [], []
+    for r in range(topo.k):
+        load = sum(lam[c] * occ[r][c] for c in range(n_cls))
+        rho_r = load / replicas[r]
+        rho.append(rho_r)
+        wq.append(mm_n_wait_s(load / lam_tot, rho_r, replicas[r]))
+    stable = all(v < 1.0 for v in rho)
+    wq_pre = sum(wq[r] for r in pre_idx)
+
+    # --- per-class zero-load chain + tail inflation ---
+    ttft0, tpot0, ttft99, tpot99, e_tok = [], [], [], [], []
+    for c, rc in enumerate(mix.classes):
+        trace = rc.trace
+        gen = trace.gen_tokens
+        t0 = 0.0
+        e_req = 0.0
+        for j, r in enumerate(pre_idx):
+            p = res[r][c]
+            if j > 0:
+                t_a, e_a = _link_seconds(_act_handoff_bytes(
+                    dims, trace, quants[pre_idx[j - 1]]))
+                t0 += t_a
+                e_req += e_a
+            t0 += p.latency_s / p.batch
+            e_req += p.avg_power_w * p.latency_s / p.batch
+        t_kv, e_kv = kv_transfer_seconds(
+            dims, trace, 1, quants[topo.kv_producer_index()])
+        t0 += t_kv
+        e_req += e_kv
+        step0 = 0.0
+        step99 = 0.0
+        e_dec = 0.0
+        mig = 0.0
+        cum = 0.0
+        for j, r in enumerate(dec_idx):
+            d = res[r][c]
+            if j > 0:
+                ctx = trace.prompt_tokens + cum * gen
+                t_m, e_m = _link_seconds(
+                    dims.kv_bytes_per_token(quants[dec_idx[j - 1]]) * ctx)
+                mig += t_m
+                e_req += e_m
+            step_s = (d.latency_s / gen if dims.family is Family.DLLM
+                      else d.latency_s)
+            f = phi[c][j]
+            step0 += f * step_s
+            step99 += f * step_s * _ps_inflation(rho[r])
+            e_dec += f * d.energy_per_token_j
+            cum += f
+        e_tok.append(e_req / gen + e_dec)
+        ttft0.append(t0)
+        tpot0.append(step0 + mig / gen)
+        ttft99.append(t0 + LN100 * wq_pre)
+        tpot99.append(step99 + mig / gen)
+
+    # --- SLOs ---
+    slo = stable
+    for c, rc in enumerate(mix.classes):
+        if rc.ttft_p99_slo_s is not None and \
+                not ttft99[c] <= rc.ttft_p99_slo_s:
+            slo = False
+        if rc.tpot_p99_slo_s is not None and \
+                not tpot99[c] <= rc.tpot_p99_slo_s:
+            slo = False
+
+    # --- fleet efficiency + power ---
+    work = sum(lam[c] * mix.classes[c].trace.gen_tokens
+               for c in range(n_cls))
+    joule_rate = sum(lam[c] * mix.classes[c].trace.gen_tokens * e_tok[c]
+                     for c in range(n_cls))
+    fleet_p = 0.0
+    busy_p = 0.0
+    for r in range(topo.k):
+        load = sum(lam[c] * occ[r][c] for c in range(n_cls))
+        dyn = sum(lam[c] * occ[r][c] * (res[r][c].avg_power_w - static_w[r])
+                  for c in range(n_cls))
+        fleet_p += replicas[r] * static_w[r] + dyn
+        if load > 0.0:
+            busy = sum(lam[c] * occ[r][c] * res[r][c].avg_power_w
+                       for c in range(n_cls)) / load
+        else:
+            busy = static_w[r]
+        busy_p += replicas[r] * busy
+    return ServingResult(
+        feasible=stable, slo_ok=slo,
+        tokens_per_joule=work / joule_rate if joule_rate else 0.0,
+        fleet_power_w=fleet_p, busy_power_w=busy_p,
+        token_rate_tps=work,
+        ttft_p99_s=tuple(ttft99), tpot_p99_s=tuple(tpot99),
+        ttft0_s=tuple(ttft0), tpot0_s=tuple(tpot0),
+        rho=tuple(rho), wq_s=tuple(wq),
+        replicas=tuple(replicas), phi=tuple(map(tuple, phi)),
+        topology=topo, mix=mix)
+
+
+def _phase_results(npus: list, topo: SystemTopology, dims: ModelDims,
+                   mix: TrafficMix) -> list:
+    """[K][C] PhaseResults (None where a (role, class) is infeasible)."""
+    res = [[None] * len(mix.classes) for _ in range(topo.k)]
+    for r, role in enumerate(topo.roles):
+        for c, rc in enumerate(mix.classes):
+            try:
+                res[r][c] = evaluate(
+                    npus[r], role.dims_for(dims), rc.trace, role.phase,
+                    context_override=role.context_for(rc.trace))
+            except InfeasibleConfig:
+                pass
+    return res
+
+
+def evaluate_serving(npus: list, replicas, phi, topology: SystemTopology,
+                     dims: ModelDims, mix: TrafficMix) -> ServingResult:
+    """Scalar fleet evaluation of one (devices, replicas, routing) design
+    — the reference oracle the jitted `FleetEvaluator` is parity-tested
+    against (same role model, `perfmodel.evaluate` per (role, class))."""
+    if len(npus) != topology.k:
+        raise ValueError(f"{topology.name} needs {topology.k} devices, "
+                         f"got {len(npus)}")
+    res = _phase_results(npus, topology, dims, mix)
+    table = NPUTable.from_configs(list(npus))
+    return _serving_from_results(
+        topology, res, [n.quant for n in npus],
+        [float(v) for v in table.static_w], dims, mix, replicas, phi)
+
+
+def naive_replication(npus: list, topology: SystemTopology,
+                      dims: ModelDims, mix: TrafficMix,
+                      power_budget_w: float,
+                      levels: Optional[tuple] = None
+                      ) -> Optional[ServingResult]:
+    """The baseline a searched fleet must beat: one fixed system,
+    topology-default routing, uniformly replicated at the *smallest*
+    level that meets every per-class p99 SLO inside the provisioned
+    power budget (`sum(replicas * tdp)`).  Returns None when no level
+    does.  Per-(role, class) throughput is evaluated once; only the
+    queueing fold reruns per level."""
+    if levels is None:
+        from .dse.space import REPLICA_CHOICES
+        levels = REPLICA_CHOICES
+    phi = topology_routing(topology, len(mix.classes))
+    res = _phase_results(npus, topology, dims, mix)
+    table = NPUTable.from_configs(list(npus))
+    static_w = [float(v) for v in table.static_w]
+    quants = [n.quant for n in npus]
+    peak_w = sum(n.tdp_w() for n in npus)
+    for lvl in sorted({int(v) for v in levels}):
+        if lvl * peak_w > power_budget_w:
+            return None
+        r = _serving_from_results(topology, res, quants, static_w, dims,
+                                  mix, (lvl,) * topology.k, phi)
+        if r.feasible and r.slo_ok:
+            return r
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Jitted fleet program
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _fleet_program(pre_idx: tuple, dec_idx: tuple, kvp: int,
+                   n_classes: int, dllm: bool):
+    """One compiled queueing fold per (topology signature, class count).
+
+    Role/class loops are unrolled at trace time (K and C are single
+    digits); everything else is elementwise over the design axis, so a
+    bucket-padded pool is one fused XLA program.  The arithmetic — term
+    order included — mirrors `_serving_from_results` so the jitted and
+    scalar paths agree to float64 rounding."""
+    k = len(pre_idx) + len(dec_idx)
+    pre_set = frozenset(pre_idx)
+
+    @jax.jit
+    def run(d):
+        lat, bat, tps = d["lat"], d["bat"], d["tps"]
+        pwr, ept = d["pwr"], d["ept"]
+        static, abytes, kvptok = d["static"], d["abytes"], d["kvptok"]
+        nrep, phi = d["nrep"], d["phi"]
+        lam, gen, prompt = d["lam"], d["gen"], d["prompt"]
+        hb2, d_model = d["hb2"], d["d_model"]
+        safe_bat = jnp.maximum(bat, 1.0)
+        safe_tps = jnp.where(tps > 0.0, tps, 1.0)
+
+        # occupancy [n, K, C] and M/M/n station stats [n, K]
+        occ_cols = []
+        for r in range(k):
+            if r in pre_set:
+                occ_cols.append(lat[:, r, :] / safe_bat[:, r, :])
+            else:
+                j = dec_idx.index(r)
+                occ_cols.append(phi[:, :, j] * gen[None, :]
+                                / safe_tps[:, r, :])
+        occ = jnp.stack(occ_cols, axis=1)
+        load = jnp.sum(lam[None, None, :] * occ, axis=2)
+        rho = load / nrep
+        tau = load / jnp.sum(lam)
+        stable = jnp.all(rho < 1.0, axis=1)
+        one_m = jnp.where(rho < 1.0, 1.0 - rho, 1.0)
+        wq = jnp.where(
+            rho < 1.0,
+            tau * rho ** (jnp.sqrt(2.0 * (nrep + 1.0)) - 1.0)
+            / (nrep * one_m),
+            jnp.inf)
+        infl = jnp.where(rho < 1.0, 1.0 / one_m, jnp.inf)
+        wq_pre = jnp.zeros_like(wq[:, 0])
+        for r in pre_idx:
+            wq_pre = wq_pre + wq[:, r]
+
+        # per-class zero-load chains (the `_combine_system` fold)
+        ttft0_c, tpot0_c, ttft99_c, tpot99_c, e_tok_c = [], [], [], [], []
+        for c in range(n_classes):
+            t0 = jnp.zeros_like(lat[:, 0, 0])
+            e_req = jnp.zeros_like(t0)
+            for j, r in enumerate(pre_idx):
+                if j > 0:
+                    hb = hb2 * prompt[c] * d_model * abytes[:, pre_idx[j - 1]]
+                    t0 = t0 + hb / (NVLINK_GBPS * 1e9)
+                    e_req = e_req + NVLINK_PJ_PER_BIT * hb * 8.0 * 1e-12
+                t0 = t0 + lat[:, r, c] / safe_bat[:, r, c]
+                e_req = e_req + (pwr[:, r, c] * lat[:, r, c]
+                                 / safe_bat[:, r, c])
+            kvb = kvptok[:, kvp] * prompt[c]
+            t0 = t0 + kvb / (NVLINK_GBPS * 1e9)
+            e_req = e_req + NVLINK_PJ_PER_BIT * kvb * 8.0 * 1e-12
+            step0 = jnp.zeros_like(t0)
+            step99 = jnp.zeros_like(t0)
+            e_dec = jnp.zeros_like(t0)
+            mig = jnp.zeros_like(t0)
+            cum = jnp.zeros_like(t0)
+            for j, r in enumerate(dec_idx):
+                if j > 0:
+                    ctx = prompt[c] + cum * gen[c]
+                    mb = kvptok[:, dec_idx[j - 1]] * ctx
+                    mig = mig + mb / (NVLINK_GBPS * 1e9)
+                    e_req = e_req + NVLINK_PJ_PER_BIT * mb * 8.0 * 1e-12
+                s = lat[:, r, c] / gen[c] if dllm else lat[:, r, c]
+                f = phi[:, c, j]
+                step0 = step0 + f * s
+                step99 = step99 + f * s * infl[:, r]
+                e_dec = e_dec + f * ept[:, r, c]
+                cum = cum + f
+            e_tok_c.append(e_req / gen[c] + e_dec)
+            ttft0_c.append(t0)
+            tpot0_c.append(step0 + mig / gen[c])
+            ttft99_c.append(t0 + LN100 * wq_pre)
+            tpot99_c.append(step99 + mig / gen[c])
+        ttft0 = jnp.stack(ttft0_c, axis=1)
+        tpot0 = jnp.stack(tpot0_c, axis=1)
+        ttft99 = jnp.stack(ttft99_c, axis=1)
+        tpot99 = jnp.stack(tpot99_c, axis=1)
+        e_tok = jnp.stack(e_tok_c, axis=1)
+
+        feasible = jnp.all(d["feas"].reshape(d["feas"].shape[0], -1) > 0.5,
+                           axis=1) & stable
+        slo_ok = feasible & jnp.all(
+            (ttft99 <= d["ttft_cap"][None, :])
+            & (tpot99 <= d["tpot_cap"][None, :]), axis=1)
+
+        work = jnp.sum(lam * gen)
+        joule_rate = jnp.sum((lam * gen)[None, :] * e_tok, axis=1)
+        tokj = work / jnp.where(joule_rate > 0.0, joule_rate, 1.0)
+        dyn = jnp.sum(lam[None, None, :] * occ
+                      * (pwr - static[:, :, None]), axis=2)
+        fleet_p = jnp.sum(nrep * static + dyn, axis=1)
+        busy_num = jnp.sum(lam[None, None, :] * occ * pwr, axis=2)
+        busy = jnp.where(load > 0.0,
+                         busy_num / jnp.where(load > 0.0, load, 1.0),
+                         static)
+        busy_p = jnp.sum(nrep * busy, axis=1)
+        return {"feasible": feasible, "slo_ok": slo_ok,
+                "tokens_per_joule": tokj, "fleet_power_w": fleet_p,
+                "busy_power_w": busy_p, "ttft_p99_s": ttft99,
+                "tpot_p99_s": tpot99, "ttft0_s": ttft0, "tpot0_s": tpot0,
+                "rho": rho, "wq_s": wq}
+
+    return run
+
+
+class FleetEvaluator:
+    """Batched serving evaluation of encoded `ServingSpace` gene rows.
+
+    Two-level structure, built for search loops where device halves
+    repeat across candidates and replica/routing genes vary freely:
+
+    1. **Per-role metric cache** — each distinct 17-gene half is decoded
+       (`dse.space.decode_batch`) and scored by `perfmodel_jit
+       .evaluate_batch_arrays` once per (role, class); the cached row
+       is (feasible, latency, batch, tps, power, energy/token) per
+       class plus the half's device-level constants (static power,
+       activation/KV byte widths).  Replica and routing genes are NOT
+       part of the key, so sweeping them is pure cache hits —
+       `n_table_builds` / `n_role_evals` expose the build counts the
+       cache-reuse tests pin.
+    2. **One jitted queueing fold** (`_fleet_program`) over the whole
+       [n, K, C] metric block — scoring a 10k+ fleet pool is a handful
+       of per-role jit calls on the miss set plus one fold dispatch.
+    """
+
+    def __init__(self, topology: SystemTopology, dims: ModelDims,
+                 mix: TrafficMix):
+        self.topology = topology
+        self.dims = dims
+        self.mix = mix
+        self._metric_cache = [dict() for _ in topology.roles]
+        self.n_table_builds = 0
+        self.n_role_evals = 0
+        lam = np.array([c.rate_rps for c in mix.classes])
+        gen = np.array([float(c.trace.gen_tokens) for c in mix.classes])
+        prompt = np.array([float(c.trace.prompt_tokens)
+                           for c in mix.classes])
+        caps_t = np.array([math.inf if c.ttft_p99_slo_s is None
+                           else float(c.ttft_p99_slo_s)
+                           for c in mix.classes])
+        caps_p = np.array([math.inf if c.tpot_p99_slo_s is None
+                           else float(c.tpot_p99_slo_s)
+                           for c in mix.classes])
+        self._consts = {
+            "lam": lam, "gen": gen, "prompt": prompt,
+            "ttft_cap": caps_t, "tpot_cap": caps_p,
+            "hb2": np.float64(2.0 * (dims.n_layers
+                                     + dims.n_encoder_layers)),
+            "d_model": np.float64(dims.d_model),
+        }
+
+    def _role_rows(self, role_i: int, halves: np.ndarray) -> tuple:
+        """Cached [(C, 6) metrics, (3,) device constants] rows for the
+        distinct halves of one role, gathered per design."""
+        from .dse import space as sp
+        role = self.topology.roles[role_i]
+        cache = self._metric_cache[role_i]
+        uniq, inv = np.unique(halves, axis=0, return_inverse=True)
+        keys = [row.tobytes() for row in uniq]
+        missing = [i for i, key in enumerate(keys) if key not in cache]
+        if missing:
+            table = sp.decode_batch(uniq[missing])
+            self.n_table_builds += 1
+            rdims = role.dims_for(self.dims)
+            met = np.zeros((len(missing), len(self.mix.classes), 6))
+            for ci, rc in enumerate(self.mix.classes):
+                arr = evaluate_batch_arrays(
+                    table, rdims, rc.trace, role.phase,
+                    context_override=role.context_for(rc.trace))
+                self.n_role_evals += 1
+                met[:, ci, 0] = arr["feasible"]
+                met[:, ci, 1] = arr["latency_s"]
+                met[:, ci, 2] = arr["batch"]
+                met[:, ci, 3] = arr["throughput_tps"]
+                met[:, ci, 4] = arr["avg_power_w"]
+                met[:, ci, 5] = arr["energy_per_token_j"]
+            kvptok = np.array([self.dims.kv_bytes_per_token(q)
+                               for q in table.quants])[table.quant_idx]
+            for mi, ui in enumerate(missing):
+                cache[keys[ui]] = (met[mi], np.array(
+                    [table.static_w[mi], table.a_bytes[mi], kvptok[mi]]))
+        u_met = np.empty((len(uniq), len(self.mix.classes), 6))
+        u_dev = np.empty((len(uniq), 3))
+        for i, key in enumerate(keys):
+            m, dev = cache[key]
+            u_met[i] = m
+            u_dev[i] = dev
+        return u_met[inv], u_dev[inv]
+
+    def evaluate_genes(self, xs: np.ndarray) -> dict:
+        """Score [n, n_dims] encoded serving designs; returns the
+        `_fleet_program` output dict as numpy arrays of length n.  Rows
+        must be `ServingSpace.valid_mask`-valid (undefined metrics, not
+        exceptions, otherwise — same contract as `decode_batch`)."""
+        from .dse import space as sp
+        topo = self.topology
+        xs = np.asarray(xs, dtype=np.int64)
+        n = xs.shape[0]
+        n_cls = len(self.mix.classes)
+        dev_genes = topo.k * sp.N_DIMS
+        met = np.empty((n, topo.k, n_cls, 6))
+        dev = np.empty((n, topo.k, 3))
+        for r in range(topo.k):
+            half = xs[:, r * sp.N_DIMS:(r + 1) * sp.N_DIMS]
+            met[:, r], dev[:, r] = self._role_rows(r, half)
+        nrep = np.asarray(sp.REPLICA_CHOICES, dtype=np.float64)[
+            xs[:, dev_genes:dev_genes + topo.k]]
+        route = xs[:, dev_genes + topo.k:].reshape(
+            n, n_cls, len(topo.decode_indices()))
+        phi = sp.routing_fractions(route)
+        d = {
+            "feas": met[..., 0], "lat": met[..., 1], "bat": met[..., 2],
+            "tps": met[..., 3], "pwr": met[..., 4], "ept": met[..., 5],
+            "static": dev[..., 0], "abytes": dev[..., 1],
+            "kvptok": dev[..., 2], "nrep": nrep, "phi": phi,
+        }
+        # bucket-pad the design axis (power of two, floor 64) so varying
+        # pool sizes reuse one compiled fold per bucket
+        bucket = 64
+        while bucket < n:
+            bucket *= 2
+        if bucket != n:
+            pad = np.concatenate([np.arange(n),
+                                  np.zeros(bucket - n, dtype=np.int64)])
+            d = {key: v[pad] for key, v in d.items()}
+        d.update(self._consts)
+        prog = _fleet_program(
+            tuple(topo.prefill_indices()), tuple(topo.decode_indices()),
+            topo.kv_producer_index(), n_cls,
+            self.dims.family is Family.DLLM)
+        with enable_x64():
+            out = prog(d)
+            return {key: np.asarray(v)[:n] for key, v in out.items()}

@@ -24,6 +24,7 @@ FRONT = 60                   # a deep-search incumbent front
 EHVI3D_MS_PER_CALL = 100.0
 EHVI2D_MS_PER_CALL = 20.0
 GP_PREDICT_MS_PER_CALL = 50.0
+SERVING_MS_PER_CALL = 150.0
 
 
 def _best_of(fn, repeat=5):
@@ -83,3 +84,28 @@ def test_gp_jit_predict_batch_per_call_bound():
     mu1, sd1 = gp.predict_batch(xq)
     assert np.allclose(mu1, mu0, rtol=0, atol=1e-9)
     assert np.allclose(sd1, sd0, rtol=0, atol=1e-9)
+
+
+@pytest.mark.bench
+def test_serving_fold_per_call_bound():
+    """Warm-cache fleet scoring of a 512-design serving pool — the
+    per-iteration cost `ServingObjective.evaluate_batch` pays inside
+    the search loop — stays one metric-cache gather plus one jitted
+    queueing-fold dispatch, not a per-design Python loop.  (The full
+    fresh-cache 16k-pool ceiling lives in benchmarks/bench_serving.py.)
+    """
+    from repro.configs.paper_models import LLAMA33_70B
+    from repro.core.disagg import PD_PAIR
+    from repro.core.dse import space as sp
+    from repro.core.serving import (FleetEvaluator, RequestClass,
+                                    TrafficMix)
+    from repro.core.workload import CHATBOT
+
+    mix = TrafficMix("bench", (RequestClass(CHATBOT, rate_rps=2.0),))
+    space = sp.ServingSpace.for_mix(PD_PAIR, mix)
+    rng = np.random.default_rng(44)
+    xs = space.random_designs(rng, 512)
+    fleet = FleetEvaluator(PD_PAIR, LLAMA33_70B, mix)
+    fleet.evaluate_genes(xs)                    # compile + fill caches
+    ms = _best_of(lambda: fleet.evaluate_genes(xs))
+    assert ms < SERVING_MS_PER_CALL, f"serving fold {ms:.1f} ms/call"

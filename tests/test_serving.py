@@ -1,0 +1,460 @@
+"""Serving-layer tests: queueing math, parity, caching, space plumbing.
+
+What is pinned here, per docs/serving.md:
+
+* **Single-class degeneracy** — a one-class mix served by one replica
+  per role with topology-default routing is EXACTLY the system the
+  PR 4 `disagg.evaluate_system` fold scores: tokens/joule, zero-queue
+  TTFT/TPOT and busy power agree to ~1e-12 (measured ~1e-16), through
+  both the scalar oracle and the jitted `FleetEvaluator`.
+* **Queueing limits** — tokens/joule is per-work (load-invariant by
+  construction), queue waits diverge monotonically as utilization
+  approaches 1, and rho >= 1 on any role makes the fleet infeasible.
+* **Jit-vs-scalar parity** — `FleetEvaluator` agrees with
+  `evaluate_serving` on random valid serving designs (autoregressive
+  and diffusion topologies) with identical feasibility masks.
+* **Caching** — replica/routing sweeps over fixed device halves never
+  rebuild phase tables or rerun role evaluations.
+* **Space/journal plumbing** — ServingSpace gene layout round-trips,
+  Sobol capacity overflows fail loudly at construction, and a journal
+  refuses to resume against a different traffic mix.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import LLADA_8B, LLAMA33_70B
+from repro.core.disagg import (DLLM_3ROLE, EXTREME_4ROLE, FLEET_6ROLE,
+                               PD_PAIR, evaluate_system,
+                               evaluate_system_batch)
+from repro.core.dse import (JournalMismatch, SearchJournal, ServingObjective,
+                            run_mobo, serving_warm_start)
+from repro.core.dse import space as sp
+from repro.core.npu import d1_npu, p1_npu
+from repro.core.serving import (FleetEvaluator, RequestClass, ServingResult,
+                                TrafficMix, evaluate_serving, mm_n_wait_s,
+                                naive_replication, topology_routing)
+from repro.core.workload import CHATBOT, GSM8K_DLLM, OSWORLD_LIBREOFFICE
+
+RTOL = 1e-9          # jit-vs-scalar bound (measured agreement ~1e-16)
+
+
+def _mix1(rate=1.0, ttft=None, tpot=None):
+    return TrafficMix("solo", (RequestClass(
+        CHATBOT, rate_rps=rate, ttft_p99_slo_s=ttft,
+        tpot_p99_slo_s=tpot),))
+
+
+def _mix2(r1=2.0, r2=0.01):
+    return TrafficMix("duo", (
+        RequestClass(CHATBOT, rate_rps=r1, ttft_p99_slo_s=6.0),
+        RequestClass(OSWORLD_LIBREOFFICE, rate_rps=r2,
+                     ttft_p99_slo_s=90.0),
+    ))
+
+
+def _hand_pair():
+    return [p1_npu(), d1_npu()]
+
+
+# ---------------------------------------------------------------------------
+# Queueing math
+# ---------------------------------------------------------------------------
+
+def test_mm_n_wait_properties():
+    # monotone in rho, divergent toward saturation, shrinking in n
+    waits = [mm_n_wait_s(0.1, r, 1) for r in (0.1, 0.5, 0.9, 0.99)]
+    assert all(b > a for a, b in zip(waits, waits[1:]))
+    assert mm_n_wait_s(0.1, 0.999999, 1) > 1e3 * mm_n_wait_s(0.1, 0.9, 1)
+    assert mm_n_wait_s(0.1, 0.5, 4) < mm_n_wait_s(0.1, 0.5, 1)
+    assert mm_n_wait_s(0.1, 0.0, 1) == 0.0
+
+
+def test_tokens_per_joule_is_load_invariant():
+    """tok/J is per-work (energy per token x token mix): queue depth
+    and replica count never enter it, so a nearly-idle fleet (16x
+    replicas) scores EXACTLY the same tok/J as a loaded single-replica
+    one at the same mix, and different arrival rates agree to rounding."""
+    npus = _hand_pair()
+    phi = topology_routing(PD_PAIR, 1)
+    mix = _mix1(rate=5.0)
+    loaded = evaluate_serving(npus, (1, 1), phi, PD_PAIR, LLAMA33_70B, mix)
+    idle = evaluate_serving(npus, (16, 16), phi, PD_PAIR, LLAMA33_70B, mix)
+    assert loaded.feasible and idle.feasible
+    assert idle.rho[0] < loaded.rho[0]
+    assert idle.tokens_per_joule == loaded.tokens_per_joule   # bit-exact
+    for rate in (1e-6, 0.01, 1.0):
+        r = evaluate_serving(npus, (1, 1), phi, PD_PAIR, LLAMA33_70B,
+                             _mix1(rate=rate))
+        assert r.feasible
+        assert r.tokens_per_joule == pytest.approx(
+            loaded.tokens_per_joule, rel=1e-12)
+
+
+def test_wait_diverges_monotone_then_saturates():
+    npus = _hand_pair()
+    phi = topology_routing(PD_PAIR, 1)
+    prev_wq = -1.0
+    saturated = False
+    for rate in (0.1, 1.0, 3.0, 6.0, 9.0, 20.0, 200.0):
+        r = evaluate_serving(npus, (1, 1), phi, PD_PAIR, LLAMA33_70B,
+                             _mix1(rate=rate))
+        if not r.feasible:
+            saturated = True
+            assert max(r.rho) >= 1.0
+            continue
+        assert not saturated, "feasible again after saturation"
+        wq = sum(r.wq_s)
+        assert wq > prev_wq
+        prev_wq = wq
+        assert all(rho < 1.0 for rho in r.rho)
+    assert saturated, "rate sweep never saturated the hand pair"
+
+
+def test_zero_load_ttft_equals_service_time():
+    """At vanishing load the p99 TTFT collapses to the zero-queue
+    service time (the wait term's rho^... factor vanishes)."""
+    r = evaluate_serving(_hand_pair(), (1, 1), topology_routing(PD_PAIR, 1),
+                         PD_PAIR, LLAMA33_70B, _mix1(rate=1e-9))
+    assert r.ttft_p99_s[0] == pytest.approx(r.ttft0_s[0], rel=1e-6)
+    assert r.tpot_p99_s[0] == pytest.approx(r.tpot0_s[0], rel=1e-6)
+
+
+def test_replicas_restore_feasibility():
+    """A rate that saturates single devices is served by replicas, and
+    per-work tok/J is unchanged by replication."""
+    npus = _hand_pair()
+    phi = topology_routing(PD_PAIR, 1)
+    mix = _mix1(rate=20.0)
+    r1 = evaluate_serving(npus, (1, 1), phi, PD_PAIR, LLAMA33_70B, mix)
+    assert not r1.feasible
+    r8 = evaluate_serving(npus, (8, 8), phi, PD_PAIR, LLAMA33_70B, mix)
+    assert r8.feasible
+    low = evaluate_serving(npus, (1, 1), phi, PD_PAIR, LLAMA33_70B,
+                           _mix1(rate=0.01))
+    assert r8.tokens_per_joule == pytest.approx(low.tokens_per_joule,
+                                                rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Single-class degeneracy vs the system fold
+# ---------------------------------------------------------------------------
+
+def test_single_class_matches_evaluate_system_scalar():
+    sys_r = evaluate_system(_hand_pair(), PD_PAIR, LLAMA33_70B, CHATBOT)
+    srv = evaluate_serving(_hand_pair(), (1, 1), topology_routing(PD_PAIR, 1),
+                           PD_PAIR, LLAMA33_70B, _mix1(rate=1.0))
+    assert srv.feasible
+    assert srv.tokens_per_joule == pytest.approx(
+        sys_r.tokens_per_joule, rel=1e-12)
+    assert srv.ttft0_s[0] == pytest.approx(sys_r.ttft_s, rel=1e-12)
+    assert srv.busy_power_w == pytest.approx(sys_r.total_power_w, rel=1e-12)
+
+
+@pytest.mark.parametrize("topo", [PD_PAIR, EXTREME_4ROLE])
+def test_single_class_matches_evaluate_system_jit(topo):
+    """FleetEvaluator rows with replicas=1 and topology-default routing
+    reproduce `evaluate_system_batch` tokens/joule on the same halves
+    wherever both are feasible (the fleet additionally requires queue
+    stability, a strict subset)."""
+    mix = _mix1(rate=0.001)
+    space = sp.ServingSpace(topo, 1)
+    rng = np.random.default_rng(7)
+    xs = space.random_designs(rng, 32)
+    # replicas = 1, equal routing weights == topology-default routing
+    xs[:, space.dev_genes:] = 0
+    base = sp.SystemSpace.for_topology(topo)
+    systems = [base.decode(x[:space.dev_genes]) for x in xs]
+    sys_rs = evaluate_system_batch(systems, topo, LLAMA33_70B, CHATBOT)
+    out = FleetEvaluator(topo, LLAMA33_70B, mix).evaluate_genes(xs)
+    n_both = 0
+    for i, sys_r in enumerate(sys_rs):
+        if sys_r is None:
+            assert not out["feasible"][i]
+            continue
+        if not out["feasible"][i]:
+            continue            # phase-feasible but queue-unstable
+        n_both += 1
+        assert out["tokens_per_joule"][i] == pytest.approx(
+            sys_r.tokens_per_joule, rel=1e-12)
+        assert out["ttft0_s"][i, 0] == pytest.approx(sys_r.ttft_s,
+                                                     rel=1e-12)
+    assert n_both >= 3, "sample too degenerate to pin parity"
+
+
+# ---------------------------------------------------------------------------
+# Jit vs scalar parity
+# ---------------------------------------------------------------------------
+
+_PARITY_KEYS = ("tokens_per_joule", "fleet_power_w", "busy_power_w")
+_PERCLASS_KEYS = ("ttft_p99_s", "tpot_p99_s", "ttft0_s", "tpot0_s")
+
+
+def _assert_parity(out, i, scalar: ServingResult, n_classes: int):
+    assert bool(out["feasible"][i]) == scalar.feasible
+    if not scalar.feasible:
+        return
+    assert bool(out["slo_ok"][i]) == scalar.slo_ok
+    for k in _PARITY_KEYS:
+        assert out[k][i] == pytest.approx(getattr(scalar, k), rel=RTOL)
+    for k in _PERCLASS_KEYS:
+        for c in range(n_classes):
+            got, want = out[k][i][c], getattr(scalar, k)[c]
+            if math.isinf(want):
+                assert math.isinf(got)
+            else:
+                assert got == pytest.approx(want, rel=RTOL)
+    for k, want in (("rho", scalar.rho), ("wq_s", scalar.wq_s)):
+        for r, w in enumerate(want):
+            if math.isinf(w):
+                assert math.isinf(out[k][i][r])
+            else:
+                assert out[k][i][r] == pytest.approx(w, rel=RTOL)
+
+
+def test_jit_vs_scalar_parity_extreme_mix():
+    mix = _mix2()
+    space = sp.ServingSpace.for_mix(EXTREME_4ROLE, mix)
+    rng = np.random.default_rng(11)
+    xs = space.random_designs(rng, 24)
+    fleet = FleetEvaluator(EXTREME_4ROLE, LLAMA33_70B, mix)
+    out = fleet.evaluate_genes(xs)
+    n_feas = 0
+    for i, x in enumerate(xs):
+        d = space.decode(x)
+        scalar = evaluate_serving(list(d.npus), d.replicas, d.phi,
+                                  EXTREME_4ROLE, LLAMA33_70B, mix)
+        _assert_parity(out, i, scalar, len(mix.classes))
+        n_feas += scalar.feasible
+    assert n_feas >= 2, "sample too degenerate to pin parity"
+
+
+def test_jit_vs_scalar_parity_dllm():
+    mix = TrafficMix("dllm", (RequestClass(GSM8K_DLLM, rate_rps=0.5),))
+    space = sp.ServingSpace(DLLM_3ROLE, 1)
+    rng = np.random.default_rng(13)
+    xs = space.random_designs(rng, 16)
+    out = FleetEvaluator(DLLM_3ROLE, LLADA_8B, mix).evaluate_genes(xs)
+    n_feas = 0
+    for i, x in enumerate(xs):
+        d = space.decode(x)
+        scalar = evaluate_serving(list(d.npus), d.replicas, d.phi,
+                                  DLLM_3ROLE, LLADA_8B, mix)
+        _assert_parity(out, i, scalar, 1)
+        n_feas += scalar.feasible
+    assert n_feas >= 1, "sample too degenerate to pin parity"
+
+
+# ---------------------------------------------------------------------------
+# Metric-cache reuse across replica/routing sweeps
+# ---------------------------------------------------------------------------
+
+def test_replica_routing_sweep_is_pure_cache_hits():
+    mix = _mix2()
+    space = sp.ServingSpace.for_mix(EXTREME_4ROLE, mix)
+    rng = np.random.default_rng(3)
+    xs = space.random_designs(rng, 8)
+    fleet = FleetEvaluator(EXTREME_4ROLE, LLAMA33_70B, mix)
+    out1 = fleet.evaluate_genes(xs)
+    builds, evals = fleet.n_table_builds, fleet.n_role_evals
+    assert builds > 0 and evals > 0
+    # sweep replica + routing genes over the SAME device halves: the
+    # per-role metric cache must answer everything
+    for trial in range(3):
+        xs2 = xs.copy()
+        xs2[:, space.dev_genes:] = rng.integers(
+            0, 8, size=xs2[:, space.dev_genes:].shape)
+        out2 = fleet.evaluate_genes(xs2)
+        assert fleet.n_table_builds == builds
+        assert fleet.n_role_evals == evals
+    # the sweep genuinely changed the queueing outcome
+    assert not np.array_equal(out1["rho"], out2["rho"])
+    # new halves DO miss: a fresh sample must build tables again
+    xs3 = space.random_designs(rng, 4)
+    fleet.evaluate_genes(xs3)
+    assert fleet.n_table_builds > builds
+
+
+# ---------------------------------------------------------------------------
+# Space plumbing
+# ---------------------------------------------------------------------------
+
+def test_serving_space_layout_and_roundtrip():
+    mix = _mix2()
+    space = sp.ServingSpace.for_mix(EXTREME_4ROLE, mix)
+    k, n_dec, n_cls = 4, 2, 2
+    assert space.dev_genes == k * sp.N_DIMS
+    assert space.n_dims == k * sp.N_DIMS + k + n_cls * n_dec
+    rng = np.random.default_rng(5)
+    xs = space.random_designs(rng, 16)
+    assert space.valid_mask(xs).all()
+    reps = space.replica_counts(xs)
+    assert reps.shape == (16, k)
+    assert set(np.unique(reps)) <= set(sp.REPLICA_CHOICES)
+    phi = space.routing(xs)
+    assert phi.shape == (16, n_cls, n_dec)
+    assert np.allclose(phi.sum(axis=-1), 1.0)
+    assert (phi > 0).all()
+    d = space.decode(xs[0])
+    assert len(d.npus) == k
+    assert d.replicas == tuple(reps[0])
+    assert np.allclose(d.phi, phi[0])
+    # out-of-range extra genes are invalid, and repair preserves them
+    bad = xs.copy()
+    bad[0, space.dev_genes] = len(sp.REPLICA_CHOICES)
+    assert not space.valid_mask(bad)[0]
+    rep = space.repair(list(xs[0]))
+    assert rep[space.dev_genes:] == list(xs[0][space.dev_genes:])
+
+
+def test_serving_tdp_scales_with_replicas():
+    space = sp.ServingSpace(PD_PAIR, 1)
+    rng = np.random.default_rng(9)
+    x = np.asarray([space.random_design(rng)], dtype=np.int64)
+    base_space = sp.SystemSpace.for_topology(PD_PAIR)
+    halves = x[:, :space.dev_genes]
+    per_half = [sp.tdp_w_batch(halves[:, i * sp.N_DIMS:(i + 1) * sp.N_DIMS])
+                for i in range(2)]
+    x[0, space.dev_genes:space.dev_genes + 2] = [3, 1]   # 4x, 2x replicas
+    want = 4 * per_half[0][0] + 2 * per_half[1][0]
+    assert space.tdp_w_batch(x)[0] == pytest.approx(want, rel=1e-12)
+    # replicas=1 degenerates to the SystemSpace budget
+    x[0, space.dev_genes:space.dev_genes + 2] = 0
+    assert space.tdp_w_batch(x)[0] == pytest.approx(
+        base_space.tdp_w_batch(halves)[0], rel=1e-12)
+
+
+def test_routing_fractions_exact_binary_splits():
+    # equal weights -> exact 1/D fractions (binary: no rounding error)
+    phi = sp.routing_fractions(np.zeros((1, 1, 4), dtype=np.int64))
+    assert (phi == 0.25).all()
+    phi = sp.routing_fractions(np.array([[[0, 2]]]))    # weights 1, 3
+    assert phi[0, 0, 0] == 0.25 and phi[0, 0, 1] == 0.75
+
+
+def test_sobol_capacity_overflow_is_loud():
+    with pytest.raises(ValueError, match="gen_sobol_directions.py"):
+        sp.SystemSpace(10)          # 170 genes > the 158-dim table
+    with pytest.raises(ValueError, match="gen_sobol_directions.py"):
+        sp.ServingSpace(FLEET_6ROLE, 13)   # 102 + 6 + 52 = 160 genes
+    # the largest shipped serving scenario still fits
+    assert sp.ServingSpace(FLEET_6ROLE, 3).n_dims <= 158
+
+
+def test_serving_space_for_topology_refuses():
+    with pytest.raises(TypeError, match="for_mix"):
+        sp.ServingSpace.for_topology(PD_PAIR)
+
+
+# ---------------------------------------------------------------------------
+# Naive replication baseline
+# ---------------------------------------------------------------------------
+
+def test_naive_replication_minimal_feasible_level():
+    mix = _mix1(rate=6.0, ttft=6.0)
+    budget = 50000.0
+    r = naive_replication(_hand_pair(), PD_PAIR, LLAMA33_70B, mix, budget)
+    assert r is not None and r.feasible and r.slo_ok
+    lvl = r.replicas[0]
+    assert all(n == lvl for n in r.replicas)    # uniform by construction
+    if lvl > 1:
+        below = [c for c in sp.REPLICA_CHOICES if c < lvl]
+        prev = evaluate_serving(_hand_pair(), (below[-1],) * 2,
+                                topology_routing(PD_PAIR, 1), PD_PAIR,
+                                LLAMA33_70B, mix)
+        assert not (prev.feasible and prev.slo_ok)
+    # a budget below the minimal feasible level's draw -> None
+    assert naive_replication(_hand_pair(), PD_PAIR, LLAMA33_70B, mix,
+                             power_budget_w=1.0) is None
+
+
+# ---------------------------------------------------------------------------
+# Objective / search / journal plumbing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serving_search_seeded_determinism():
+    def run_once():
+        obj = ServingObjective(LLAMA33_70B, _mix1(rate=4.0, ttft=6.0),
+                               topology=PD_PAIR)
+        run_mobo(obj, n_total=12, n_init=6, batch_size=4, seed=0)
+        return sorted((k, v.f) for k, v in obj.cache.items())
+    assert run_once() == run_once()
+
+
+@pytest.mark.slow
+def test_serving_warm_start_finds_feasible_fleet():
+    obj = ServingObjective(LLAMA33_70B, _mix1(rate=4.0, ttft=6.0),
+                           topology=PD_PAIR)
+    init = serving_warm_start(obj, 8, seed=0, pool=128)
+    assert len(init) == 8
+    feas = [o for o in init if o.f is not None]
+    assert feas, "warm start found no feasible serving design"
+    again = serving_warm_start(
+        ServingObjective(LLAMA33_70B, _mix1(rate=4.0, ttft=6.0),
+                         topology=PD_PAIR), 8, seed=0, pool=128)
+    assert [tuple(o.x) for o in init] == [tuple(o.x) for o in again]
+
+
+@pytest.mark.bench
+def test_bench_check_compare_serving():
+    """The `serving` gate: committed-baseline tokJ floor raised to the
+    FRESH naive-replication tokJ, pool wall-clock / bare-path-overhead
+    ceilings, timing limit, budget-mismatch sentinel, missing-entry
+    regression (conventions shared with the other compare_* gates)."""
+    import pathlib
+    import sys
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.run import (SERVING_OVERHEAD_MAX,
+                                SERVING_POOL_S_CEILING, compare_serving)
+
+    def entry(**kw):
+        e = {"tokens_per_joule": 1.0, "naive_tokens_per_joule": 0.5,
+             "us_per_run": 40e6, "pool_s": 0.5, "overhead_ratio": 0.2,
+             "n_total": 96, "batch_size": 16}
+        e.update(kw)
+        return {"serving": e}
+
+    base = entry()
+    assert compare_serving(base, entry(us_per_run=50e6), 5.0)[-1]
+    # below the committed baseline -> regression
+    assert not compare_serving(base, entry(tokens_per_joule=0.9), 5.0)[-1]
+    # the floor is raised to the FRESH naive tokJ: a searched fleet
+    # that no longer beats naive replication regresses even when it
+    # matches the committed baseline
+    lost = compare_serving(base, entry(naive_tokens_per_joule=1.1), 5.0)
+    assert lost[1] == 1.1 and not lost[-1]
+    # pool wall clock / overhead ceilings
+    assert not compare_serving(base, entry(
+        pool_s=SERVING_POOL_S_CEILING + 0.1), 5.0)[-1]
+    assert not compare_serving(base, entry(
+        overhead_ratio=SERVING_OVERHEAD_MAX + 0.1), 5.0)[-1]
+    assert not compare_serving(base, entry(pool_s=None), 5.0)[-1]
+    # timing blow-up -> regression
+    assert not compare_serving(base, entry(us_per_run=201e6), 5.0)[-1]
+    # budget/batch mismatch is flagged (floor = -2), not compared
+    for kw in ({"n_total": 48}, {"batch_size": 8}):
+        mismatch = compare_serving(base, entry(**kw), 5.0)
+        assert mismatch[1] == -2.0 and not mismatch[-1]
+    # pre-serving baselines skip the gate; missing fresh entry regresses
+    assert compare_serving({"methods": {}}, {}, 5.0) is None
+    missing = compare_serving(base, {}, 5.0)
+    assert missing[-2] < 0 and not missing[-1]
+
+
+def test_journal_refuses_different_mix(tmp_path):
+    path = tmp_path / "serving.jsonl"
+    obj_a = ServingObjective(LLAMA33_70B, _mix1(rate=1.0), topology=PD_PAIR)
+    with SearchJournal(path) as j:
+        j.begin(obj_a, seed=0)
+    # same everything, different arrival rate -> refuse to resume
+    obj_b = ServingObjective(LLAMA33_70B, _mix1(rate=2.0), topology=PD_PAIR)
+    with pytest.raises(JournalMismatch):
+        SearchJournal(path).begin(obj_b, seed=0)
+    # the original identity still resumes
+    obj_c = ServingObjective(LLAMA33_70B, _mix1(rate=1.0), topology=PD_PAIR)
+    assert SearchJournal(path).begin(obj_c, seed=0) == 0

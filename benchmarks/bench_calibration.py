@@ -1,0 +1,134 @@
+"""Kernel-calibrated perfmodel: measured Pallas factors end-to-end.
+
+Runs the calibration harness (`repro.core.calibration`): the repo's
+Pallas kernels (flash/decode attention, MX quant) plus the XLA matmul
+proxy are timed across the geometry ladders, per-geometry-class
+efficiency/setup factors are fitted, and the fitted `CalibrationTable`
+is pushed through the full stack:
+
+* **fit quality** — the per-class normalized residual's max
+  (``fit_err``) is the number ``benchmarks/run.py --check`` gates
+  against `CAL_FIT_ERR_CEILING`;
+* **coverage** — measured classes vs the classes the bundled
+  QWEN3-32B/OSWorld trace actually emits;
+* **shift** — max relative latency change, identity table vs fitted
+  table, across P1/D1/baseline x prefill/decode: the fitted factors
+  must *measurably* move predicted cycles on a bundled trace
+  (shift > 0 is gated);
+* **searched system** — a seeded GP+EHVI sweep through a calibrated
+  ``Objective`` proves the table rides through the jitted batch path,
+  the evaluation cache and the searchers unchanged.
+
+On CPU the kernels run through the Pallas interpreter, so the fitted
+efficiencies are orders of magnitude above 1 — the row validates the
+harness and the threading, not silicon (docs/calibration.md).
+"""
+
+from repro.configs.paper_models import QWEN3_32B
+from repro.core import baseline_npu, d1_npu, evaluate, p1_npu
+from repro.core.calibration import (fit_table, measure_all,
+                                    trace_geometry_classes)
+from repro.core.dse import Objective, run_mobo, shared_init
+from repro.core.workload import OSWORLD_LIBREOFFICE, Phase
+
+from .common import merge_bench_json, row, timed
+
+SEARCH_N_TOTAL = 24          # tiny sweep: the threading, not convergence
+SEARCH_N_INIT = 10
+SEARCH_SEED = 0
+SMOKE_N_TOTAL = 16
+TDP_LIMIT_W = 700.0
+
+
+def _measure_and_fit(smoke: bool):
+    samples = measure_all(smoke=smoke, seed=0)
+    table, report = fit_table(samples, source="bench")
+    return samples, table, report
+
+
+def _latency_shift(table) -> tuple:
+    """Max relative latency change (fitted vs identity) over bundled
+    NPUs x phases on QWEN3-32B/OSWorld — the acceptance number: a
+    non-identity table must move predicted cycles on a real trace."""
+    shift = 0.0
+    where = ""
+    for npu in (p1_npu(), d1_npu(), baseline_npu()):
+        for phase in (Phase.PREFILL, Phase.DECODE):
+            base = evaluate(npu, QWEN3_32B, OSWORLD_LIBREOFFICE, phase)
+            cal = evaluate(npu, QWEN3_32B, OSWORLD_LIBREOFFICE, phase,
+                           calibration=table)
+            rel = abs(cal.latency_s - base.latency_s) / base.latency_s
+            if rel > shift:
+                shift = rel
+                where = f"{npu.name}/{phase.name.lower()}"
+    return shift, where
+
+
+def _searched_calibrated(table, n_total: int):
+    """Seeded GP+EHVI sweep with the fitted table on the objective;
+    returns (best feasible Observation, objective)."""
+    obj = Objective(QWEN3_32B, OSWORLD_LIBREOFFICE, Phase.PREFILL,
+                    tdp_limit_w=TDP_LIMIT_W, calibration=table)
+    init = shared_init(obj, SEARCH_N_INIT, seed=SEARCH_SEED)
+    res = run_mobo(obj, n_total=n_total, seed=SEARCH_SEED, init=list(init))
+    feas = [o for o in res.observations if o.f is not None]
+    best = max(feas, key=lambda o: o.f[0], default=None)
+    return best, obj
+
+
+def run(smoke: bool = False) -> list:
+    out = []
+    (samples, table, report), fit_us = timed(_measure_and_fit, smoke)
+    classes = report["classes"]
+    out.append(row(
+        "calibration_fit", fit_us,
+        f"fit_err={report['fit_err']:.3f} classes={len(classes)} "
+        f"samples={report['n_samples']} digest={table.digest()}"))
+    for name in sorted(classes):
+        c = classes[name]
+        out.append(row(
+            f"calibration_class_{name.replace('/', '_')}", 0.0,
+            f"eff={c['efficiency']:.1f} setup={c['setup_cycles']:.0f}cyc "
+            f"rel_rms={c['rel_rms']:.3f} n={c['n_samples']}"))
+    # coverage: measured classes vs what the bundled trace emits
+    emitted = trace_geometry_classes(QWEN3_32B, OSWORLD_LIBREOFFICE,
+                                     p1_npu().quant)
+    measured = {name for name, _, _ in table.entries}
+    missing = sorted(set(emitted) - measured)
+    out.append(row(
+        "calibration_coverage", 0.0,
+        f"emitted={len(emitted)} measured={len(set(emitted) & measured)} "
+        f"identity={','.join(missing) if missing else 'none'}"))
+    # shift: the fitted table must move a bundled-trace prediction
+    (shift, where), shift_us = timed(_latency_shift, table)
+    out.append(row(
+        "calibration_shift", shift_us,
+        f"max_rel_latency_shift={shift:.3f} at {where}"))
+    # searched system: the table threads through the jitted batch
+    # path + cache + searcher end-to-end
+    n_total = SMOKE_N_TOTAL if smoke else SEARCH_N_TOTAL
+    (best, obj), search_us = timed(_searched_calibrated, table, n_total)
+    tokj = None if best is None else best.f[0]
+    out.append(row(
+        "calibration_searched", search_us,
+        (f"no feasible design in {n_total} evals" if best is None else
+         f"tokJ={tokj:.3f} (seed={SEARCH_SEED}, N={n_total}, "
+         f"{obj.n_evals} evals, calibrated)")))
+    merge_bench_json("calibration", {
+        "smoke": smoke,
+        "us_per_run": fit_us,
+        "fit_err": report["fit_err"],
+        "n_samples": report["n_samples"],
+        "digest": table.digest(),
+        "classes": {name: {"efficiency": c["efficiency"],
+                           "setup_cycles": c["setup_cycles"],
+                           "rel_rms": c["rel_rms"]}
+                    for name, c in sorted(classes.items())},
+        "shift": shift,
+        "shift_at": where,
+        "n_total": n_total,
+        "seed": SEARCH_SEED,
+        "search_us": search_us,
+        "tokens_per_joule": tokj,
+    })
+    return out

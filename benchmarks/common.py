@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import gc
 import json
 import os
 import sys
@@ -65,12 +66,28 @@ def merge_bench_json(key: str, payload: dict) -> None:
 
 
 def timed(fn, *args, repeat: int = 1, **kwargs):
-    """(result, microseconds per call)."""
-    t0 = time.perf_counter()
-    out = None
-    for _ in range(repeat):
-        out = fn(*args, **kwargs)
-    dt = (time.perf_counter() - t0) / repeat
+    """(result, microseconds per call).
+
+    Cyclic GC is drained before the clock starts and suspended inside
+    the measured region (re-enabled after, pyperf-style).  Without
+    this, whether a full gen-2 collection of the process's accumulated
+    heap (jit caches, evaluation caches) lands inside a short timed
+    region depends on the *allocation phase* — e.g. how many objects
+    parsing an unrelated JSON happened to create earlier — which made
+    the cheap method timings under ``--check`` fail nondeterministically
+    at 15-30x their true cost."""
+    was_enabled = gc.isenabled()
+    gc.collect()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        out = None
+        for _ in range(repeat):
+            out = fn(*args, **kwargs)
+        dt = (time.perf_counter() - t0) / repeat
+    finally:
+        if was_enabled:
+            gc.enable()
     return out, dt * 1e6
 
 

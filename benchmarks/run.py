@@ -48,12 +48,18 @@ search: the seeded searched fleet's tokens/joule must beat BOTH the
 committed baseline and a fresh naive replication of the hand-designed
 system at the same power budget/rates/SLOs, and the jitted
 fleet-pool scoring must stay under `SERVING_POOL_S_CEILING` seconds
-and `SERVING_OVERHEAD_MAX` x the bare system path.
+and `SERVING_OVERHEAD_MAX` x the bare system path.  The
+``calibration`` row (bench_calibration) gates the kernel-measured
+perfmodel factors: the fitted per-geometry-class efficiency/setup
+table must keep its max normalized residual under
+`CAL_FIT_ERR_CEILING`, still shift at least one bundled-trace
+prediction (shift > 0 — a no-op table means the calibration threading
+broke), and finish within the timing tolerance.
 Refresh the baselines after an intentional perf change with::
 
   BENCH_DSE_JSON=benchmarks/BENCH_dse.json \\
       PYTHONPATH=src python -m benchmarks.run \\
-      --only "fig6,fig9,table7,fleet1000,serving" --smoke
+      --only "fig6,fig9,table7,fleet1000,serving,calibration" --smoke
 """
 
 import argparse
@@ -78,6 +84,7 @@ MODULES = [
     ("fleet1000_batched_search", "benchmarks.bench_fleet"),
     ("serving_fleet_search", "benchmarks.bench_serving"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("calibration", "benchmarks.bench_calibration"),
 ]
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_dse.json")
@@ -114,6 +121,14 @@ FLEET1000_US_CEILING = 540e6
 # layer may not re-quadratize pool scoring.
 SERVING_POOL_S_CEILING = 2.0
 SERVING_OVERHEAD_MAX = 1.2
+
+# Fit-quality ceiling for the kernel calibration row (bench_calibration):
+# the max per-geometry-class normalized residual ||pred - y|| / ||y|| of
+# the fitted efficiency/setup factors.  Observed ~0.44 (smoke) / ~0.58
+# (full) under the Pallas interpreter on CI hardware; a fit above this
+# means the measured kernel timings no longer look affine in the
+# analytical cycle counts — a kernel or harness regression.
+CAL_FIT_ERR_CEILING = 0.85
 
 
 def compare_timings(base: dict, fresh: dict, tolerance: float) -> list:
@@ -268,6 +283,38 @@ def compare_serving(base: dict, fresh: dict, tolerance: float):
             g["us_per_run"], limit, ok)
 
 
+def compare_calibration(base: dict, fresh: dict, tolerance: float):
+    """`calibration` verdict (the kernel-measured perfmodel factors),
+    or None when the baseline predates it.
+
+    Returns (fresh_fit_err, err_ceiling, fresh_shift, fresh_us,
+    limit_us, ok): the fresh fit's max per-class normalized residual
+    must stay under the hard `CAL_FIT_ERR_CEILING` (an affine fit of
+    measured kernel cycles against the analytical model — blowing past
+    the ceiling means a kernel or harness regression, not noise), the
+    fitted table must still *shift* a bundled-trace prediction
+    (shift > 0: a table that moves nothing is a threading regression),
+    and the measure+fit runtime must stay within ``tolerance x`` of the
+    baseline.  Mirrors `_compare_searched_system`'s missing-entry
+    (limit = -1) convention; no budget key to mismatch — the shape
+    ladders are fixed."""
+    b = base.get("calibration")
+    if not b or not isinstance(b.get("fit_err"), (int, float)):
+        return None
+    g = fresh.get("calibration")
+    if not g or not isinstance(g.get("fit_err"), (int, float)):
+        return (float("nan"), CAL_FIT_ERR_CEILING, float("nan"),
+                float("nan"), -1.0, False)
+    shift = g.get("shift")
+    shift = float(shift) if isinstance(shift, (int, float)) else 0.0
+    limit = b["us_per_run"] * tolerance
+    ok = (g["fit_err"] <= CAL_FIT_ERR_CEILING
+          and shift > 0.0
+          and g["us_per_run"] <= limit)
+    return (g["fit_err"], CAL_FIT_ERR_CEILING, shift,
+            g["us_per_run"], limit, ok)
+
+
 def check_perf(baseline_path: str, tolerance: float) -> int:
     """Fresh --smoke DSE timings vs the committed baseline.
 
@@ -294,8 +341,8 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
     prev_json_path = os.environ.get("BENCH_DSE_JSON")
     os.environ["BENCH_DSE_JSON"] = fresh_path
     try:
-        from benchmarks import (bench_dllm, bench_dse, bench_extreme,
-                                bench_fleet, bench_serving)
+        from benchmarks import (bench_calibration, bench_dllm, bench_dse,
+                                bench_extreme, bench_fleet, bench_serving)
         for line in bench_dse.run(smoke=True):
             print(line)
         if base.get("extreme_system"):   # gate the system search too
@@ -309,6 +356,9 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
                 print(line)
         if base.get("serving"):          # ... and the serving fleet
             for line in bench_serving.run(smoke=True):
+                print(line)
+        if base.get("calibration"):      # ... and the kernel factors
+            for line in bench_calibration.run(smoke=True):
                 print(line)
         with open(fresh_path) as f:
             fresh = json.load(f)
@@ -356,7 +406,7 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
     # rewrites BENCH_dse.json from scratch, so refreshing one searched-
     # system key alone would clobber the others and silently disable
     # their gates on the next --check
-    refresh_only = "fig6,fig9,table7,fleet1000,serving"
+    refresh_only = "fig6,fig9,table7,fleet1000,serving,calibration"
     for key, verdict in (("extreme_system", ext), ("dllm_system", dll)):
         if verdict is None:
             continue
@@ -439,6 +489,29 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
                 failures.append(
                     f"serving: {got_us/1e6:.2f}s/run > {tolerance:g}x "
                     f"baseline {limit_us/tolerance/1e6:.2f}s/run")
+    cal = compare_calibration(base, fresh, tolerance)
+    if cal is not None:
+        fit_err, ceiling, shift, got_us, limit_us, ok = cal
+        if limit_us < 0:
+            failures.append("calibration: missing from fresh run")
+        else:
+            print(f"check_calibration,{got_us:.1f},"
+                  f"fit_err={fit_err:.3f} ceiling={ceiling:g} "
+                  f"shift={shift:.3f} limit_us={limit_us:.1f} "
+                  f"{'ok' if ok else 'FAIL'}")
+            if fit_err > ceiling:
+                failures.append(
+                    f"calibration: fit_err {fit_err:.3f} over the "
+                    f"{ceiling:g} ceiling (measured kernel cycles no "
+                    f"longer affine in the analytical model)")
+            if not (shift > 0.0):
+                failures.append(
+                    "calibration: fitted table shifts no bundled-trace "
+                    "prediction (calibration threading regression)")
+            if got_us > limit_us:
+                failures.append(
+                    f"calibration: {got_us/1e6:.2f}s/run > {tolerance:g}x "
+                    f"baseline {limit_us/tolerance/1e6:.2f}s/run")
     if failures:
         print("PERF REGRESSION:\n  " + "\n  ".join(failures), file=sys.stderr)
         return 1
@@ -449,6 +522,7 @@ def check_perf(baseline_path: str, tolerance: float) -> int:
           + (", dllm_system above floor" if dll is not None else "")
           + (", fleet1000 above floor" if flt is not None else "")
           + (", serving above floor" if srv is not None else "")
+          + (", calibration within ceiling" if cal is not None else "")
           + ")")
     return 0
 

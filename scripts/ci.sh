@@ -3,6 +3,10 @@
 #
 #   scripts/ci.sh
 #
+# 0. artifact guard: fails when `git ls-files` matches Python
+#    bytecode or other build artifacts (__pycache__/, *.pyc,
+#    .pytest_cache/, *.egg-info/, .DS_Store) — committed bytecode
+#    shadows source edits and bloats diffs, so it can never land.
 # 1. tier-1: the full pytest suite (ROADMAP "Tier-1 verify").  When the
 #    pytest-cov plugin is importable, tier-1 additionally enforces a
 #    branch-coverage floor on the analytical core (`repro.core`); on
@@ -49,6 +53,18 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 COV_FLOOR="${COV_FLOOR:-70}"
+
+echo "== committed-artifact guard (no bytecode/build caches in git) =="
+bad_artifacts="$(git ls-files | grep -E \
+    '(^|/)__pycache__(/|$)|\.py[co]$|(^|/)\.pytest_cache(/|$)|\.egg-info(/|$)|(^|/)\.DS_Store$' \
+    || true)"
+if [ -n "${bad_artifacts}" ]; then
+    echo "ERROR: build artifacts are committed to git:" >&2
+    echo "${bad_artifacts}" >&2
+    echo "Remove them (git rm --cached <file>) — .gitignore already" \
+         "excludes these patterns." >&2
+    exit 1
+fi
 
 echo "== tier-1 tests =="
 if python -c "import pytest_cov" >/dev/null 2>&1; then

@@ -16,8 +16,13 @@ The paper's primary contribution, as a composable library:
               layer-group + decode-phase splits (Sections 5.3/5.5)
   dse         Sobol + GP/EHVI MOBO + NSGA-II + MO-TPE + random (Section 4.4)
   quant       MX formats + accuracy proxy (Table 3)
+  calibration measured Pallas-kernel factors -> CalibrationTable threaded
+              through gemm_cycles/perfmodel/perfmodel_jit (identity by
+              default; see docs/calibration.md)
 """
 
+from .calibration import (CalibrationTable, CalSample, fit_table,
+                          geometry_class, measure_all)
 from .compute import ComputeConfig, Dataflow, gemm_cycles, vector_seconds
 from .dataflow import (BandwidthPriority, SoftwareStrategy, StoragePriority,
                        place_data)

@@ -1,0 +1,537 @@
+"""Kernel-measured calibration of the analytical compute model.
+
+The perfmodel's GEMM term (`compute.gemm_cycles`) is a first-principles
+systolic-array count.  This module closes the model-vs-silicon loop the
+WSE-2 way (SNIPPETS.md: measured / pure-FMACS cycles = one overhead
+factor + a per-pass setup constant predicts real cycles within 1.5%):
+
+  1. run the repo's Pallas kernels (flash_attention, decode_attention,
+     mx_quant) plus an XLA matmul proxy for weight GEMMs across the
+     geometries `LayerTraffic` actually emits for the bundled traces
+     (interpret mode on CPU, Mosaic on TPU);
+  2. fit, per *geometry class*, measured_cycles ~= efficiency *
+     analytical_cycles + setup_cycles by least squares (efficiency
+     clamped >= 1, setup >= 0 — the model is a lower bound);
+  3. package the factors as a `CalibrationTable` that
+     `perfmodel`/`perfmodel_jit` thread through `gemm_cycles`.
+
+Identity convention: the default table (and `calibration=None`
+everywhere downstream) applies efficiency 1.0 / setup 0.0, and
+`x * 1.0 + 0.0 == x` exactly in IEEE-754 for the non-negative cycle
+counts involved — so jit-vs-scalar parity and every sha-pinned search
+trajectory survive byte-identically unless a caller opts into a fitted
+table (per-`Objective`; see docs/calibration.md).
+
+Geometry classes key on what distinguishes kernels, not exact shapes:
+the operand data classes decide the role (weight GEMM / attention QK /
+attention PV / other activation GEMM) and the M extent decides the
+narrow-vs-wide bucket (decode-style single-token panels vs prefill
+panels).  Factors measured on one shape of a class transfer to the
+rest of the class; classes never measured stay identity.
+
+Measurement timing uses `time.perf_counter` (the one timer the
+`repro.analysis` wall-clock rule sanctions) around `block_until_ready`,
+after a warmup call that eats compilation.  On CPU the kernels run
+through the Pallas interpreter, so fitted factors are orders of
+magnitude above 1 — they validate the harness end-to-end; factors that
+anchor tok/J claims to silicon need a TPU run (docs/calibration.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import json
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .compute import ComputeConfig, Dataflow, gemm_cycles, vector_cycles
+from .workload import (CLASS_CODES, DataClass, GemmOp, ModelDims, Phase,
+                       Trace, layer_traffic_cached, lm_head_traffic_cached)
+
+__all__ = [
+    "NARROW_M", "CalibrationTable", "CalSample", "geometry_class",
+    "geometry_class_of_gemm", "fit_table", "trace_geometry_classes",
+    "measure_flash_attention", "measure_decode_attention",
+    "measure_matmul", "measure_mx_quant", "measure_all",
+]
+
+# M extents below this are "narrow" (decode-style single-token panels);
+# at/above it "wide" (prefill panels).  64 splits the bundled traces'
+# decode GEMMs (m = batch or group_size) from every prefill panel.
+NARROW_M = 64
+
+_WEIGHT = CLASS_CODES[DataClass.WEIGHT]     # 0
+_ACT = CLASS_CODES[DataClass.ACT]           # 1
+_KV = CLASS_CODES[DataClass.KV]             # 2
+_SCRATCH = CLASS_CODES[DataClass.SCRATCH]   # 3
+
+_ALL_DATAFLOWS = (Dataflow.WEIGHT_STATIONARY, Dataflow.INPUT_STATIONARY,
+                  Dataflow.OUTPUT_STATIONARY)
+
+# Side class for the MX quantization kernel: it is vector-unit work,
+# not a GEMM, so no `geometry_class` output ever collides with it —
+# its fitted factors ride along in the table for reporting only.
+MX_QUANT_CLASS = "mx_quant"
+
+
+def geometry_class(m: float, k: float, n: float, count: float = 1.0,
+                   a_code: int = _ACT, b_code: int = _WEIGHT,
+                   out_code: int = _ACT) -> str:
+    """Geometry-class key for one (m x k) @ (k x n) GEMM.
+
+    Role from the operand data classes (the same codes
+    `LayerTraffic.gemm_geometry` exports):
+
+      wgemm     B is a weight matrix (projections, FFN, router, lm head)
+      attn_qk   scores GEMM: KV-class B, scratch-class output
+      attn_pv   probs @ V: scratch-class A
+      actgemm   anything else (act @ act, e.g. xLSTM state updates)
+
+    Bucket from the M extent: "narrow" below `NARROW_M`, else "wide".
+    """
+    del k, n, count
+    if b_code == _WEIGHT:
+        role = "wgemm"
+    elif b_code == _KV and out_code == _SCRATCH:
+        role = "attn_qk"
+    elif a_code == _SCRATCH:
+        role = "attn_pv"
+    else:
+        role = "actgemm"
+    bucket = "narrow" if m < NARROW_M else "wide"
+    return f"{role}/{bucket}"
+
+
+def geometry_class_of_gemm(g: GemmOp) -> str:
+    return geometry_class(g.m, g.k, g.n, g.count,
+                          CLASS_CODES[g.a_class], CLASS_CODES[g.b_class],
+                          CLASS_CODES[g.out_class])
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationTable:
+    """Per-geometry-class (efficiency, setup_cycles) factors.
+
+    `entries` is a name-sorted tuple of (class_name, efficiency,
+    setup_cycles) triples — hashable, so tables key lru caches and
+    journal fingerprints.  Classes absent from `entries` are identity:
+    efficiency 1.0, setup 0.0 (`x * 1.0 + 0.0 == x` bit-exactly for
+    the non-negative cycle counts `gemm_cycles` produces).
+
+    Calibrated cycles = analytical_cycles * efficiency + setup_cycles,
+    with efficiency >= 1 and setup >= 0 enforced at construction: the
+    analytical count is a lower bound, a fit below it is noise.
+    """
+
+    entries: tuple = ()
+    source: str = "identity"
+
+    def __post_init__(self):
+        norm = []
+        seen = set()
+        for name, eff, setup in self.entries:
+            if name in seen:
+                raise ValueError(f"duplicate calibration class {name!r}")
+            seen.add(name)
+            eff = float(eff)
+            setup = float(setup)
+            if not (eff >= 1.0) or not np.isfinite(eff):
+                raise ValueError(
+                    f"efficiency for {name!r} must be finite >= 1.0 "
+                    f"(got {eff})")
+            if not (setup >= 0.0) or not np.isfinite(setup):
+                raise ValueError(
+                    f"setup_cycles for {name!r} must be finite >= 0.0 "
+                    f"(got {setup})")
+            norm.append((str(name), eff, setup))
+        norm.sort()
+        object.__setattr__(self, "entries", tuple(norm))
+        object.__setattr__(self, "_by_name",
+                           {e[0]: (e[1], e[2]) for e in norm})
+
+    @classmethod
+    def identity(cls) -> "CalibrationTable":
+        return cls()
+
+    @classmethod
+    def from_factors(cls, factors: dict,
+                     source: str = "fit") -> "CalibrationTable":
+        """factors: {class_name: (efficiency, setup_cycles)}."""
+        entries = tuple((name, eff, setup)
+                        for name, (eff, setup) in sorted(factors.items()))
+        return cls(entries=entries, source=source)
+
+    @property
+    def is_identity(self) -> bool:
+        return all(eff == 1.0 and setup == 0.0
+                   for _, eff, setup in self.entries)
+
+    def factors_for(self, class_name: str) -> tuple:
+        """(efficiency, setup_cycles) for a class; identity if absent."""
+        return self._by_name.get(class_name, (1.0, 0.0))
+
+    def factors_for_geometry(self, m, k, n, count=1.0, a_code=_ACT,
+                             b_code=_WEIGHT, out_code=_ACT) -> tuple:
+        return self.factors_for(
+            geometry_class(m, k, n, count, a_code, b_code, out_code))
+
+    def factors_for_gemm(self, g: GemmOp) -> tuple:
+        return self.factors_for(geometry_class_of_gemm(g))
+
+    def to_json(self) -> str:
+        """Canonical sorted-key JSON (round-trips via `from_json`)."""
+        return json.dumps(
+            {"source": self.source,
+             "entries": {name: {"efficiency": eff, "setup_cycles": setup}
+                         for name, eff, setup in self.entries}},
+            sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "CalibrationTable":
+        doc = json.loads(text)
+        entries = tuple(
+            (name, rec["efficiency"], rec["setup_cycles"])
+            for name, rec in sorted(doc.get("entries", {}).items()))
+        return cls(entries=entries, source=doc.get("source", "identity"))
+
+    def digest(self) -> str:
+        """Content hash — pins a table in journals / bench rows."""
+        return hashlib.sha256(self.to_json().encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class CalSample:
+    """One measured kernel run attributed to one geometry class."""
+
+    class_name: str
+    model_cycles: float      # analytical gemm_cycles at the fit config
+    measured_cycles: float   # wall time * clock (apportioned if fused)
+    detail: str = ""         # shape provenance, e.g. "flash b1 s256"
+
+
+def fit_table(samples: Sequence[CalSample],
+              source: str = "fit") -> tuple:
+    """Least-squares (efficiency, setup) per class -> (table, report).
+
+    Per class: measured ~= eff * model + setup, solved by `np.linalg
+    .lstsq` (single-sample classes get a pure ratio), then clamped to
+    the table's eff >= 1 / setup >= 0 domain.  The report carries the
+    post-clamp normalized residual per class — ||pred - y|| / ||y||,
+    which stays bounded when a class's smallest shapes are dispatch-
+    overhead-dominated — and its max (`fit_err`), the number the
+    `calibration` bench row gates.
+    """
+    by_class: dict = {}
+    for s in samples:
+        by_class.setdefault(s.class_name, []).append(s)
+    factors = {}
+    classes_report = {}
+    fit_err = 0.0
+    for name in sorted(by_class):
+        grp = by_class[name]
+        x = np.array([s.model_cycles for s in grp], dtype=np.float64)
+        y = np.array([s.measured_cycles for s in grp], dtype=np.float64)
+        if len(grp) == 1:
+            eff = float(y[0] / x[0])
+            setup = 0.0
+        else:
+            a_mat = np.stack([x, np.ones_like(x)], axis=1)
+            coef, _, _, _ = np.linalg.lstsq(a_mat, y, rcond=None)
+            eff, setup = float(coef[0]), float(coef[1])
+        if setup < 0.0:
+            # refit slope through the origin before clamping it away
+            eff = float(np.sum(x * y) / np.sum(x * x))
+            setup = 0.0
+        if eff < 1.0:
+            eff = 1.0
+            setup = max(0.0, float(np.mean(y - x)))
+        pred = eff * x + setup
+        rel_rms = float(np.sqrt(np.sum((pred - y) ** 2)
+                                / np.sum(y ** 2)))
+        factors[name] = (eff, setup)
+        classes_report[name] = {
+            "efficiency": eff, "setup_cycles": setup,
+            "n_samples": len(grp), "rel_rms": rel_rms,
+        }
+        fit_err = max(fit_err, rel_rms)
+    table = CalibrationTable.from_factors(factors, source=source)
+    report = {"classes": classes_report, "fit_err": fit_err,
+              "n_samples": len(samples), "source": source}
+    return table, report
+
+
+def trace_geometry_classes(dims: ModelDims, trace: Trace, quant,
+                           batches: Sequence[int] = (1, 8)) -> dict:
+    """{class_name: GEMM count} a bundled (model, trace) emits across
+    prefill + decode layer passes and the lm head — the coverage map
+    the bench reports against the measured classes."""
+    out: dict = {}
+
+    def tally(traffic):
+        for g in traffic.gemms:
+            name = geometry_class_of_gemm(g)
+            out[name] = out.get(name, 0) + 1
+
+    for b in batches:
+        tally(layer_traffic_cached(dims, Phase.PREFILL, int(b),
+                                   trace.prompt_tokens, quant))
+        tally(layer_traffic_cached(
+            dims, Phase.DECODE, int(b),
+            trace.prompt_tokens + trace.gen_tokens // 2, quant))
+        tally(lm_head_traffic_cached(dims, int(b), 1, quant))
+    return dict(sorted(out.items()))
+
+
+# ---------------------------------------------------------------------------
+# Measurement harness
+# ---------------------------------------------------------------------------
+
+def _interpret_flag(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return bool(interpret)
+    from ..kernels.ops import _interpret_default
+    return _interpret_default()
+
+
+def _best_seconds(fn, args, repeat: int) -> float:
+    """min-of-`repeat` wall seconds for fn(*args), after one warmup
+    call that absorbs compilation; `time.perf_counter` is the
+    repro.analysis-sanctioned timer."""
+    import jax
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(max(1, repeat)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _min_cycles(cfg: ComputeConfig, m: int, k: int, n: int,
+                count: float) -> float:
+    """Best-dataflow analytical cycles — mirrors the perfmodel's
+    attention-GEMM argmin (`_gemm_dataflow`)."""
+    return min(gemm_cycles(cfg, m, k, n, df, count=count).cycles
+               for df in _ALL_DATAFLOWS)
+
+
+def _attention_samples(cfg: ComputeConfig, kind: str, seconds: float,
+                       qk: tuple, pv: tuple, detail: str) -> list:
+    """Apportion one fused attention kernel's measured time between its
+    QK and PV GEMM classes by analytical-cycle share (the softmax is
+    vector-unit work the matrix-side factors deliberately absorb)."""
+    del kind
+    measured = seconds * cfg.clock_ghz * 1e9
+    x_qk = _min_cycles(cfg, *qk[:3], qk[3])
+    x_pv = _min_cycles(cfg, *pv[:3], pv[3])
+    share = x_qk / (x_qk + x_pv)
+    qk_cls = geometry_class(qk[0], qk[1], qk[2], qk[3],
+                            a_code=_ACT, b_code=_KV, out_code=_SCRATCH)
+    pv_cls = geometry_class(pv[0], pv[1], pv[2], pv[3],
+                            a_code=_SCRATCH, b_code=_KV, out_code=_ACT)
+    return [
+        CalSample(qk_cls, x_qk, measured * share, detail=detail + " qk"),
+        CalSample(pv_cls, x_pv, measured * (1.0 - share),
+                  detail=detail + " pv"),
+    ]
+
+
+# (batch, seq) prefill shapes: seq must divide block_q = block_k = 128.
+FLASH_SHAPES = ((1, 128), (1, 256), (1, 384))
+# (batch, cache_len) decode shapes: cache_len must divide block_k = 512.
+DECODE_SHAPES = ((1, 512), (1, 1024), (1, 2048))
+# (m, k=n) weight-GEMM proxy shapes per bucket.
+MATMUL_NARROW_SHAPES = ((16, 512), (16, 1024), (16, 1536))
+MATMUL_WIDE_SHAPES = ((256, 512), (256, 1024), (256, 1536))
+# (rows, cols) MX quantization shapes: cols % 32 == 0.
+MX_SHAPES = ((256, 512), (512, 1024), (1024, 2048))
+
+
+def measure_flash_attention(cfg: ComputeConfig,
+                            shapes: Sequence[tuple] = FLASH_SHAPES,
+                            *, n_q_heads: int = 4, n_kv_heads: int = 2,
+                            head_dim: int = 64,
+                            interpret: Optional[bool] = None,
+                            repeat: int = 3, seed: int = 0) -> list:
+    """Prefill SDPA: attn_qk/wide + attn_pv/wide samples.
+
+    The workload model's causal-prefill GEMM pair for q_len = kv_len =
+    S is (m = group*S/2, dh, S) and (m, S, dh), count = batch*Hkv —
+    the measured kernel time covers both plus the online softmax.
+    """
+    import functools as _ft
+
+    import jax
+
+    from ..kernels.flash_attention import flash_attention
+    interp = _interpret_flag(interpret)
+    fn = jax.jit(_ft.partial(flash_attention, n_kv_heads=n_kv_heads,
+                             causal=True, interpret=interp))
+    rng = np.random.default_rng(seed)
+    group = n_q_heads // n_kv_heads
+    out = []
+    for b, s in shapes:
+        q = rng.standard_normal((b, s, n_q_heads, head_dim),
+                                dtype=np.float32)
+        k = rng.standard_normal((b, s, n_kv_heads, head_dim),
+                                dtype=np.float32)
+        v = rng.standard_normal((b, s, n_kv_heads, head_dim),
+                                dtype=np.float32)
+        sec = _best_seconds(fn, (q, k, v), repeat)
+        m = int(group * s * 0.5)
+        count = float(b * n_kv_heads)
+        out += _attention_samples(
+            cfg, "flash", sec,
+            (m, head_dim, s, count), (m, s, head_dim, count),
+            detail=f"flash b{b} s{s}")
+    return out
+
+
+def measure_decode_attention(cfg: ComputeConfig,
+                             shapes: Sequence[tuple] = DECODE_SHAPES,
+                             *, n_q_heads: int = 8, n_kv_heads: int = 2,
+                             head_dim: int = 64,
+                             interpret: Optional[bool] = None,
+                             repeat: int = 3, seed: int = 0) -> list:
+    """Decode SDPA: attn_qk/narrow + attn_pv/narrow samples (m = the
+    GQA group size, well under NARROW_M)."""
+    import functools as _ft
+
+    import jax
+
+    from ..kernels.decode_attention import decode_attention
+    interp = _interpret_flag(interpret)
+    fn = jax.jit(_ft.partial(decode_attention, n_kv_heads=n_kv_heads,
+                             interpret=interp))
+    rng = np.random.default_rng(seed)
+    group = n_q_heads // n_kv_heads
+    out = []
+    for b, t in shapes:
+        q = rng.standard_normal((b, n_q_heads, head_dim),
+                                dtype=np.float32)
+        k = rng.standard_normal((b, t, n_kv_heads, head_dim),
+                                dtype=np.float32)
+        v = rng.standard_normal((b, t, n_kv_heads, head_dim),
+                                dtype=np.float32)
+        ts = np.full((b,), t, dtype=np.int32)
+        sec = _best_seconds(fn, (q, k, v, ts), repeat)
+        count = float(b * n_kv_heads)
+        out += _attention_samples(
+            cfg, "decode", sec,
+            (group, head_dim, t, count), (group, t, head_dim, count),
+            detail=f"decode b{b} t{t}")
+    return out
+
+
+def measure_matmul(cfg: ComputeConfig,
+                   shapes: Optional[Sequence[tuple]] = None,
+                   *, interpret: Optional[bool] = None,
+                   repeat: int = 3, seed: int = 0) -> list:
+    """Weight-GEMM proxy (wgemm/narrow + wgemm/wide): a jitted XLA
+    matmul — the repo has no Pallas GEMM kernel, and on-TPU XLA GEMMs
+    are the MXU path the analytical weight term models.  `interpret`
+    is accepted for signature symmetry and ignored."""
+    import jax
+    import jax.numpy as jnp
+    del interpret
+    fn = jax.jit(lambda a, b: jnp.dot(a, b))
+    rng = np.random.default_rng(seed)
+    out = []
+    all_shapes = (tuple(shapes) if shapes is not None
+                  else MATMUL_NARROW_SHAPES + MATMUL_WIDE_SHAPES)
+    for m, kn in all_shapes:
+        a = rng.standard_normal((m, kn), dtype=np.float32)
+        b = rng.standard_normal((kn, kn), dtype=np.float32)
+        sec = _best_seconds(fn, (a, b), repeat)
+        # weight GEMMs run the strategy dataflow; WS is the canonical
+        # default every bundled strategy uses for weights
+        x = gemm_cycles(cfg, m, kn, kn,
+                        Dataflow.WEIGHT_STATIONARY).cycles
+        out.append(CalSample(
+            geometry_class(m, kn, kn, b_code=_WEIGHT),
+            x, sec * cfg.clock_ghz * 1e9,
+            detail=f"matmul m{m} k{kn} n{kn}"))
+    return out
+
+
+def measure_mx_quant(cfg: ComputeConfig,
+                     shapes: Sequence[tuple] = MX_SHAPES,
+                     *, interpret: Optional[bool] = None,
+                     repeat: int = 3, seed: int = 0) -> list:
+    """MX quantization kernel under the side class `mx_quant` (vector
+    work — never keyed by a GEMM, reported for kernel coverage).  The
+    analytical proxy charges ~6 vector lane-ops per element (absmax
+    reduce, log2/scale, clip, round)."""
+    import jax
+
+    from ..kernels.mx_quant import mx_quantize
+    interp = _interpret_flag(interpret)
+    fn = jax.jit(lambda x: mx_quantize(x, interpret=interp))
+    rng = np.random.default_rng(seed)
+    out = []
+    for rows, cols in shapes:
+        x = rng.standard_normal((rows, cols), dtype=np.float32)
+        sec = _best_seconds(fn, (x,), repeat)
+        model = vector_cycles(cfg, float(rows * cols), 6.0)
+        out.append(CalSample(
+            MX_QUANT_CLASS, model, sec * cfg.clock_ghz * 1e9,
+            detail=f"mx_quant {rows}x{cols}"))
+    return out
+
+
+def measure_all(cfg: Optional[ComputeConfig] = None, *,
+                smoke: bool = False,
+                interpret: Optional[bool] = None,
+                seed: int = 0) -> list:
+    """All kernels' samples at the default shape ladders.
+
+    `smoke` drops to min-of-2 timing (the warmup call still eats
+    compilation); the shape ladders stay — the fit needs >= 3 points
+    per class for the residual to mean anything.
+    """
+    cfg = cfg or ComputeConfig()
+    repeat = 2 if smoke else 5
+    samples = []
+    samples += measure_flash_attention(cfg, interpret=interpret,
+                                       repeat=repeat, seed=seed)
+    samples += measure_decode_attention(cfg, interpret=interpret,
+                                        repeat=repeat, seed=seed)
+    samples += measure_matmul(cfg, repeat=repeat, seed=seed)
+    samples += measure_mx_quant(cfg, interpret=interpret,
+                                repeat=repeat, seed=seed)
+    return samples
+
+
+@functools.lru_cache(maxsize=None)
+def _identity_arrays(nb: int, g: int) -> tuple:
+    eff = np.ones((nb, g), dtype=np.float64)
+    eff.setflags(write=False)
+    setup = np.zeros((nb, g), dtype=np.float64)
+    setup.setflags(write=False)
+    return eff, setup
+
+
+def calibration_arrays(calibration: Optional[CalibrationTable],
+                       gm_num: np.ndarray,
+                       gm_cls: np.ndarray) -> tuple:
+    """(efficiency [NB, G], setup [NB, G]) arrays for a phase table's
+    per-batch-choice GEMM geometry — the numpy-side gather that feeds
+    the jitted program (perfmodel_jit indexes them with the dynamic
+    batch choice).  Identity (ones/zeros) when `calibration` is None.
+    """
+    nb, g = gm_num.shape[0], gm_num.shape[1]
+    if calibration is None or calibration.is_identity:
+        return _identity_arrays(nb, g)
+    eff = np.ones((nb, g), dtype=np.float64)
+    setup = np.zeros((nb, g), dtype=np.float64)
+    for bi in range(nb):
+        for gi in range(g):
+            m, k, n, count, _ = gm_num[bi, gi]
+            a_c, b_c, o_c = gm_cls[gi]
+            eff[bi, gi], setup[bi, gi] = calibration.factors_for_geometry(
+                m, k, n, count, int(a_c), int(b_c), int(o_c))
+    return eff, setup

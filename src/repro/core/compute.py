@@ -61,7 +61,8 @@ class GemmTiming:
 
 def gemm_cycles(cfg: ComputeConfig, m: int, k: int, n: int,
                 dataflow: Dataflow = Dataflow.WEIGHT_STATIONARY,
-                count: float = 1.0) -> GemmTiming:
+                count: float = 1.0, eff_factor: float = 1.0,
+                setup_cycles: float = 0.0) -> GemmTiming:
     """Systolic GEMM latency under a dataflow strategy.
 
     The stationary operand is double-buffered inside the array (ping-pong
@@ -76,6 +77,12 @@ def gemm_cycles(cfg: ComputeConfig, m: int, k: int, n: int,
     extent is smaller than the array: floor(R / rows) instances execute
     simultaneously on disjoint row bands (GQA attention with head_dim 64
     on a 2048-row array packs 32 heads per pass).
+
+    `eff_factor` / `setup_cycles` apply a measured calibration
+    (core.calibration): cycles = analytical * eff_factor + setup_cycles.
+    The identity (1.0, 0.0) is bit-exact — `x * 1.0 + 0.0 == x` for the
+    non-negative counts here — and degenerate GEMMs skip calibration
+    entirely (zero work costs zero regardless of per-pass setup).
     """
     if min(m, k, n) <= 0 or count <= 0:
         return GemmTiming(0.0, 1.0, 0.0, 0.0)
@@ -102,6 +109,7 @@ def gemm_cycles(cfg: ComputeConfig, m: int, k: int, n: int,
         tiles = math.ceil(rows_used / r) * math.ceil(n / c)
         stream = k
     cycles = (float(tiles) * stream + fill) * eff_count
+    cycles = cycles * eff_factor + setup_cycles
     macs = float(m) * k * n * count
     util = min(1.0, macs / (cycles * cfg.n_pe))
     return GemmTiming(cycles=cycles, utilization=util, macs=macs,

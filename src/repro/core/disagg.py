@@ -357,15 +357,18 @@ def _combine_phase_results(pre: PhaseResult, dec: PhaseResult,
 
 
 def evaluate_system(npus: list, topo: SystemTopology, dims: ModelDims,
-                    trace: Trace) -> SystemResult:
+                    trace: Trace, calibration=None) -> SystemResult:
     """End-to-end K-role evaluation of one device tuple (scalar path;
-    raises InfeasibleConfig when any role cannot run its sub-workload)."""
+    raises InfeasibleConfig when any role cannot run its sub-workload).
+    `calibration` threads a measured GEMM-factor table
+    (core.calibration) into every role's evaluation; None = identity."""
     if len(npus) != topo.k:
         raise ValueError(f"{topo.name} needs {topo.k} devices, "
                          f"got {len(npus)}")
     results = [
         evaluate(npu, role.dims_for(dims), trace, role.phase,
-                 context_override=role.context_for(trace))
+                 context_override=role.context_for(trace),
+                 calibration=calibration)
         for role, npu in zip(topo.roles, npus)
     ]
     return _combine_system(topo, results, [n.quant for n in npus],
@@ -374,7 +377,8 @@ def evaluate_system(npus: list, topo: SystemTopology, dims: ModelDims,
 
 def evaluate_system_batch(systems: list, topo: SystemTopology,
                           dims: ModelDims, trace: Trace,
-                          caches: Optional[list] = None) -> list:
+                          caches: Optional[list] = None,
+                          calibration=None) -> list:
     """Batched `evaluate_system` over K-device tuples.
 
     Built on `perfmodel.evaluate_batch` (the jitted structure-of-arrays
@@ -392,7 +396,11 @@ def evaluate_system_batch(systems: list, topo: SystemTopology,
     (hand-built configs must use distinct names, as the Table 6 ones
     do).  Passing `caches` (one dict per role) memoizes per-(role,
     phase) results across calls — `dse.runner.SystemObjective` threads
-    its role caches through every generation.
+    its role caches through every generation.  `calibration` threads a
+    measured GEMM-factor table into every role's evaluation; role
+    caches memoize by config name only, so a caller mixing tables must
+    supply per-table caches (`SystemObjective` holds one table for the
+    life of its caches).
     """
     caches = [{} for _ in topo.roles] if caches is None else caches
     if len(caches) != topo.k:
@@ -403,7 +411,8 @@ def evaluate_system_batch(systems: list, topo: SystemTopology,
                 if s[ri].name not in cache}
         evaluate_batch(list(miss.values()), role.dims_for(dims), trace,
                        role.phase, context_override=role.context_for(trace),
-                       keys=list(miss), cache=cache)
+                       keys=list(miss), cache=cache,
+                       calibration=calibration)
     out = []
     for s in systems:
         results = [caches[ri][cfg.name] for ri, cfg in enumerate(s)]
@@ -428,14 +437,16 @@ def evaluate_disaggregated(prefill_npu: NPUConfig, decode_npu: NPUConfig,
 
 def evaluate_disagg_batch(pairs: list, dims: ModelDims, trace: Trace,
                           pre_cache: Optional[dict] = None,
-                          dec_cache: Optional[dict] = None) -> list:
+                          dec_cache: Optional[dict] = None,
+                          calibration=None) -> list:
     """Batched `evaluate_disaggregated` over (prefill, decode) NPU pairs:
     `evaluate_system_batch` on the `PD_PAIR` topology, returning
     DisaggResults (None for infeasible pairs).  `pre_cache`/`dec_cache`
     are the two role caches."""
     caches = [{} if pre_cache is None else pre_cache,
               {} if dec_cache is None else dec_cache]
-    out = evaluate_system_batch(pairs, PD_PAIR, dims, trace, caches=caches)
+    out = evaluate_system_batch(pairs, PD_PAIR, dims, trace, caches=caches,
+                                calibration=calibration)
     return [None if r is None else _pair_result(r) for r in out]
 
 

@@ -96,6 +96,13 @@ def objective_identity(objective, seed: Optional[int] = None) -> dict:
     mix = getattr(obj, "mix", None)
     if mix is not None:
         ident["mix"] = mix.identity()
+    # calibrated objectives pin the factor table's content hash: a
+    # journal written under one set of measured GEMM factors must not
+    # resume under another.  Identity/absent tables add no key, so
+    # pre-calibration journals stay valid for default objectives.
+    cal = getattr(obj, "calibration", None)
+    if cal is not None and not getattr(cal, "is_identity", True):
+        ident["calibration"] = cal.digest()
     if seed is not None:
         ident["seed"] = int(seed)
     return ident

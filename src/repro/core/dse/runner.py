@@ -273,17 +273,28 @@ def _begin_journal(journal: Optional[SearchJournal], objective, seed: int,
 
 
 class Objective:
-    """Evaluate designs on one (model, trace, phase) under a TDP cap."""
+    """Evaluate designs on one (model, trace, phase) under a TDP cap.
+
+    `calibration` (a `core.calibration.CalibrationTable`, default None
+    = identity) threads measured per-geometry-class GEMM factors into
+    both the scalar and jitted evaluation paths.  The table is fixed
+    for the objective's lifetime (the evaluation cache memoizes by
+    design key alone) and non-identity tables are pinned into journal
+    headers by content hash, so a calibrated search can never silently
+    resume an uncalibrated journal or vice versa.
+    """
 
     n_obj = 2
 
     def __init__(self, dims: ModelDims, trace: Trace, phase: Phase,
                  tdp_limit_w: float = 700.0, batch: Optional[int] = None,
-                 space: Optional[sp.DesignSpace] = None):
+                 space: Optional[sp.DesignSpace] = None,
+                 calibration=None):
         self.space = space if space is not None else sp.SingleDeviceSpace()
         self.dims, self.trace, self.phase = dims, trace, phase
         self.tdp_limit_w = tdp_limit_w
         self.batch = batch
+        self.calibration = calibration
         self.cache: dict = {}
         self.n_evals = 0
 
@@ -298,7 +309,8 @@ class Objective:
             obs.npu = npu
             if npu.tdp_w() <= self.tdp_limit_w:
                 r = evaluate(npu, self.dims, self.trace, self.phase,
-                             batch=self.batch)
+                             batch=self.batch,
+                             calibration=self.calibration)
                 obs.result = r
                 obs.f = (r.throughput_tps, -r.avg_power_w)
         except (sp.InvalidDesign, InfeasibleConfig, ValueError):
@@ -329,7 +341,8 @@ class Objective:
                     run_keys.append(k)
                     run_npus.append(obs.npu)
             results = evaluate_batch(run_npus, self.dims, self.trace,
-                                     self.phase, batch=self.batch)
+                                     self.phase, batch=self.batch,
+                                     calibration=self.calibration)
             for k, r in zip(run_keys, results):
                 if r is not None:
                     self.cache[k].result = r
@@ -373,7 +386,8 @@ class SystemObjective:
                  tdp_limit_w: Optional[float] = None,
                  ttft_cap_s: Optional[float] = 90.0,
                  ttft_objective: bool = False,
-                 space: Optional[sp.SystemSpace] = None):
+                 space: Optional[sp.SystemSpace] = None,
+                 calibration=None):
         self.topology = topology
         self.space = (space if space is not None
                       else sp.SystemSpace.for_topology(topology))
@@ -383,6 +397,10 @@ class SystemObjective:
         self.ttft_objective = ttft_objective
         self.ttft_cap_s = None if ttft_objective else ttft_cap_s
         self.n_obj = 3 if ttft_objective else 2
+        # measured GEMM-factor table (core.calibration); fixed for the
+        # objective's lifetime so the role caches stay coherent, and
+        # pinned by hash into journal headers when non-identity
+        self.calibration = calibration
         self.cache: dict = {}
         self.n_evals = 0
         # one half-name -> PhaseResult|None memo per topology role
@@ -390,7 +408,8 @@ class SystemObjective:
 
     def _score_systems(self, systems: list) -> list:
         return evaluate_system_batch(systems, self.topology, self.dims,
-                                     self.trace, caches=self._role_caches)
+                                     self.trace, caches=self._role_caches,
+                                     calibration=self.calibration)
 
     def _objective_tuple(self, r) -> tuple:
         base = (r.tokens_per_joule, -r.total_power_w)
@@ -443,17 +462,20 @@ class DisaggObjective(SystemObjective):
     def __init__(self, dims: ModelDims, trace: Trace,
                  tdp_limit_w: float = 1400.0,
                  ttft_cap_s: Optional[float] = 90.0,
-                 space: Optional[sp.PairedSpace] = None):
+                 space: Optional[sp.PairedSpace] = None,
+                 calibration=None):
         super().__init__(
             dims, trace, topology=PD_PAIR, tdp_limit_w=tdp_limit_w,
             ttft_cap_s=ttft_cap_s,
-            space=space if space is not None else sp.PairedSpace())
+            space=space if space is not None else sp.PairedSpace(),
+            calibration=calibration)
 
     def _score_systems(self, systems: list) -> list:
         return evaluate_disagg_batch(
             systems, self.dims, self.trace,
             pre_cache=self._role_caches[0],
-            dec_cache=self._role_caches[1])
+            dec_cache=self._role_caches[1],
+            calibration=self.calibration)
 
     @property
     def _pre_results(self) -> dict:    # prefill-half name -> PhaseResult|None

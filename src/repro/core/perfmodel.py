@@ -180,17 +180,32 @@ def class_traffic_bytes(npu: NPUConfig, traffic: LayerTraffic,
 
 
 def _layer_time_and_energy(npu: NPUConfig, traffic: LayerTraffic,
-                           placement: Placement) -> tuple[float, float, str, dict]:
-    """One layer pass: (seconds, joules, bottleneck, breakdown)."""
+                           placement: Placement,
+                           calibration=None) -> tuple[float, float, str, dict]:
+    """One layer pass: (seconds, joules, bottleneck, breakdown).
+
+    `calibration` (core.calibration.CalibrationTable or None) applies
+    measured per-geometry-class efficiency/setup factors to each GEMM's
+    cycle count.  None (and the identity table) reproduces the
+    uncalibrated arithmetic bit-for-bit; the dataflow argmin for
+    attention GEMMs stays uncalibrated by design — per-class factors
+    shift every candidate dataflow equally, so they cannot change the
+    argmin, only its cost.
+    """
     h = npu.hierarchy
     mx_share, vec_share = npu.strategy.bw_split()
 
     # --- compute time ------------------------------------------------------
     # narrow-precision datapaths execute more MACs per PE per cycle
+    def _gemm_seconds(g) -> float:
+        eff, setup = ((1.0, 0.0) if calibration is None
+                      else calibration.factors_for_gemm(g))
+        return gemm_cycles(npu.compute, g.m, g.k, g.n,
+                           _gemm_dataflow(npu, g), count=g.count,
+                           eff_factor=eff, setup_cycles=setup).seconds
+
     t_gemm = sum(
-        gemm_cycles(npu.compute, g.m, g.k, g.n, _gemm_dataflow(npu, g),
-                    count=g.count).seconds
-        for g in traffic.gemms
+        _gemm_seconds(g) for g in traffic.gemms
     ) / npu.quant.matrix_rate_scale
     t_vec = (vector_seconds(npu.compute, traffic.vector_elems)
              / npu.quant.vector_rate_scale)
@@ -302,16 +317,19 @@ def max_prefill_batch(npu: NPUConfig, dims: ModelDims, trace: Trace,
 
 
 def evaluate_prefill(npu: NPUConfig, dims: ModelDims, trace: Trace,
-                     batch: Optional[int] = None) -> PhaseResult:
+                     batch: Optional[int] = None,
+                     calibration=None) -> PhaseResult:
     """Prefill-only throughput at the capacity-maximal batch."""
     S = trace.prompt_tokens
     batch = batch if batch is not None else max_prefill_batch(npu, dims, trace)
     placement = _placement_for(npu, dims, batch, S, S)
     traffic = layer_traffic_cached(dims, Phase.PREFILL, batch, S, npu.quant)
-    t_layer, e_layer, bneck, bd = _layer_time_and_energy(npu, traffic, placement)
+    t_layer, e_layer, bneck, bd = _layer_time_and_energy(
+        npu, traffic, placement, calibration=calibration)
     n_layers = dims.n_layers + dims.n_encoder_layers
     head = lm_head_traffic_cached(dims, batch, 1, npu.quant)
-    t_head, e_head, _, _ = _layer_time_and_energy(npu, head, placement)
+    t_head, e_head, _, _ = _layer_time_and_energy(
+        npu, head, placement, calibration=calibration)
     latency = t_layer * n_layers + t_head
     energy = e_layer * n_layers + e_head
     tokens = float(batch * S)
@@ -349,7 +367,8 @@ def max_decode_batch(npu: NPUConfig, dims: ModelDims, trace: Trace,
 
 def evaluate_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
                     batch: Optional[int] = None,
-                    context_override: Optional[int] = None) -> PhaseResult:
+                    context_override: Optional[int] = None,
+                    calibration=None) -> PhaseResult:
     """Decode-only: max batch under capacity, per-step latency at the
     average context length, sustained TPS and token/J."""
     b = batch if batch is not None else max_decode_batch(npu, dims, trace)
@@ -357,14 +376,17 @@ def evaluate_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
            else trace.prompt_tokens + trace.gen_tokens // 2)
     if dims.family is Family.DLLM:
         return _evaluate_dllm_decode(npu, dims, trace, b,
-                                     context_override=context_override)
+                                     context_override=context_override,
+                                     calibration=calibration)
     placement = _placement_for(npu, dims, b,
                                trace.prompt_tokens + trace.gen_tokens, 1)
     traffic = layer_traffic_cached(dims, Phase.DECODE, b, ctx, npu.quant)
-    t_layer, e_layer, bneck, bd = _layer_time_and_energy(npu, traffic, placement)
+    t_layer, e_layer, bneck, bd = _layer_time_and_energy(
+        npu, traffic, placement, calibration=calibration)
     n_layers = dims.n_layers
     head = lm_head_traffic_cached(dims, b, 1, npu.quant)
-    t_head, e_head, _, _ = _layer_time_and_energy(npu, head, placement)
+    t_head, e_head, _, _ = _layer_time_and_energy(
+        npu, head, placement, calibration=calibration)
     step = t_layer * n_layers + t_head
     energy = e_layer * n_layers + e_head
     tokens = float(b)
@@ -382,8 +404,8 @@ def evaluate_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
 
 def _evaluate_dllm_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
                           batch: int,
-                          context_override: Optional[int] = None
-                          ) -> PhaseResult:
+                          context_override: Optional[int] = None,
+                          calibration=None) -> PhaseResult:
     """Diffusion LM decode (Section 5.4.1): each denoise step processes the
     full sequence; steps per generated token given by the model.
 
@@ -396,7 +418,8 @@ def _evaluate_dllm_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
     seq = context_override if context_override is not None else S
     placement = _placement_for(npu, dims, batch, S, S)
     traffic = layer_traffic_cached(dims, Phase.PREFILL, batch, seq, npu.quant)
-    t_layer, e_layer, bneck, bd = _layer_time_and_energy(npu, traffic, placement)
+    t_layer, e_layer, bneck, bd = _layer_time_and_energy(
+        npu, traffic, placement, calibration=calibration)
     steps = max(1.0, trace.gen_tokens * dims.diffusion_steps_per_token)
     t_step = t_layer * dims.n_layers
     e_step = e_layer * dims.n_layers
@@ -416,25 +439,30 @@ def _evaluate_dllm_decode(npu: NPUConfig, dims: ModelDims, trace: Trace,
 
 def evaluate(npu: NPUConfig, dims: ModelDims, trace: Trace, phase: Phase,
              batch: Optional[int] = None,
-             context_override: Optional[int] = None) -> PhaseResult:
+             context_override: Optional[int] = None,
+             calibration=None) -> PhaseResult:
     if phase is Phase.PREFILL:
         if context_override is not None:
             raise ValueError("context_override applies to DECODE only")
-        return evaluate_prefill(npu, dims, trace, batch=batch)
+        return evaluate_prefill(npu, dims, trace, batch=batch,
+                                calibration=calibration)
     return evaluate_decode(npu, dims, trace, batch=batch,
-                           context_override=context_override)
+                           context_override=context_override,
+                           calibration=calibration)
 
 
 def _evaluate_batch_scalar(npus, dims: ModelDims, trace: Trace,
                            phase: Phase,
                            batch: Optional[int] = None,
-                           context_override: Optional[int] = None) -> list:
+                           context_override: Optional[int] = None,
+                           calibration=None) -> list:
     """Reference oracle: map the scalar `evaluate` over the configs."""
     out = []
     for npu in npus:
         try:
             out.append(evaluate(npu, dims, trace, phase, batch=batch,
-                                context_override=context_override))
+                                context_override=context_override,
+                                calibration=calibration))
         except (InfeasibleConfig, ValueError):   # infeasible et al.
             out.append(None)
     return out
@@ -496,7 +524,7 @@ _BUG_ERRORS = (AttributeError, TypeError, NameError)
 
 
 def _scalar_fallback(npus, dims, trace, phase, batch, context_override,
-                     reason: str) -> list:
+                     reason: str, calibration=None) -> list:
     """Chunked scalar-oracle scoring that cannot die on evaluator
     trouble: unexpected per-chunk exceptions narrow to per-config,
     per-config exceptions and non-finite results become infeasible
@@ -508,7 +536,8 @@ def _scalar_fallback(npus, dims, trace, phase, batch, context_override,
         try:
             results = _evaluate_batch_scalar(chunk, dims, trace, phase,
                                              batch=batch,
-                                             context_override=context_override)
+                                             context_override=context_override,
+                                             calibration=calibration)
         except _BUG_ERRORS:
             raise
         except Exception as exc:       # noqa: BLE001 — degradation path
@@ -517,7 +546,8 @@ def _scalar_fallback(npus, dims, trace, phase, batch, context_override,
                 try:
                     results.extend(_evaluate_batch_scalar(
                         [npu], dims, trace, phase, batch=batch,
-                        context_override=context_override))
+                        context_override=context_override,
+                        calibration=calibration))
                 except _BUG_ERRORS:
                     raise
                 except Exception as exc1:  # noqa: BLE001
@@ -538,7 +568,7 @@ def _scalar_fallback(npus, dims, trace, phase, batch, context_override,
 
 
 def _evaluate_batch_jit_guarded(npus, dims, trace, phase, batch,
-                                context_override) -> list:
+                                context_override, calibration=None) -> list:
     """The jitted fast path behind JIT_RETRY; degrades to the scalar
     oracle per-chunk when the jit path keeps failing, and re-scores
     non-finite jit results through the oracle.  Bug-class exceptions
@@ -551,7 +581,8 @@ def _evaluate_batch_jit_guarded(npus, dims, trace, phase, batch,
         try:
             return perfmodel_jit.evaluate_batch_table(
                 perfmodel_jit.NPUTable.from_configs(npus), dims, trace,
-                phase, batch=batch, context_override=context_override)
+                phase, batch=batch, context_override=context_override,
+                calibration=calibration)
         except _BUG_ERRORS:
             raise
         except Exception as exc:       # noqa: BLE001 — retried/degraded
@@ -563,7 +594,8 @@ def _evaluate_batch_jit_guarded(npus, dims, trace, phase, batch,
         _emit_degradation("jit_fallback", n_designs=len(npus),
                           reason=str(exc))
         return _scalar_fallback(npus, dims, trace, phase, batch,
-                                context_override, reason="jit_fallback")
+                                context_override, reason="jit_fallback",
+                                calibration=calibration)
     bad = [i for i, r in enumerate(results)
            if r is not None and not _result_finite(r)]
     if bad:
@@ -571,7 +603,8 @@ def _evaluate_batch_jit_guarded(npus, dims, trace, phase, batch,
                           reason="non-finite jitted results")
         redo = _scalar_fallback([npus[i] for i in bad], dims, trace, phase,
                                 batch, context_override,
-                                reason="nan_rescore")
+                                reason="nan_rescore",
+                                calibration=calibration)
         for i, r in zip(bad, redo):
             results[i] = r
     return results
@@ -582,7 +615,8 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
                    context_override: Optional[int] = None,
                    keys: Optional[list] = None,
                    cache: Optional[dict] = None,
-                   use_jit: Optional[bool] = None) -> list:
+                   use_jit: Optional[bool] = None,
+                   calibration=None) -> list:
     """Evaluate many NPU configurations on one workload phase.
 
     Structure-of-arrays fast path for DSE candidate pools and Sobol
@@ -613,6 +647,15 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
     without re-evaluation and misses are written back.  The paired
     disaggregated search threads its per-half caches through here so
     repeated prefill/decode halves cost one evaluation each per sweep.
+
+    `calibration` (a `core.calibration.CalibrationTable`, default None
+    = identity) applies measured per-geometry-class GEMM factors on
+    BOTH the jitted and scalar paths, preserving the parity convention.
+    Caller-owned `cache` dicts must be calibration-consistent: results
+    memoize under `keys` alone, so a caller mixing tables must fold the
+    table (e.g. `CalibrationTable.digest()`) into its keys or use
+    separate caches — the `Objective` wrappers hold one table for the
+    life of their private caches, which keeps them coherent.
     """
     if keys is not None and len(keys) != len(npus):
         raise ValueError(f"{len(keys)} keys for {len(npus)} configs")
@@ -630,11 +673,13 @@ def evaluate_batch(npus, dims: ModelDims, trace: Trace, phase: Phase,
         from . import perfmodel_jit
         if use_jit and perfmodel_jit.supports(dims, phase):
             results = _evaluate_batch_jit_guarded(
-                miss, dims, trace, phase, batch, context_override)
+                miss, dims, trace, phase, batch, context_override,
+                calibration=calibration)
         else:
             results = _evaluate_batch_scalar(
                 miss, dims, trace, phase, batch=batch,
-                context_override=context_override)
+                context_override=context_override,
+                calibration=calibration)
     else:
         results = []
     by_idx = dict(zip(miss_idx, results))

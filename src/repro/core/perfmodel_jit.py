@@ -570,7 +570,7 @@ def _build_program(L: int, NB: int, G: int, GH: int):
             return jnp.maximum(1.0, a_m), jnp.maximum(1.0, b_m)
 
         def layer_pass(gm_num, gm_cls, n_gemms, vec_elems, act_extra,
-                       kv_write):
+                       kv_write, cal_eff, cal_set):
             out4 = jnp.zeros(4)
             t_gemm = 0.0
             macs = 0.0
@@ -581,10 +581,19 @@ def _build_program(L: int, NB: int, G: int, GH: int):
                 cyc3, zero = gemm_terms(m, k, n_, count)
                 # dataflow: strategy for weight-bearing GEMMs, best-of-3
                 # for attention-internal ones (argmin = first minimum,
-                # matching min() over _ALL_DATAFLOWS)
+                # matching min() over _ALL_DATAFLOWS).  The argmin runs
+                # on UNCALIBRATED cycles, like the scalar oracle's
+                # `_gemm_dataflow`: per-class factors scale every
+                # candidate dataflow equally.
                 df_g = jnp.where(bcls == 0, d["df_idx"],
                                  jnp.argmin(cyc3).astype(jnp.int32))
-                sec = cyc3[df_g] / (d["clock"] * 1e9)
+                # calibration (cycles * eff + setup); the zero gate
+                # mirrors the scalar early return — a degenerate GEMM
+                # costs nothing, per-pass setup included
+                cyc = jnp.where(zero, 0.0,
+                                cyc3[df_g] * cal_eff[b_idx, g]
+                                + cal_set[b_idx, g])
+                sec = cyc / (d["clock"] * 1e9)
                 t_gemm = t_gemm + sec
                 macs = macs + m * k * n_ * count
                 a_b = bytes4[acls]
@@ -674,10 +683,12 @@ def _build_program(L: int, NB: int, G: int, GH: int):
 
         t_layer, e_layer, bneck, bd = layer_pass(
             t["gm_num"], t["gm_cls"], G, t["vec_el"][b_idx],
-            d["actx"][b_idx], d["kvw"][b_idx])
+            d["actx"][b_idx], d["kvw"][b_idx],
+            t["cal_gm_eff"], t["cal_gm_set"])
         t_head, e_head, _, _ = layer_pass(
             t["hd_num"], t["hd_cls"], GH, t["vec_h"][b_idx],
-            d["actx_h"][b_idx], 0.0)
+            d["actx_h"][b_idx], 0.0,
+            t["cal_hd_eff"], t["cal_hd_set"])
 
         # `steps` (denoise passes per request) multiplies the layer term
         # AFTER the n_mult product — the scalar's (t_layer * n_layers)
@@ -736,20 +747,35 @@ def _design_pytree(table: NPUTable) -> dict:
 def evaluate_batch_arrays(table: NPUTable, dims: ModelDims, trace: Trace,
                           phase: Phase,
                           batch: Optional[int] = None,
-                          context_override: Optional[int] = None) -> dict:
+                          context_override: Optional[int] = None,
+                          calibration=None) -> dict:
     """Score every design in `table` on (dims, trace, phase) in one
     jitted call.  Returns numpy arrays keyed like PhaseResult fields
     plus `feasible` (bool mask) and the mem-breakdown terms.
 
     Runs in float64 under `jax.experimental.enable_x64` regardless of
     the session default, so results track the scalar oracle.
+
+    `calibration` (core.calibration.CalibrationTable, default None =
+    identity) enters as per-batch-choice, per-GEMM (efficiency, setup)
+    arrays gathered numpy-side and indexed by the dynamic batch choice
+    inside the program — the table's values are runtime data, so
+    switching tables never recompiles, and the identity arrays
+    reproduce the uncalibrated arithmetic bit-for-bit.
     """
+    from .calibration import calibration_arrays
     t = _phase_tables(dims, trace, phase, batch, table.quants,
                       context_override)
     prog = _build_program(table.n_slots, len(t["choices"]),
                           t["gm_num"].shape[1], t["hd_num"].shape[1])
     tables = {k: t[k] for k in ("choices", "gm_num", "gm_cls", "vec_el",
                                 "hd_num", "hd_cls", "vec_h")}
+    (tables["cal_gm_eff"],
+     tables["cal_gm_set"]) = calibration_arrays(calibration, t["gm_num"],
+                                                t["gm_cls"])
+    (tables["cal_hd_eff"],
+     tables["cal_hd_set"]) = calibration_arrays(calibration, t["hd_num"],
+                                                t["hd_cls"])
     d = _design_pytree(table)
     uq = table.quant_idx
     d["need"] = t["need"][uq]           # [n, NB]
@@ -827,11 +853,13 @@ def supports(dims: ModelDims, phase: Phase) -> bool:
 def evaluate_batch_table(table: NPUTable, dims: ModelDims, trace: Trace,
                          phase: Phase,
                          batch: Optional[int] = None,
-                         context_override: Optional[int] = None) -> list:
+                         context_override: Optional[int] = None,
+                         calibration=None) -> list:
     """`evaluate_batch_arrays` + PhaseResult materialization."""
     if table.n == 0:
         return []
     return results_from_arrays(
         evaluate_batch_arrays(table, dims, trace, phase, batch=batch,
-                              context_override=context_override),
+                              context_override=context_override,
+                              calibration=calibration),
         phase)

@@ -1,0 +1,395 @@
+"""Kernel calibration: table semantics, identity bit-exactness, and
+the threaded scalar/jit/search paths.
+
+The load-bearing contract (calibration.py module docstring): the
+identity table — and ``calibration=None`` everywhere — must be
+*bit-identical* to the pre-calibration model (``x * 1.0 + 0.0 == x``
+for the non-negative cycle counts involved), so jit-vs-scalar parity
+and the sha-pinned seeded trajectories survive unchanged; a fitted
+non-identity table must measurably move predictions through both the
+scalar oracle and the jitted batch path, identically.
+"""
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import QWEN3_32B
+from repro.core import baseline_npu, d1_npu, p1_npu
+from repro.core import perfmodel_jit as pj
+from repro.core.calibration import (MX_QUANT_CLASS, NARROW_M, CalSample,
+                                    CalibrationTable, fit_table,
+                                    geometry_class, geometry_class_of_gemm,
+                                    measure_matmul, trace_geometry_classes)
+from repro.core.compute import ComputeConfig
+from repro.core.dse import Objective, run_random, shared_init
+from repro.core.dse import space as sp
+from repro.core.dse.journal import objective_identity
+from repro.core.perfmodel import evaluate
+from repro.core.workload import (CLASS_CODES, OSWORLD_LIBREOFFICE,
+                                 DataClass, Phase, layer_traffic)
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+RTOL = 1e-5
+FIELDS = ("latency_s", "tokens", "throughput_tps", "avg_power_w",
+          "energy_per_token_j", "compute_time_s", "memory_time_s")
+
+_W = CLASS_CODES[DataClass.WEIGHT]
+_A = CLASS_CODES[DataClass.ACT]
+_K = CLASS_CODES[DataClass.KV]
+_S = CLASS_CODES[DataClass.SCRATCH]
+
+
+def _emitted_classes():
+    return set(trace_geometry_classes(QWEN3_32B, OSWORLD_LIBREOFFICE,
+                                      p1_npu().quant))
+
+
+def _slow_table(eff=2.0, setup=0.0):
+    """A non-identity table covering every class the bundled trace
+    emits (plus the ones it doesn't, harmlessly)."""
+    names = _emitted_classes() | {
+        "actgemm/narrow", "actgemm/wide", MX_QUANT_CLASS}
+    return CalibrationTable.from_factors(
+        {name: (eff, setup) for name in sorted(names)}, source="test")
+
+
+# ---------------------------------------------------------------------------
+# Geometry classes
+# ---------------------------------------------------------------------------
+
+def test_geometry_class_roles_and_buckets():
+    assert geometry_class(1, 128, 128, b_code=_W) == "wgemm/narrow"
+    assert geometry_class(NARROW_M, 128, 128, b_code=_W) == "wgemm/wide"
+    assert geometry_class(8, 64, 512, a_code=_A, b_code=_K,
+                          out_code=_S) == "attn_qk/narrow"
+    assert geometry_class(256, 512, 64, a_code=_S, b_code=_K,
+                          out_code=_A) == "attn_pv/wide"
+    assert geometry_class(8, 64, 64, a_code=_A, b_code=_A,
+                          out_code=_A) == "actgemm/narrow"
+
+
+def test_bundled_trace_gemms_classify():
+    """Every GEMM the workload model emits lands in a named class, and
+    prefill/decode produce the expected wide/narrow attention split."""
+    quant = p1_npu().quant
+    pre = layer_traffic(QWEN3_32B, Phase.PREFILL, 1, 2048, quant)
+    dec = layer_traffic(QWEN3_32B, Phase.DECODE, 4, 2048, quant)
+    pre_classes = {geometry_class_of_gemm(g) for g in pre.gemms}
+    dec_classes = {geometry_class_of_gemm(g) for g in dec.gemms}
+    assert {"attn_qk/wide", "attn_pv/wide", "wgemm/wide"} <= pre_classes
+    assert {"attn_qk/narrow", "attn_pv/narrow",
+            "wgemm/narrow"} <= dec_classes
+
+
+# ---------------------------------------------------------------------------
+# Table construction, serialization, digests
+# ---------------------------------------------------------------------------
+
+def test_table_validation():
+    with pytest.raises(ValueError):
+        CalibrationTable(entries=(("wgemm/wide", 0.5, 0.0),))
+    with pytest.raises(ValueError):
+        CalibrationTable(entries=(("wgemm/wide", 2.0, -1.0),))
+    with pytest.raises(ValueError):
+        CalibrationTable(entries=(("wgemm/wide", float("nan"), 0.0),))
+    with pytest.raises(ValueError):
+        CalibrationTable(entries=(("a", 2.0, 0.0), ("a", 3.0, 0.0)))
+    t = CalibrationTable.from_factors(
+        {"wgemm/wide": (2.0, 10.0)}, source="test")
+    assert not t.is_identity
+    assert t.factors_for("wgemm/wide") == (2.0, 10.0)
+    assert t.factors_for("never/measured") == (1.0, 0.0)
+    assert CalibrationTable.identity().is_identity
+
+
+def test_json_round_trip_and_digest():
+    t = CalibrationTable.from_factors(
+        {"attn_qk/wide": (3.25, 128.0), "wgemm/narrow": (1.5, 0.0)},
+        source="fit")
+    text = t.to_json()
+    # canonical: sorted keys, byte-stable
+    assert text == json.dumps(json.loads(text), sort_keys=True)
+    back = CalibrationTable.from_json(text)
+    assert back == t
+    assert back.digest() == t.digest()
+    assert t.digest() != CalibrationTable.identity().digest()
+
+
+# ---------------------------------------------------------------------------
+# Fit: recovery, clamping, residuals
+# ---------------------------------------------------------------------------
+
+def test_fit_recovers_affine_factors():
+    x = np.array([1e6, 2e6, 4e6, 8e6])
+    samples = [CalSample("wgemm/wide", xi, 3.0 * xi + 1e4) for xi in x]
+    table, report = fit_table(samples)
+    eff, setup = table.factors_for("wgemm/wide")
+    assert eff == pytest.approx(3.0, rel=1e-9)
+    assert setup == pytest.approx(1e4, rel=1e-6)
+    assert report["fit_err"] == pytest.approx(0.0, abs=1e-9)
+    assert report["classes"]["wgemm/wide"]["n_samples"] == 4
+
+
+def test_fit_clamps_below_model_to_identity():
+    # measured below the analytical lower bound is noise, not speedup
+    samples = [CalSample("wgemm/wide", xi, 0.5 * xi)
+               for xi in (1e6, 2e6, 4e6)]
+    table, _ = fit_table(samples)
+    assert table.factors_for("wgemm/wide") == (1.0, 0.0)
+
+
+def test_fit_negative_intercept_refits_through_origin():
+    # slope-heavy data whose unconstrained fit has a negative intercept
+    x = np.array([1e6, 2e6, 4e6])
+    y = np.array([1.9e6, 4.1e6, 8.4e6])      # ~2.1x, intercept < 0
+    samples = [CalSample("attn_qk/wide", xi, yi) for xi, yi in zip(x, y)]
+    table, report = fit_table(samples)
+    eff, setup = table.factors_for("attn_qk/wide")
+    assert setup == 0.0
+    assert eff == pytest.approx(float(np.sum(x * y) / np.sum(x * x)))
+    assert report["fit_err"] < 0.05
+
+
+def test_fit_single_sample_is_pure_ratio():
+    table, _ = fit_table([CalSample("mx_quant", 2e6, 7e6)])
+    assert table.factors_for("mx_quant") == (3.5, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Identity is bit-exact; non-identity slows things down monotonically
+# ---------------------------------------------------------------------------
+
+def test_identity_table_bit_identical_to_uncalibrated():
+    ident = CalibrationTable.identity()
+    for npu in (p1_npu(), d1_npu(), baseline_npu()):
+        for phase in (Phase.PREFILL, Phase.DECODE):
+            r0 = evaluate(npu, QWEN3_32B, OSWORLD_LIBREOFFICE, phase)
+            r1 = evaluate(npu, QWEN3_32B, OSWORLD_LIBREOFFICE, phase,
+                          calibration=ident)
+            for f in FIELDS:
+                assert getattr(r1, f) == getattr(r0, f), \
+                    f"{f} @ {npu.name}/{phase.name}"
+            assert r1.batch == r0.batch and r1.bottleneck == r0.bottleneck
+
+
+def test_nonidentity_table_slows_monotonically():
+    slow = _slow_table(eff=3.0, setup=5e4)
+    for npu in (p1_npu(), d1_npu()):
+        for phase in (Phase.PREFILL, Phase.DECODE):
+            r0 = evaluate(npu, QWEN3_32B, OSWORLD_LIBREOFFICE, phase,
+                          batch=1)
+            r1 = evaluate(npu, QWEN3_32B, OSWORLD_LIBREOFFICE, phase,
+                          batch=1, calibration=slow)
+            label = f"{npu.name}/{phase.name}"
+            assert r1.compute_time_s > r0.compute_time_s, label
+            assert r1.latency_s >= r0.latency_s, label
+
+
+# ---------------------------------------------------------------------------
+# Jit path: calibrated batch evaluation matches the calibrated oracle
+# ---------------------------------------------------------------------------
+
+def _valid_designs(seed, n):
+    rng = np.random.default_rng(seed)
+    xs = sp.random_designs(rng, 4 * n)
+    xs = xs[sp.valid_mask(xs)]
+    assert len(xs) >= n
+    return xs[:n]
+
+
+@pytest.mark.parametrize("phase", [Phase.PREFILL, Phase.DECODE],
+                         ids=lambda p: p.value)
+def test_calibrated_jit_matches_calibrated_scalar(phase):
+    slow = _slow_table(eff=2.5, setup=1e4)
+    xs = _valid_designs(7, 24)
+    table = sp.decode_batch(xs)
+    npus = [sp.decode(x) for x in xs]
+    got = pj.evaluate_batch_table(table, QWEN3_32B, OSWORLD_LIBREOFFICE,
+                                  phase, calibration=slow)
+    n_feasible = 0
+    for x, npu, g in zip(xs, npus, got):
+        try:
+            want = evaluate(npu, QWEN3_32B, OSWORLD_LIBREOFFICE, phase,
+                            calibration=slow)
+        except Exception:
+            want = None
+        assert (want is None) == (g is None), f"feasibility @ {list(x)}"
+        if want is None:
+            continue
+        n_feasible += 1
+        assert g.batch == want.batch
+        for f in FIELDS:
+            assert getattr(g, f) == pytest.approx(
+                getattr(want, f), rel=RTOL), f"{f} @ {list(x)}"
+    assert n_feasible >= 5
+
+
+def test_identity_jit_batch_bit_identical():
+    """Identity calibration arrays leave the jitted program's output
+    bit-identical to the uncalibrated call (same compiled fn, identity
+    multiplies)."""
+    xs = _valid_designs(3, 12)
+    table = sp.decode_batch(xs)
+    r0 = pj.evaluate_batch_table(table, QWEN3_32B, OSWORLD_LIBREOFFICE,
+                                 Phase.DECODE)
+    r1 = pj.evaluate_batch_table(table, QWEN3_32B, OSWORLD_LIBREOFFICE,
+                                 Phase.DECODE,
+                                 calibration=CalibrationTable.identity())
+    for a, b in zip(r0, r1):
+        assert (a is None) == (b is None)
+        if a is None:
+            continue
+        for f in FIELDS:
+            assert getattr(b, f) == getattr(a, f), f
+
+
+# ---------------------------------------------------------------------------
+# Search integration: trajectories, caches, journal identity
+# ---------------------------------------------------------------------------
+
+def test_identity_calibration_leaves_trajectory_byte_identical():
+    """An Objective with the identity table replays the exact seeded
+    trajectory of an uncalibrated Objective — the guarantee that keeps
+    every sha-pinned search result valid by construction."""
+    runs = []
+    for cal in (None, CalibrationTable.identity()):
+        obj = Objective(QWEN3_32B, OSWORLD_LIBREOFFICE, Phase.DECODE,
+                        tdp_limit_w=700.0, calibration=cal)
+        init = shared_init(obj, 6, seed=2)
+        res = run_random(obj, n_total=14, seed=2, init=list(init))
+        runs.append(json.dumps([[o.x, o.f] for o in res.observations]))
+    assert runs[0] == runs[1]
+
+
+def test_calibrated_search_shifts_objective_values():
+    slow = _slow_table(eff=4.0, setup=1e5)
+    fs = {}
+    for name, cal in (("base", None), ("cal", slow)):
+        obj = Objective(QWEN3_32B, OSWORLD_LIBREOFFICE, Phase.DECODE,
+                        tdp_limit_w=700.0, calibration=cal)
+        obs = shared_init(obj, 8, seed=5)
+        fs[name] = [o.f for o in obs]
+    # same designs, same feasibility pattern, different objective values
+    assert [f is None for f in fs["base"]] == \
+        [f is None for f in fs["cal"]]
+    pairs = [(b, c) for b, c in zip(fs["base"], fs["cal"])
+             if b is not None]
+    assert pairs and any(b != c for b, c in pairs)
+
+
+def test_journal_identity_pins_nonidentity_tables_only():
+    slow = _slow_table()
+    base = Objective(QWEN3_32B, OSWORLD_LIBREOFFICE, Phase.DECODE)
+    ident = objective_identity(base, seed=0)
+    assert "calibration" not in ident
+    base.calibration = CalibrationTable.identity()
+    assert "calibration" not in objective_identity(base, seed=0)
+    cal_obj = Objective(QWEN3_32B, OSWORLD_LIBREOFFICE, Phase.DECODE,
+                        calibration=slow)
+    pinned = objective_identity(cal_obj, seed=0)
+    assert pinned["calibration"] == slow.digest()
+    # everything else in the identity is unchanged
+    pinned.pop("calibration")
+    assert pinned == ident
+
+
+# ---------------------------------------------------------------------------
+# Measurement harness (tiny smoke: jitted matmul proxy only)
+# ---------------------------------------------------------------------------
+
+def test_measure_matmul_smoke():
+    samples = measure_matmul(ComputeConfig(), shapes=((8, 128), (8, 256)),
+                             repeat=1, seed=0)
+    assert [s.class_name for s in samples] == ["wgemm/narrow"] * 2
+    assert all(s.model_cycles > 0 and s.measured_cycles > 0
+               for s in samples)
+    table, report = fit_table(samples)
+    eff, setup = table.factors_for("wgemm/narrow")
+    assert eff >= 1.0 and setup >= 0.0
+    assert np.isfinite(report["fit_err"])
+
+
+# ---------------------------------------------------------------------------
+# Lint + the bench --check gate
+# ---------------------------------------------------------------------------
+
+def test_new_modules_lint_clean():
+    from repro.analysis import lint_paths
+    result = lint_paths(["src/repro/core/calibration.py",
+                         "benchmarks/bench_calibration.py"],
+                        root=str(REPO_ROOT))
+    assert result.ok, "\n".join(
+        f.format() for f in result.errors + result.findings)
+
+
+def test_timed_gc_discipline():
+    """`timed` must drain cyclic GC before the clock starts, keep it
+    off inside the measured region (a gen-2 pass over the process's
+    accumulated heap lands as a 15-30x spike on sub-ms regions — the
+    exact flake that made cheap `--check` method timings allocation-
+    phase-dependent), and restore the caller's GC state — including
+    when the timed fn raises, and when `timed` calls nest."""
+    root = str(REPO_ROOT)
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    import gc
+
+    from benchmarks.common import timed
+
+    assert gc.isenabled()
+    seen = []
+    out, us = timed(lambda: seen.append(gc.isenabled()) or 7)
+    assert out == 7 and us >= 0.0
+    assert seen == [False] and gc.isenabled()
+    # nested: the inner call must not re-enable GC mid-region
+    def outer():
+        timed(lambda: None)
+        return gc.isenabled()
+    assert timed(outer)[0] is False and gc.isenabled()
+    # a raising fn must not leave GC off
+    with pytest.raises(RuntimeError):
+        timed(lambda: (_ for _ in ()).throw(RuntimeError("boom")).x)
+    assert gc.isenabled()
+    # a caller that runs with GC off keeps it off
+    gc.disable()
+    try:
+        timed(lambda: None)
+        assert not gc.isenabled()
+    finally:
+        gc.enable()
+
+
+def test_bench_check_compare_calibration():
+    """The `calibration` gate: fit-error ceiling, shift-must-move,
+    timing limit, missing-entry regression (conventions shared with
+    the other compare_* gates)."""
+    root = str(REPO_ROOT)
+    if root not in sys.path:
+        sys.path.insert(0, root)
+    from benchmarks.run import CAL_FIT_ERR_CEILING, compare_calibration
+
+    def entry(**kw):
+        e = {"fit_err": 0.5, "shift": 10.0, "us_per_run": 4e6}
+        e.update(kw)
+        return {"calibration": e}
+
+    base = entry()
+    ok = compare_calibration(base, entry(us_per_run=5e6), 5.0)
+    assert ok[-1] and ok[1] == CAL_FIT_ERR_CEILING
+    # fit error over the ceiling -> regression
+    assert not compare_calibration(
+        base, entry(fit_err=CAL_FIT_ERR_CEILING + 0.01), 5.0)[-1]
+    # a table that moves nothing -> threading regression
+    assert not compare_calibration(base, entry(shift=0.0), 5.0)[-1]
+    assert not compare_calibration(base, entry(shift=None), 5.0)[-1]
+    # timing blow-up -> regression
+    assert not compare_calibration(base, entry(us_per_run=21e6), 5.0)[-1]
+    # pre-calibration baselines skip the gate; missing fresh regresses
+    assert compare_calibration({"methods": {}}, {}, 5.0) is None
+    missing = compare_calibration(base, {}, 5.0)
+    assert missing[-2] < 0 and not missing[-1]
